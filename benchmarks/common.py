@@ -1,0 +1,47 @@
+"""Shared helpers for the benchmark harness.
+
+CPU-scale note: the paper runs 10^6-entry datasets against 40k query
+segments on a Tesla C2075; this container is a single CPU core, so every
+benchmark takes a ``scale`` knob (default small) and reports the same
+*quantities* the paper's tables/figures report — absolute times are
+CPU-path times of the same code that the dry-run lowers for TPU.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import batching
+from repro.core.engine import DistanceThresholdEngine
+from repro.data import trajgen
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    out = None
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def scenario_engine(name: str, scale: float, num_bins: int = 1000):
+    db, queries, d = trajgen.make_scenario(name, scale=scale)
+    eng = DistanceThresholdEngine(db, num_bins=num_bins)
+    return eng, queries, d
+
+
+ALGORITHMS_WITH_PARAMS = {
+    "periodic": lambda idx, q, s: batching.periodic(idx, q, s),
+    "setsplit-fixed": lambda idx, q, s: batching.setsplit_fixed(
+        idx, q, max(len(q) // max(s, 1), 1)),
+    "setsplit-max": lambda idx, q, s: batching.setsplit_max(idx, q, 2 * s),
+    "setsplit-minmax": lambda idx, q, s: batching.setsplit_minmax(
+        idx, q, max(s // 2, 1), 2 * s),
+    "greedysetsplit-min": lambda idx, q, s: batching.greedysetsplit_min(
+        idx, q, s),
+    "greedysetsplit-max": lambda idx, q, s: batching.greedysetsplit_max(
+        idx, q, 2 * s),
+}

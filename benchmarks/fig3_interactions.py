@@ -1,0 +1,36 @@
+"""Fig. 3: interactions per query segment vs. PERIODIC batch size.
+
+Paper's finding: growth is almost perfectly linear in s (every extra query
+in a batch widens the batch extent and drags in ~proportionally more
+wasteful candidates).
+"""
+from __future__ import annotations
+
+from benchmarks.common import scenario_engine
+from repro.core import batching
+
+
+def run(scale: float = 0.02, scenario: str = "S1",
+        sizes=(1, 2, 5, 10, 20, 40, 80, 160)) -> list[dict]:
+    eng, queries, d = scenario_engine(scenario, scale)
+    rows = []
+    for s in sizes:
+        plan = batching.periodic(eng.index, queries, s)
+        rows.append({
+            "bench": "fig3", "s": s,
+            "interactions_per_query": plan.total_interactions / len(queries),
+            "num_batches": plan.num_batches,
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    base = rows[0]["interactions_per_query"]
+    for r in rows:
+        print(f"fig3,s={r['s']},ints_per_query={r['interactions_per_query']:.0f},"
+              f"x_base={r['interactions_per_query'] / base:.2f}")
+
+
+if __name__ == "__main__":
+    main()

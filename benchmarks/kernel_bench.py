@@ -1,0 +1,62 @@
+"""§5 kernel microbenchmark: interaction-tile throughput vs tile shape.
+
+Sweeps (candidates × queries) shapes through the jnp path (CPU-executable)
+and the Pallas kernel in interpret mode (semantics check at speed-
+irrelevant scale); reports interactions/second and µs/call.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import timed
+from repro.kernels import ops
+
+
+def _random_packed(rng, n):
+    ts = rng.uniform(0, 50, n).astype(np.float32)
+    out = np.zeros((n, 8), np.float32)
+    out[:, 0:3] = rng.uniform(0, 30, (n, 3))
+    out[:, 3:6] = out[:, 0:3] + rng.normal(0, 2, (n, 3))
+    out[:, 6] = ts
+    out[:, 7] = ts + rng.uniform(0.1, 3, n)
+    return out
+
+
+def run(shapes=((1024, 64), (4096, 64), (4096, 256), (16384, 128)),
+        repeats: int = 3) -> list[dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+    for c, q in shapes:
+        e = _random_packed(rng, c)
+        qq = _random_packed(rng, q)
+        d = np.float32(3.0)
+        ops.count_hits(e, qq, d, use_pallas=False).block_until_ready()
+        _, sec = timed(lambda: ops.count_hits(e, qq, d, use_pallas=False)
+                       .block_until_ready(), repeats=repeats)
+        rows.append({"bench": "kernel", "impl": "jnp", "c": c, "q": q,
+                     "us_per_call": sec * 1e6,
+                     "interactions_per_s": c * q / sec})
+    # Pallas interpret-mode parity point (small shape)
+    c, q = 512, 64
+    e, qq = _random_packed(rng, c), _random_packed(rng, q)
+    d = np.float32(3.0)
+    ops.count_hits(e, qq, d, use_pallas=True, cand_blk=128,
+                   qry_blk=64).block_until_ready()
+    _, sec = timed(lambda: ops.count_hits(e, qq, d, use_pallas=True,
+                                          cand_blk=128, qry_blk=64)
+                   .block_until_ready(), repeats=1)
+    rows.append({"bench": "kernel", "impl": "pallas-interpret", "c": c,
+                 "q": q, "us_per_call": sec * 1e6,
+                 "interactions_per_s": c * q / sec})
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"kernel,{r['impl']},c={r['c']},q={r['q']},"
+              f"us_per_call={r['us_per_call']:.0f},"
+              f"Minter_per_s={r['interactions_per_s'] / 1e6:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Aggregate dry-run cell records into the §Roofline table.
+
+Reads the JSON records produced by ``repro.launch.dryrun --all`` and emits
+the per-(arch × shape × mesh) roofline table as CSV/markdown: the three
+terms in seconds, dominant bottleneck, MODEL_FLOPS/HLO_FLOPs ratio, and
+per-device memory.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def load(results_dir: str = DEFAULT_DIR) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def run(results_dir: str = DEFAULT_DIR) -> list[dict]:
+    rows = []
+    for rec in load(results_dir):
+        if rec.get("status") != "ok":
+            rows.append({"bench": "roofline", "arch": rec["arch"],
+                         "shape": rec["shape"], "mesh": rec.get("mesh"),
+                         "status": rec.get("status"),
+                         "reason": rec.get("reason", rec.get("error", ""))})
+            continue
+        rf = rec["roofline"]
+        rows.append({
+            "bench": "roofline", "arch": rec["arch"], "shape": rec["shape"],
+            "mesh": rec["mesh"], "status": "ok",
+            "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
+            "collective_s": rf["collective_s"],
+            "bottleneck": rf["bottleneck"],
+            "useful_flops_ratio": rf["useful_flops_ratio"],
+            "peak_gb_per_device": rec["memory"]["peak_estimate_bytes"] / 2**30,
+            "compile_s": rec.get("compile_s"),
+        })
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "bottleneck | MODEL/HLO | GB/dev |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh','')} "
+                         f"| — | — | — | SKIP | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | {r['bottleneck']} "
+            f"| {r['useful_flops_ratio']:.3f} "
+            f"| {r['peak_gb_per_device']:.1f} |")
+    return "\n".join(lines)
+
+
+def main():
+    rows = run()
+    ok = [r for r in rows if r["status"] == "ok"]
+    for r in rows:
+        if r["status"] == "ok":
+            print(f"roofline,{r['arch']},{r['shape']},{r['mesh']},"
+                  f"compute={r['compute_s']:.3f},memory={r['memory_s']:.3f},"
+                  f"collective={r['collective_s']:.3f},"
+                  f"bottleneck={r['bottleneck']},"
+                  f"useful={r['useful_flops_ratio']:.3f}")
+        else:
+            print(f"roofline,{r['arch']},{r['shape']},{r.get('mesh','')},"
+                  f"status={r['status']}")
+    if ok:
+        bn = {}
+        for r in ok:
+            bn[r["bottleneck"]] = bn.get(r["bottleneck"], 0) + 1
+        print(f"roofline,summary,cells={len(ok)},bottlenecks={bn}")
+
+
+if __name__ == "__main__":
+    main()

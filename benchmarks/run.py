@@ -1,0 +1,52 @@
+"""Benchmark aggregator: one harness per paper table/figure.
+
+Prints one CSV block per benchmark.  Run as::
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+``--full`` uses larger dataset scales (minutes on CPU); the default keeps
+each benchmark to seconds so CI can execute the whole harness.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (fig3_interactions, kernel_bench, roofline_report,
+                            speedup_vs_rtree, table2_batching,
+                            table3_perfmodel)
+    benches = {
+        "fig3": lambda: fig3_interactions.main(),
+        "table2": lambda: table2_batching.main(),
+        "speedup": lambda: speedup_vs_rtree.main(),
+        "table3": lambda: table3_perfmodel.main(),
+        "kernel": lambda: kernel_bench.main(),
+        "roofline": lambda: roofline_report.main(),
+    }
+    only = set(args.only.split(",")) if args.only else None
+    failures = 0
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        print(f"# === {name} ===", flush=True)
+        t0 = time.perf_counter()
+        try:
+            fn()
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+        print(f"# {name} done in {time.perf_counter() - t0:.1f}s", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

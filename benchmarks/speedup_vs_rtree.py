@@ -1,0 +1,46 @@
+"""§7.3–7.4 (Figs. 5–6): engine vs the R-tree search-and-refine baseline.
+
+Paper: GPU engine is 15.2× over sequential R-tree and 3.3× over 6-thread
+OpenMP for S2.  Here both run on the same CPU, so the quantity of interest
+is the *relative* ordering and the r (segments/MBB) sweep of Fig. 5.
+"""
+from __future__ import annotations
+
+from benchmarks.common import scenario_engine, timed
+from repro.core import batching
+from repro.core.rtree import RTreeEngine
+
+
+def run(scale: float = 0.01, scenario: str = "S2",
+        r_values=(4, 12, 32), threads: int = 4) -> list[dict]:
+    eng, queries, d = scenario_engine(scenario, scale)
+    rows = []
+    plan = batching.periodic(eng.index, queries, 48)
+    eng.execute(queries, d, plan)                      # warm jit
+    (_, stats), engine_s = timed(eng.execute, queries, d, plan)
+    rows.append({"bench": "speedup", "impl": "engine-periodic48",
+                 "seconds": stats.total_seconds, "r": None,
+                 "hits": stats.total_hits})
+    for r in r_values:
+        rt = RTreeEngine(eng.db, r=r)
+        rs, seq_s = timed(rt.query, queries, d)
+        rows.append({"bench": "speedup", "impl": "rtree-seq",
+                     "seconds": seq_s, "r": r, "hits": len(rs)})
+    rt = RTreeEngine(eng.db, r=12)
+    rs, par_s = timed(rt.query_parallel, queries, d, threads)
+    rows.append({"bench": "speedup", "impl": f"rtree-par{threads}",
+                 "seconds": par_s, "r": 12, "hits": len(rs)})
+    return rows
+
+
+def main():
+    rows = run()
+    eng_s = rows[0]["seconds"]
+    for r in rows:
+        sp = r["seconds"] / eng_s
+        print(f"speedup,{r['impl']},r={r['r']},seconds={r['seconds']:.3f},"
+              f"x_vs_engine={sp:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Batch-size tuning with the §8 response-time performance model.
+
+Demonstrates the paper's headline workflow: benchmark the platform once
+(T1/T2/T3 device curves + host fits), estimate α per temporal epoch for
+the dataset, then let the model pick a PERIODIC batch size — and compare
+against the measured optimum.
+
+Run:  PYTHONPATH=src python examples/batch_tuning.py
+"""
+from repro.core import DistanceThresholdEngine, periodic
+from repro.core.perfmodel import (ResponseTimeModel, benchmark_device_curves,
+                                  benchmark_host_curves)
+from repro.data import trajgen
+
+db, queries, d = trajgen.make_scenario("S5", scale=0.01)
+engine = DistanceThresholdEngine(db, num_bins=1000)
+
+print("benchmarking device curves (T1/T2/T3 per interaction class) ...")
+device = benchmark_device_curves(c_values=(256, 1024, 4096),
+                                 q_values=(16, 64, 256), repeats=2)
+print(f"  dispatch overhead Θ = {device.theta * 1e6:.0f} µs")
+
+print("fitting host curves (invocation overhead + transfer) ...")
+host = benchmark_host_curves(engine, queries, s_values=(16, 48, 128))
+print(f"  T1_host(s) = {host.coef_a:.4f} · s^{host.coef_b:.2f}")
+
+model = ResponseTimeModel(device, host, num_epochs=20)
+candidates = (16, 32, 48, 64, 96, 128)
+s_model, preds = model.pick_batch_size(engine, queries, d,
+                                       candidates=candidates)
+print(f"model picks s = {s_model}")
+for p in preds:
+    print(f"  s={p['s']:4d}  predicted {p['total_seconds'] * 1e3:8.1f} ms "
+          f"({p['num_batches']} batches, ~{p['predicted_hits']:.0f} hits)")
+
+print("measuring actual response times ...")
+actual = {}
+for s in candidates:
+    plan = periodic(engine.index, queries, s)
+    engine.execute(queries, d, plan)          # warm the jit cache
+    _, stats = engine.execute(queries, d, plan)
+    actual[s] = stats.total_seconds
+    print(f"  s={s:4d}  measured {actual[s] * 1e3:8.1f} ms")
+s_best = min(actual, key=actual.get)
+print(f"actual best s = {s_best}; model slowdown = "
+      f"{100 * (actual[s_model] / actual[s_best] - 1):.1f}% "
+      f"(paper Table 3: 0.1–6.3%)")

@@ -1,0 +1,24 @@
+"""End-to-end LM training driver demo: train a reduced granite-3-2b for a
+few hundred steps on the synthetic token pipeline, with checkpointing, a
+simulated preemption, and bit-exact resume.
+
+Run:  PYTHONPATH=src python examples/train_lm.py
+"""
+import shutil
+import tempfile
+
+from repro.launch import train
+
+ckpt_dir = tempfile.mkdtemp(prefix="repro_ckpt_")
+common = ["--arch", "granite-3-2b", "--reduced", "--batch", "8",
+          "--seq", "64", "--ckpt-dir", ckpt_dir, "--ckpt-every", "50",
+          "--log-every", "25", "--microbatches", "2"]
+try:
+    print("=== phase 1: train to step 100 (simulated preemption) ===")
+    train.main(common + ["--steps", "100"])
+    print("=== phase 2: relaunch — resumes from the checkpoint, "
+          "continues to 200 ===")
+    train.main(common + ["--steps", "200"])
+finally:
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+print("done: loss curve is continuous across the restart.")

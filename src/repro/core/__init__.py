@@ -1,0 +1,10 @@
+"""The paper's primary contribution: in-memory distance-threshold query
+processing with a GPU/TPU-friendly temporal-bin index (no index trees on
+the hot path), batched query execution, and batch-generation algorithms."""
+from repro.core.segments import SegmentArray, pad_count  # noqa: F401
+from repro.core.index import TemporalBinIndex, DEFAULT_NUM_BINS  # noqa: F401
+from repro.core.batching import (  # noqa: F401
+    ALGORITHMS, BatchPlan, QueryBatch, greedysetsplit_max, greedysetsplit_min,
+    periodic, setsplit_fixed, setsplit_max, setsplit_minmax)
+from repro.core.engine import (  # noqa: F401
+    DistanceThresholdEngine, ExecStats, ResultSet, brute_force)

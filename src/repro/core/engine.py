@@ -1,0 +1,215 @@
+"""End-to-end distance-threshold query engine (paper §4–§5).
+
+Pipeline per the paper's "general approach" (§4): the sorted entry segments
+live on the device once and for all; the host keeps the temporal-bin index
+and the sorted query set; queries are partitioned into batches (see
+``repro.core.batching``); for each batch the host computes the contiguous
+candidate index range from the bins and dispatches one device computation
+comparing the batch's query segments against that candidate slice.
+
+TPU adaptations on top of the paper:
+
+* **Shape bucketing.**  The GPU pays a per-invocation overhead Θ; the XLA
+  analogue is *compilation* of every new (C, Q) shape.  We round candidate
+  and query counts up to power-of-two buckets (multiples of the kernel tile)
+  so the jit cache stays O(log²) instead of O(batches).  Padded rows have
+  temporal extents outside the data range and can never hit.
+* **Overflow-retry result buffers.**  The paper statically allocates |D|
+  result slots (§5).  We allocate ``capacity`` slots per batch and retry
+  with doubled capacity on overflow — the paper's own suggested refinement.
+* **Deterministic output.**  Results are emitted in (entry, query) row-major
+  order per batch, concatenated in batch order.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.batching import BatchPlan
+from repro.core.index import DEFAULT_NUM_BINS, TemporalBinIndex
+from repro.core.segments import SegmentArray
+from repro.kernels import ops
+from repro.kernels.distthresh import DEFAULT_CAND_BLK, DEFAULT_QRY_BLK
+
+
+@dataclasses.dataclass
+class ResultSet:
+    """Flat result arrays: one row per (entry segment, query segment, interval)."""
+
+    entry_idx: np.ndarray    # global index into the sorted database
+    entry_traj: np.ndarray   # trajectory id of the entry segment
+    entry_seg: np.ndarray    # segment id of the entry segment
+    query_idx: np.ndarray    # global index into the sorted query array
+    t_enter: np.ndarray
+    t_exit: np.ndarray
+
+    def __len__(self) -> int:
+        return int(self.entry_idx.shape[0])
+
+    @staticmethod
+    def empty() -> "ResultSet":
+        zi = np.zeros(0, np.int64)
+        zf = np.zeros(0, np.float32)
+        return ResultSet(zi, zi.copy(), zi.copy(), zi.copy(), zf, zf.copy())
+
+    @staticmethod
+    def concatenate(parts: list["ResultSet"]) -> "ResultSet":
+        if not parts:
+            return ResultSet.empty()
+        return ResultSet(*[np.concatenate([getattr(p, f.name) for p in parts])
+                           for f in dataclasses.fields(ResultSet)])
+
+    def sorted_canonical(self) -> "ResultSet":
+        """Canonical (entry_idx, query_idx) order — for set comparisons."""
+        order = np.lexsort((self.query_idx, self.entry_idx))
+        return ResultSet(*[getattr(self, f.name)[order]
+                           for f in dataclasses.fields(ResultSet)])
+
+
+@dataclasses.dataclass
+class BatchStats:
+    """Per-invocation record (feeds the §8 performance model)."""
+
+    batch_size: int
+    num_candidates: int
+    num_interactions: int
+    num_hits: int
+    kernel_seconds: float
+    retries: int
+
+
+@dataclasses.dataclass
+class ExecStats:
+    plan_seconds: float
+    total_seconds: float
+    batches: list[BatchStats]
+
+    @property
+    def kernel_seconds(self) -> float:
+        return sum(b.kernel_seconds for b in self.batches)
+
+    @property
+    def host_seconds(self) -> float:
+        return self.total_seconds - self.kernel_seconds
+
+    @property
+    def total_interactions(self) -> int:
+        return sum(b.num_interactions for b in self.batches)
+
+    @property
+    def total_hits(self) -> int:
+        return sum(b.num_hits for b in self.batches)
+
+    @property
+    def num_invocations(self) -> int:
+        return len(self.batches)
+
+
+def _bucket(n: int, blk: int) -> int:
+    """Round up to blk, then to blk·2^k — bounds the jit-cache size."""
+    n = max(n, 1)
+    b = blk
+    while b < n:
+        b *= 2
+    return b
+
+
+class DistanceThresholdEngine:
+    """In-memory distance-threshold query engine over a trajectory database."""
+
+    def __init__(self, db: SegmentArray, *, num_bins: int = DEFAULT_NUM_BINS,
+                 use_pallas: bool = False, interpret: bool = True,
+                 cand_blk: int = DEFAULT_CAND_BLK, qry_blk: int = DEFAULT_QRY_BLK,
+                 default_capacity: int = 4096):
+        """``use_pallas=False`` routes interactions through the jnp oracle —
+        the right default on CPU where Pallas runs in interpret mode.  Both
+        paths share identical semantics (tests assert equality)."""
+        self.db = db if db.is_sorted() else db.sort_by_tstart()
+        self.index = TemporalBinIndex.build(self.db, num_bins)
+        self._packed = self.db.packed()          # (n, 8) float32, host copy
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        self.cand_blk = cand_blk
+        self.qry_blk = qry_blk
+        self.default_capacity = default_capacity
+
+    # ------------------------------------------------------------------
+    def execute(self, queries: SegmentArray, d: float,
+                plan: BatchPlan) -> tuple[ResultSet, ExecStats]:
+        """Run every batch in ``plan`` against the database."""
+        if not queries.is_sorted():
+            raise ValueError("queries must be sorted by t_start")
+        q_packed = queries.packed()
+        t_begin = time.perf_counter()
+        parts: list[ResultSet] = []
+        stats: list[BatchStats] = []
+        for batch in plan.batches:
+            n_cand = batch.num_candidates
+            bs = batch.size
+            if n_cand == 0:
+                stats.append(BatchStats(bs, 0, 0, 0, 0.0, 0))
+                continue
+            e_slice = self._packed[batch.cand_first:batch.cand_last + 1]
+            q_slice = q_packed[batch.q_first:batch.q_last + 1]
+            capacity = _bucket(min(self.default_capacity, n_cand * bs), 256)
+            t0 = time.perf_counter()
+            retries = 0
+            while True:
+                out = ops.query_block(
+                    e_slice, q_slice, np.float32(d), capacity=capacity,
+                    use_pallas=self.use_pallas, interpret=self.interpret,
+                    cand_blk=self.cand_blk, qry_blk=self.qry_blk)
+                count = int(out["count"])
+                if count <= capacity:
+                    break
+                capacity = _bucket(count, 256)     # §5 re-attempt path
+                retries += 1
+            kernel_s = time.perf_counter() - t0
+            if count > 0:
+                e_local = np.asarray(out["entry_idx"][:count])
+                q_local = np.asarray(out["query_idx"][:count])
+                e_global = batch.cand_first + e_local.astype(np.int64)
+                parts.append(ResultSet(
+                    entry_idx=e_global,
+                    entry_traj=self.db.traj_id[e_global].astype(np.int64),
+                    entry_seg=self.db.seg_id[e_global].astype(np.int64),
+                    query_idx=batch.q_first + q_local.astype(np.int64),
+                    t_enter=np.asarray(out["t_enter"][:count]),
+                    t_exit=np.asarray(out["t_exit"][:count]),
+                ))
+            stats.append(BatchStats(bs, n_cand, bs * n_cand, count,
+                                    kernel_s, retries))
+        total = time.perf_counter() - t_begin
+        return (ResultSet.concatenate(parts),
+                ExecStats(plan.plan_seconds, total, stats))
+
+
+# ----------------------------------------------------------------------
+# Brute-force oracle (for tests): all pairs, no index, chunked.
+# ----------------------------------------------------------------------
+def brute_force(db: SegmentArray, queries: SegmentArray, d: float,
+                chunk: int = 2048) -> ResultSet:
+    """All-pairs reference: compares every entry to every query segment."""
+    db_packed = db.packed()
+    q_packed = queries.packed()
+    parts: list[ResultSet] = []
+    for c0 in range(0, len(db), chunk):
+        e_slice = db_packed[c0:c0 + chunk]
+        t_enter, t_exit, hit = ops.interaction_tiles(
+            e_slice, q_packed, np.float32(d), use_pallas=False)
+        hit = np.asarray(hit)
+        if not hit.any():
+            continue
+        ei, qi = np.nonzero(hit)
+        eg = c0 + ei.astype(np.int64)
+        parts.append(ResultSet(
+            entry_idx=eg,
+            entry_traj=db.traj_id[eg].astype(np.int64),
+            entry_seg=db.seg_id[eg].astype(np.int64),
+            query_idx=qi.astype(np.int64),
+            t_enter=np.asarray(t_enter)[ei, qi],
+            t_exit=np.asarray(t_exit)[ei, qi],
+        ))
+    return ResultSet.concatenate(parts).sorted_canonical()

@@ -1,0 +1,164 @@
+"""Temporal-bin index (paper §4).
+
+Entry segments, sorted by non-decreasing ``t_start``, are logically divided
+into ``m`` fixed-width temporal bins.  Bin ``B_j`` is fully described by
+``(B_start, B_end, B_first, B_last)``:
+
+* ``B_start[j] = t0 + j*b`` where ``b = (t_max - t0) / m``;
+* ``B_end[j]   = max over segments in bin of t_end`` (−inf if empty);
+* ``B_first[j]`` / ``B_last[j]``: first/last segment index with
+  ``t_start`` in ``[B_start[j], B_start[j]+b)``.
+
+For a query with temporal extent ``[qt0, qt1]`` the set of overlapping bins
+is contiguous, and the candidate entry segments are exactly the contiguous
+index range ``[first, last]`` — this contiguity is what makes the search a
+dense streaming computation on the accelerator.
+
+The paper finds the overlapping bins with an index-tree over bin extents in
+O(log m); we use the equivalent binary search over the prefix-max of
+``B_end`` (non-decreasing, hence searchable) — same complexity, no tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.segments import SegmentArray
+
+DEFAULT_NUM_BINS = 10_000  # paper §7.2: "the number of entry bins ... is set to 10,000"
+
+
+@dataclasses.dataclass
+class TemporalBinIndex:
+    """The bin description arrays + the sorted segment t arrays they index."""
+
+    t0: float
+    bin_width: float
+    num_bins: int
+    b_start: np.ndarray      # (m,) float64 — bin start times
+    b_end: np.ndarray        # (m,) float64 — max t_end in bin, −inf if empty
+    b_first: np.ndarray      # (m,) int64 — first segment index in bin
+    b_last: np.ndarray       # (m,) int64 — last segment index in bin (first-1 if empty)
+    _bend_prefix_max: np.ndarray  # (m,) float64 — running max of b_end
+    n_segments: int
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def build(db: SegmentArray, num_bins: int = DEFAULT_NUM_BINS) -> "TemporalBinIndex":
+        if not db.is_sorted():
+            raise ValueError("TemporalBinIndex requires segments sorted by t_start")
+        n = len(db)
+        if n == 0:
+            raise ValueError("cannot index an empty database")
+        ts = db.ts.astype(np.float64)
+        te = db.te.astype(np.float64)
+        t0 = float(ts[0])
+        t_max = float(max(ts.max(), te.max()))
+        # Degenerate all-at-one-instant databases still get one valid bin.
+        width = max((t_max - t0) / num_bins, np.finfo(np.float64).tiny)
+
+        b_start = t0 + width * np.arange(num_bins, dtype=np.float64)
+        edges = t0 + width * np.arange(num_bins + 1, dtype=np.float64)
+        # b_first[j] = first i with ts[i] >= edge[j]; b_last[j] = b_first[j+1]-1.
+        firsts = np.searchsorted(ts, edges, side="left")
+        # Segments with ts == t_max would land in bin m; clamp into the last bin
+        # (paper's floor(t/b) with t = t_max edge case).
+        firsts[-1] = n
+        b_first = firsts[:-1].astype(np.int64)
+        b_last = (firsts[1:] - 1).astype(np.int64)
+
+        b_end = np.full(num_bins, -np.inf, dtype=np.float64)
+        nonempty = b_last >= b_first
+        # Per-bin max of te via reduceat over the sorted layout.
+        if nonempty.any():
+            starts = b_first[nonempty]
+            seg_max = np.maximum.reduceat(te, starts)
+            # reduceat reduces [starts[k], starts[k+1]) — but consecutive
+            # non-empty bins may be separated by empty ones whose range is
+            # empty; since starts are the b_first of non-empty bins and the
+            # next non-empty bin's b_first equals this bin's b_last+1 (empty
+            # bins in between contribute no indices), the reduction ranges
+            # are exactly the bins' segment ranges, except the final range
+            # runs to n which is also correct.
+            b_end[nonempty] = seg_max
+        prefix_max = np.maximum.accumulate(b_end)
+        return TemporalBinIndex(
+            t0=t0, bin_width=width, num_bins=num_bins,
+            b_start=b_start, b_end=b_end, b_first=b_first, b_last=b_last,
+            _bend_prefix_max=prefix_max, n_segments=n,
+        )
+
+    # ------------------------------------------------------------------
+    def bin_of(self, t_start: float) -> int:
+        """floor((t_start - t0)/b), clamped into [0, m-1] (paper's bin rule)."""
+        j = int(np.floor((t_start - self.t0) / self.bin_width))
+        return min(max(j, 0), self.num_bins - 1)
+
+    def candidate_range(self, qt0: float, qt1: float) -> tuple[int, int]:
+        """Contiguous candidate index range [first, last] for query extent
+        [qt0, qt1].  Returns (0, -1) when no candidates exist.
+
+        Overlapping bins are those with ``B_start <= qt1`` and
+        ``B_end >= qt0``; the range is then
+        ``[min B_first, max B_last]`` over that (contiguous) set.
+        """
+        if qt1 < qt0:
+            return (0, -1)
+        j_hi = int(np.floor((qt1 - self.t0) / self.bin_width))
+        if j_hi < 0:
+            return (0, -1)
+        j_hi = min(j_hi, self.num_bins - 1)
+        # Earliest bin whose B_end reaches qt0: prefix-max is non-decreasing
+        # so binary search is valid; prefix_max[j] >= qt0 first holds at the
+        # earliest overlapping bin itself.
+        j_lo = int(np.searchsorted(self._bend_prefix_max, qt0, side="left"))
+        if j_lo > j_hi:
+            return (0, -1)
+        # min B_first over bins [j_lo, j_hi]: b_first is non-decreasing.
+        first = int(self.b_first[j_lo])
+        last = int(self.b_last[j_hi])
+        if last < first:
+            return (0, -1)
+        return first, last
+
+    def num_candidates(self, qt0: float, qt1: float) -> int:
+        first, last = self.candidate_range(qt0, qt1)
+        return max(last - first + 1, 0)
+
+    def candidate_range_batch(self, qt0: np.ndarray, qt1: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorized :meth:`candidate_range` over arrays of query extents.
+
+        Returns ``(first, last)`` int64 arrays; empty ranges are encoded as
+        ``last < first`` (specifically first=0, last=-1).  This is the
+        workhorse of the SETSPLIT algorithms, which evaluate ``numInts`` for
+        every adjacent batch pair on every merge iteration.
+        """
+        qt0 = np.asarray(qt0, dtype=np.float64)
+        qt1 = np.asarray(qt1, dtype=np.float64)
+        j_hi = np.floor((qt1 - self.t0) / self.bin_width).astype(np.int64)
+        valid = (qt1 >= qt0) & (j_hi >= 0)
+        j_hi = np.clip(j_hi, 0, self.num_bins - 1)
+        j_lo = np.searchsorted(self._bend_prefix_max, qt0, side="left").astype(np.int64)
+        valid &= j_lo <= j_hi
+        j_lo = np.minimum(j_lo, self.num_bins - 1)
+        first = self.b_first[j_lo]
+        last = self.b_last[j_hi]
+        valid &= last >= first
+        first = np.where(valid, first, 0)
+        last = np.where(valid, last, -1)
+        return first, last
+
+    def num_candidates_batch(self, qt0: np.ndarray, qt1: np.ndarray) -> np.ndarray:
+        first, last = self.candidate_range_batch(qt0, qt1)
+        return np.maximum(last - first + 1, 0)
+
+    def num_interactions(self, qt0: float, qt1: float, batch_size: int) -> int:
+        """|Q_batch| × |E_Q| — the paper's interaction count for one batch."""
+        return batch_size * self.num_candidates(qt0, qt1)
+
+    # ------------------------------------------------------------------
+    def bins_overlapping(self, qt0: float, qt1: float) -> np.ndarray:
+        """Indices of bins that temporally overlap [qt0, qt1] (for tests)."""
+        mask = (self.b_start <= qt1) & (self.b_end >= qt0)
+        return np.nonzero(mask)[0]

@@ -1,0 +1,118 @@
+"""Fault-tolerant batch scheduler: deadlines, re-issue, straggler
+mitigation.
+
+At thousand-node scale a query batch (or a data-parallel step) can stall on
+one slow/failed worker.  The paper's online objective (minimize response
+time for an arbitrary query stream, §3) makes stalls directly user-visible,
+so the engine's batch queue needs the standard production treatments:
+
+* **deadline + re-issue**: every batch gets a deadline derived from the §8
+  performance model's predicted time × a slack factor; a batch that misses
+  its deadline is re-issued (to the same pool here; to another pod in a
+  real deployment).  Because the engine is deterministic and stateless per
+  batch, re-execution is always safe (idempotent).
+* **at-least-once with deduplication**: results carry the batch id; the
+  collector keeps the first completed copy of each batch, so a straggler
+  finishing after its re-issue is discarded.
+* **epoch-stamped state**: the scheduler's queue state (pending/done batch
+  ids) is trivially checkpointable alongside the engine, so a restarted
+  coordinator resumes the remaining batches only.
+
+Execution here uses a thread pool (the CPU stand-in for per-pod executors);
+``delay_hook`` lets tests inject artificial stragglers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from typing import Callable
+
+from repro.core.batching import BatchPlan
+from repro.core.engine import DistanceThresholdEngine, ResultSet
+from repro.core.segments import SegmentArray
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    completed: int = 0
+    reissued: int = 0
+    duplicates_dropped: int = 0
+    wall_seconds: float = 0.0
+
+
+class DeadlineScheduler:
+    """Run a BatchPlan with per-batch deadlines and straggler re-issue."""
+
+    def __init__(self, engine: DistanceThresholdEngine, *,
+                 workers: int = 2, slack: float = 4.0,
+                 min_deadline: float = 0.05,
+                 predict_seconds: Callable | None = None,
+                 delay_hook: Callable | None = None):
+        self.engine = engine
+        self.workers = workers
+        self.slack = slack
+        self.min_deadline = min_deadline
+        self.predict_seconds = predict_seconds
+        self.delay_hook = delay_hook          # (batch_idx, attempt) -> None
+        self._lock = threading.Lock()
+
+    def _deadline_for(self, batch) -> float:
+        if self.predict_seconds is not None:
+            return max(self.slack * self.predict_seconds(batch),
+                       self.min_deadline)
+        return self.min_deadline
+
+    def _run_one(self, queries: SegmentArray, d: float, plan: BatchPlan,
+                 idx: int, attempt: int):
+        if self.delay_hook is not None:
+            self.delay_hook(idx, attempt)
+        sub = BatchPlan(plan.algorithm, plan.params, [plan.batches[idx]], 0.0)
+        rs, _ = self.engine.execute(queries, d, sub)
+        return idx, attempt, rs
+
+    def execute(self, queries: SegmentArray, d: float, plan: BatchPlan
+                ) -> tuple[ResultSet, SchedulerStats]:
+        t0 = time.perf_counter()
+        stats = SchedulerStats()
+        results: dict[int, ResultSet] = {}
+        pool = ThreadPoolExecutor(self.workers)
+        futures = {}
+        deadlines = {}
+        attempts = {i: 0 for i in range(plan.num_batches)}
+        try:
+            for i in range(plan.num_batches):
+                fut = pool.submit(self._run_one, queries, d, plan, i, 0)
+                futures[fut] = i
+                deadlines[i] = time.perf_counter() + self._deadline_for(
+                    plan.batches[i])
+            while len(results) < plan.num_batches:
+                done, _ = wait(list(futures), timeout=0.01,
+                               return_when=FIRST_COMPLETED)
+                now = time.perf_counter()
+                for fut in done:
+                    i = futures.pop(fut)
+                    idx, attempt, rs = fut.result()
+                    with self._lock:
+                        if idx in results:
+                            stats.duplicates_dropped += 1
+                        else:
+                            results[idx] = rs
+                            stats.completed += 1
+                # re-issue batches past deadline that are still incomplete
+                pending = {i for i in futures.values()}
+                for i in list(pending):
+                    if i in results or now <= deadlines.get(i, now + 1):
+                        continue
+                    attempts[i] += 1
+                    stats.reissued += 1
+                    deadlines[i] = now + self._deadline_for(plan.batches[i])
+                    fut = pool.submit(self._run_one, queries, d, plan, i,
+                                      attempts[i])
+                    futures[fut] = i
+        finally:
+            pool.shutdown(wait=False, cancel_futures=True)
+        ordered = [results[i] for i in range(plan.num_batches)]
+        stats.wall_seconds = time.perf_counter() - t0
+        return ResultSet.concatenate(ordered), stats

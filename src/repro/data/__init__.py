@@ -1,0 +1,1 @@
+from repro.data import trajgen, tokens  # noqa: F401

@@ -1,0 +1,75 @@
+"""Synthetic LM token pipeline: sharded, deterministic, resumable.
+
+Training at scale needs a data pipeline that (a) gives every data-parallel
+shard disjoint tokens, (b) is exactly reproducible, and (c) can resume from
+a step counter after preemption without replaying.  We derive every batch
+from ``fold_in(fold_in(key, step), shard)`` — O(1) state, no iterator to
+checkpoint beyond the integer step.
+
+The token distribution is a Zipfian mixture with a deterministic
+"linguistic" structure (short-range repetition) so that models have
+non-trivial learnable signal, which makes loss-goes-down integration tests
+meaningful.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPipelineConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    num_shards: int = 1           # data-parallel shards
+    seed: int = 0
+
+    @property
+    def per_shard_batch(self) -> int:
+        assert self.global_batch % self.num_shards == 0
+        return self.global_batch // self.num_shards
+
+
+def _zipf_logits(vocab_size: int) -> np.ndarray:
+    ranks = np.arange(1, vocab_size + 1, dtype=np.float64)
+    return np.log(1.0 / ranks)
+
+
+class TokenPipeline:
+    """Stateless-per-step synthetic token source."""
+
+    def __init__(self, config: TokenPipelineConfig):
+        self.config = config
+        self._base = jax.random.PRNGKey(config.seed)
+        self._logits = jnp.asarray(_zipf_logits(config.vocab_size),
+                                   dtype=jnp.float32)
+
+    def batch_at(self, step: int, shard: int = 0) -> dict[str, np.ndarray]:
+        """Batch for (step, shard): dict(tokens, labels) of (B_shard, S) int32.
+
+        Deterministic and independent across (step, shard) pairs — resuming
+        at step k after a crash reproduces the exact token stream.
+        """
+        cfg = self.config
+        if not (0 <= shard < cfg.num_shards):
+            raise ValueError(f"shard {shard} out of range")
+        key = jax.random.fold_in(jax.random.fold_in(self._base, step), shard)
+        b, s = cfg.per_shard_batch, cfg.seq_len
+        draw = jax.random.categorical(key, self._logits, shape=(b, s + 1))
+        # Inject short-range structure: every 8th position repeats position-7
+        # tokens, giving an easily learnable conditional.
+        idx = jnp.arange(s + 1)
+        src = jnp.where(idx % 8 == 7, idx - 7, idx)
+        draw = draw[:, src]
+        draw = np.asarray(draw, dtype=np.int32)
+        return {"tokens": draw[:, :-1], "labels": draw[:, 1:]}
+
+    def global_batch_at(self, step: int) -> dict[str, np.ndarray]:
+        """All shards concatenated (host-side convenience for 1-process runs)."""
+        parts = [self.batch_at(step, sh) for sh in range(self.config.num_shards)]
+        return {k: np.concatenate([p[k] for p in parts], axis=0)
+                for k in parts[0]}

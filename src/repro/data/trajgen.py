@@ -1,0 +1,205 @@
+"""Dataset generators faithful to the paper's §7.1.
+
+Five datasets, all 4-D (3 space + 1 time):
+
+* GALAXY — stars orbiting in a Milky-Way-like gravitational field: flat
+  rotation curve circular orbits + radial epicycles + vertical oscillation.
+  2,500 trajectories × 400 segments = 10^6 entry segments; all trajectories
+  share the same temporal extent, so the active-trajectory profile is
+  roughly uniform (paper Fig. 4e).
+* RANDWALK-UNIFORM — Brownian trajectories of 400 timesteps (399 segments),
+  start times ~ U[0, 100].  2,500 trajectories = 997,500 segments.
+* RANDWALK-NORMAL — start times ~ N(200, 200) truncated to [0, 400].
+  2,500 × 400 = 10^6 segments.
+* RANDWALK-NORMAL5 — one of 5 normal distributions per trajectory ⇒
+  distinct active/inactive phases (paper's rush-hour analogy).
+* RANDWALK-EXP — 10,000 trajectories with Exp(λ=1/70) lengths truncated to
+  [2, 1000] timesteps, start times ~ U[0, 20].
+
+The paper does not specify the spatial parameters of the random walks; we
+pick an initial box and step size such that the query distances of the
+paper's scenarios (d = 1 … 150) produce small-but-nonzero hit fractions α,
+matching the paper's observation that "only a small fraction of the
+interactions add to the result set" (§5).
+
+Every generator takes a ``scale`` factor: scale=1.0 reproduces the paper's
+counts; CI and CPU benchmarks use scale≈0.02–0.1.  Generation is fully
+deterministic given (seed, scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.segments import SegmentArray
+
+
+@dataclasses.dataclass
+class TrajectoryDataset:
+    name: str
+    segments: SegmentArray           # unsorted; the engine sorts by t_start
+    traj_slices: list[tuple[int, int]]  # per-trajectory [start, end) into segments
+
+
+def _to_dataset(name: str, points: list[np.ndarray],
+                times: list[np.ndarray]) -> TrajectoryDataset:
+    segs = SegmentArray.from_trajectories(points, times)
+    slices = []
+    ofs = 0
+    for p in points:
+        m = max(p.shape[0] - 1, 0)
+        slices.append((ofs, ofs + m))
+        ofs += m
+    return TrajectoryDataset(name, segs, slices)
+
+
+# ----------------------------------------------------------------------
+# GALAXY
+# ----------------------------------------------------------------------
+def galaxy(num_traj: int = 2500, num_segments: int = 400, *,
+           seed: int = 0, scale: float = 1.0) -> TrajectoryDataset:
+    """Disk-galaxy stellar orbits (flat rotation curve + epicycles)."""
+    rng = np.random.default_rng(seed)
+    nt = max(int(num_traj * scale), 4)
+    steps = num_segments + 1
+    t = np.linspace(0.0, 400.0, steps, dtype=np.float64)        # shared extent
+    # Galactocentric radius (kpc), flat rotation curve v0.
+    r0 = rng.uniform(4.0, 12.0, nt)
+    v0 = 0.22                                  # kpc per timestep unit
+    omega = v0 / r0
+    phi0 = rng.uniform(0.0, 2 * np.pi, nt)
+    # Radial epicycle (kappa ≈ sqrt(2)·omega for a flat curve) + vertical
+    # oscillation.
+    a_r = rng.uniform(0.0, 0.6, nt)
+    kappa = np.sqrt(2.0) * omega
+    psi0 = rng.uniform(0.0, 2 * np.pi, nt)
+    a_z = rng.uniform(0.0, 0.3, nt)
+    nu = 2.0 * omega
+    zeta0 = rng.uniform(0.0, 2 * np.pi, nt)
+
+    tt = t[None, :]                            # (1, steps)
+    r = r0[:, None] + a_r[:, None] * np.cos(kappa[:, None] * tt + psi0[:, None])
+    ang = phi0[:, None] + omega[:, None] * tt
+    x = r * np.cos(ang)
+    y = r * np.sin(ang)
+    z = a_z[:, None] * np.sin(nu[:, None] * tt + zeta0[:, None])
+
+    pts = [np.stack([x[k], y[k], z[k]], axis=1) for k in range(nt)]
+    tms = [t.copy() for _ in range(nt)]
+    return _to_dataset("galaxy", pts, tms)
+
+
+# ----------------------------------------------------------------------
+# RANDWALK family
+# ----------------------------------------------------------------------
+_BOX = 400.0        # initial positions ~ U[0, _BOX]^3
+_STEP_SIGMA = 2.0   # Brownian step std per coordinate per timestep
+
+
+def _randwalk(name: str, start_times: np.ndarray, lengths: np.ndarray,
+              rng: np.random.Generator) -> TrajectoryDataset:
+    """Brownian trajectories with given per-trajectory start times/lengths."""
+    pts, tms = [], []
+    for st, m in zip(start_times, lengths):
+        m = int(m)
+        steps = rng.normal(0.0, _STEP_SIGMA, size=(m, 3))
+        p0 = rng.uniform(0.0, _BOX, size=(1, 3))
+        p = np.concatenate([p0, p0 + np.cumsum(steps, axis=0)], axis=0)
+        tms.append(st + np.arange(m + 1, dtype=np.float64))
+        pts.append(p)
+    return _to_dataset(name, pts, tms)
+
+
+def randwalk_uniform(num_traj: int = 2500, *, seed: int = 1,
+                     scale: float = 1.0) -> TrajectoryDataset:
+    rng = np.random.default_rng(seed)
+    nt = max(int(num_traj * scale), 4)
+    starts = rng.uniform(0.0, 100.0, nt)
+    lengths = np.full(nt, 399)                  # 997,500 segments at scale=1
+    return _randwalk("randwalk-uniform", starts, lengths, rng)
+
+
+def randwalk_normal(num_traj: int = 2500, *, seed: int = 2,
+                    scale: float = 1.0) -> TrajectoryDataset:
+    rng = np.random.default_rng(seed)
+    nt = max(int(num_traj * scale), 4)
+    starts = np.clip(rng.normal(200.0, 200.0, nt), 0.0, 400.0)
+    lengths = np.full(nt, 400)                  # 10^6 segments at scale=1
+    return _randwalk("randwalk-normal", starts, lengths, rng)
+
+
+def randwalk_normal5(num_traj: int = 2500, *, seed: int = 3,
+                     scale: float = 1.0) -> TrajectoryDataset:
+    rng = np.random.default_rng(seed)
+    nt = max(int(num_traj * scale), 5)
+    # Five modes spread over the extent ⇒ distinct active/inactive phases.
+    means = np.array([50.0, 150.0, 250.0, 350.0, 450.0])
+    sigmas = np.array([15.0, 15.0, 15.0, 15.0, 15.0])
+    mode = rng.integers(0, 5, nt)
+    starts = np.clip(rng.normal(means[mode], sigmas[mode]), 0.0, 500.0)
+    lengths = np.full(nt, 400)
+    return _randwalk("randwalk-normal5", starts, lengths, rng)
+
+
+def randwalk_exp(num_traj: int = 10_000, *, seed: int = 4,
+                 scale: float = 1.0) -> TrajectoryDataset:
+    rng = np.random.default_rng(seed)
+    nt = max(int(num_traj * scale), 8)
+    lengths = np.clip(rng.exponential(70.0, nt), 2, 1000).astype(np.int64)
+    starts = rng.uniform(0.0, 20.0, nt)
+    return _randwalk("randwalk-exp", starts, lengths, rng)
+
+
+DATASETS = {
+    "galaxy": galaxy,
+    "randwalk-uniform": randwalk_uniform,
+    "randwalk-normal": randwalk_normal,
+    "randwalk-normal5": randwalk_normal5,
+    "randwalk-exp": randwalk_exp,
+}
+
+
+# ----------------------------------------------------------------------
+# Experimental scenarios S1–S10 (paper §7.2)
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    dataset: str
+    d: float
+    num_query_traj: int
+
+
+SCENARIOS: dict[str, Scenario] = {
+    "S1": Scenario("S1", "galaxy", 1.0, 100),
+    "S2": Scenario("S2", "galaxy", 5.0, 100),
+    "S3": Scenario("S3", "randwalk-uniform", 5.0, 100),
+    "S4": Scenario("S4", "randwalk-uniform", 25.0, 100),
+    "S5": Scenario("S5", "randwalk-normal", 50.0, 100),
+    "S6": Scenario("S6", "randwalk-normal", 150.0, 100),
+    "S7": Scenario("S7", "randwalk-normal5", 50.0, 100),
+    "S8": Scenario("S8", "randwalk-normal5", 150.0, 100),
+    "S9": Scenario("S9", "randwalk-exp", 50.0, 1000),
+    "S10": Scenario("S10", "randwalk-exp", 100.0, 1000),
+}
+
+
+def make_scenario(name: str, *, scale: float = 1.0, seed: int = 0
+                  ) -> tuple[SegmentArray, SegmentArray, float]:
+    """Build (database, sorted query segments, d) for a paper scenario.
+
+    Queries are the segments of ``num_query_traj`` randomly chosen
+    trajectories of the dataset (paper §7.2: "100 trajectories are
+    processed"), scaled alongside the dataset.
+    """
+    sc = SCENARIOS[name]
+    ds = DATASETS[sc.dataset](scale=scale)
+    n_traj = len(ds.traj_slices)
+    nq = max(min(int(sc.num_query_traj * scale), n_traj), 1)
+    rng = np.random.default_rng(seed + 1000)
+    chosen = rng.choice(n_traj, size=nq, replace=False)
+    parts = [ds.segments.take(np.s_[a:b]) for a, b in
+             (ds.traj_slices[int(k)] for k in chosen)]
+    queries = SegmentArray.concatenate(parts).sort_by_tstart()
+    return ds.segments.sort_by_tstart(), queries, sc.d

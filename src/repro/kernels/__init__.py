@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for compute hot-spots + their jnp oracles.
+
+* ``distthresh`` -- the paper's GPUTRAJDISTSEARCH interaction kernel,
+  re-tiled for VMEM (see module docstring).  ``ops`` is the jit'd public
+  wrapper; ``ref`` is the pure-jnp oracle used by tests and the CPU path.
+"""

@@ -1,0 +1,161 @@
+"""Pallas TPU kernel for the distance-threshold interaction tile.
+
+TPU adaptation of the paper's ``GPUTRAJDISTSEARCH`` (Algorithm 1).  The GPU
+version assigns one hardware thread per candidate entry segment, loops that
+thread over the query batch, and short-circuits per-interaction branches.
+On a TPU none of that maps: we instead tile the dense (C × Q) *interaction
+matrix* over a 2-D grid and evaluate every interaction in a
+(CAND_BLK × QRY_BLK) tile as fully branchless masked VPU arithmetic.
+
+Layout choices (the important part):
+
+* entries are blocked ``(CAND_BLK, 8)`` — candidate index is the sublane
+  dimension, so an entry component column ``e[:, k:k+1]`` is a (C, 1) vector
+  that broadcasts along lanes;
+* queries are passed **transposed** ``(8, Q)`` and blocked ``(8, QRY_BLK)``
+  — a query component row ``q[k:k+1, :]`` is a (1, Q) vector that broadcasts
+  along sublanes.  Every per-pair quantity is then a rank-2 (C, Q) outer
+  broadcast with **zero transposes inside the kernel**.
+* grid is ``(C/CAND_BLK, Q/QRY_BLK)`` with the query axis innermost, so an
+  entry block stays VMEM-resident while query blocks stream past it — the
+  same reuse the GPU kernel gets from its thread-private candidate copy
+  (paper §8.1.3's observation about Mixed-execution reuse).
+
+The interval math matches ``ref.interaction_tile`` bit-for-bit in float32;
+tests sweep shapes/dtypes and assert allclose against the oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile: 256×256 f32 tiles keep the ~14 live (C, Q) temporaries well
+# under 16 MiB VMEM: 14 × 256 × 256 × 4 B ≈ 3.7 MiB.
+DEFAULT_CAND_BLK = 256
+DEFAULT_QRY_BLK = 256
+
+_A_EPS = 1e-12
+_B_EPS = 1e-12
+
+
+def _distthresh_kernel(d_ref, entries_ref, queries_t_ref,
+                       enter_ref, exit_ref, hit_ref):
+    e = entries_ref[...]          # (C_BLK, 8)
+    q = queries_t_ref[...]        # (8, Q_BLK)
+    d = d_ref[0, 0]
+
+    # Entry components as (C, 1); query components as (1, Q).
+    ex0, ey0, ez0 = e[:, 0:1], e[:, 1:2], e[:, 2:3]
+    ex1, ey1, ez1 = e[:, 3:4], e[:, 4:5], e[:, 5:6]
+    ets, ete = e[:, 6:7], e[:, 7:8]
+    qx0, qy0, qz0 = q[0:1, :], q[1:2, :], q[2:3, :]
+    qx1, qy1, qz1 = q[3:4, :], q[4:5, :], q[5:6, :]
+    qts, qte = q[6:7, :], q[7:8, :]
+
+    # Velocities; zero-length temporal extents are static points.
+    edt = ete - ets
+    qdt = qte - qts
+    e_safe = jnp.where(edt > 0, edt, 1.0)
+    q_safe = jnp.where(qdt > 0, qdt, 1.0)
+    e_live = (edt > 0).astype(e.dtype)
+    q_live = (qdt > 0).astype(e.dtype)
+    evx = (ex1 - ex0) / e_safe * e_live
+    evy = (ey1 - ey0) / e_safe * e_live
+    evz = (ez1 - ez0) / e_safe * e_live
+    qvx = (qx1 - qx0) / q_safe * q_live
+    qvy = (qy1 - qy0) / q_safe * q_live
+    qvz = (qz1 - qz0) / q_safe * q_live
+
+    # temporalIntersection: common interval [lo, hi], (C, Q).
+    lo = jnp.maximum(ets, qts)
+    hi = jnp.minimum(ete, qte)
+    t_overlap = lo <= hi
+
+    # Relative motion r(t) = dr0 + dv t with absolute-time anchors.
+    dvx = evx - qvx
+    dvy = evy - qvy
+    dvz = evz - qvz
+    drx = (ex0 - evx * ets) - (qx0 - qvx * qts)
+    dry = (ey0 - evy * ets) - (qy0 - qvy * qts)
+    drz = (ez0 - evz * ets) - (qz0 - qvz * qts)
+
+    a = dvx * dvx + dvy * dvy + dvz * dvz
+    b = 2.0 * (drx * dvx + dry * dvy + drz * dvz)
+    c = drx * drx + dry * dry + drz * drz - d * d
+
+    inf = jnp.asarray(jnp.inf, e.dtype)
+
+    # calcTimeInterval: {t : a t^2 + b t + c <= 0} as [rlo, rhi].
+    disc = b * b - 4.0 * a * c
+    sq = jnp.sqrt(jnp.maximum(disc, 0.0))
+    safe_a = jnp.where(a > _A_EPS, a, 1.0)
+    q_rlo = (-b - sq) / (2.0 * safe_a)
+    q_rhi = (-b + sq) / (2.0 * safe_a)
+
+    safe_b = jnp.where(jnp.abs(b) > _B_EPS, b, 1.0)
+    root = -c / safe_b
+    lin_rlo = jnp.where(b > 0, -inf, root)
+    lin_rhi = jnp.where(b > 0, root, inf)
+
+    is_quad = a > _A_EPS
+    is_lin = (~is_quad) & (jnp.abs(b) > _B_EPS)
+
+    rlo = jnp.where(is_quad, q_rlo, jnp.where(is_lin, lin_rlo, -inf))
+    rhi = jnp.where(is_quad, q_rhi, jnp.where(is_lin, lin_rhi, inf))
+    nonempty = jnp.where(is_quad, disc >= 0.0,
+                         jnp.where(is_lin, True, c <= 0.0))
+
+    t_enter = jnp.maximum(rlo, lo)
+    t_exit = jnp.minimum(rhi, hi)
+    hit = t_overlap & nonempty & (t_enter <= t_exit)
+
+    zero = jnp.zeros((), e.dtype)
+    enter_ref[...] = jnp.where(hit, t_enter, zero)
+    exit_ref[...] = jnp.where(hit, t_exit, zero)
+    hit_ref[...] = hit.astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("cand_blk", "qry_blk", "interpret"))
+def distthresh_pallas(entries: jnp.ndarray, queries_t: jnp.ndarray, d,
+                      *, cand_blk: int = DEFAULT_CAND_BLK,
+                      qry_blk: int = DEFAULT_QRY_BLK,
+                      interpret: bool = True) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Raw pallas_call over pre-padded inputs.
+
+    Args:
+      entries: (C, 8) with C a multiple of ``cand_blk``.
+      queries_t: (8, Q) with Q a multiple of ``qry_blk`` (transposed packing).
+      d: scalar threshold.
+
+    Returns (t_enter, t_exit, hit) of shape (C, Q); hit is int8.
+    """
+    cc, eight = entries.shape
+    assert eight == 8, entries.shape
+    eight2, qq = queries_t.shape
+    assert eight2 == 8, queries_t.shape
+    assert cc % cand_blk == 0 and qq % qry_blk == 0, (cc, qq, cand_blk, qry_blk)
+    grid = (cc // cand_blk, qq // qry_blk)
+    dtype = entries.dtype
+    d_arr = jnp.asarray(d, dtype).reshape(1, 1)
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((cc, qq), dtype),
+        jax.ShapeDtypeStruct((cc, qq), dtype),
+        jax.ShapeDtypeStruct((cc, qq), jnp.int8),
+    )
+    out_spec = pl.BlockSpec((cand_blk, qry_blk), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _distthresh_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),          # d (scalar)
+            pl.BlockSpec((cand_blk, 8), lambda i, j: (i, 0)),   # entries: stay on i
+            pl.BlockSpec((8, qry_blk), lambda i, j: (0, j)),    # queries: stream on j
+        ],
+        out_specs=(out_spec, out_spec, out_spec),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(d_arr, entries, queries_t)

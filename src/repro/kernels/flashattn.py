@@ -1,0 +1,111 @@
+"""Pallas TPU flash-attention kernel (forward) + jnp oracle.
+
+This is the TPU-native version of the XLA-loop flash attention in
+``repro.models.attention``: on real hardware the probability tiles stay in
+VMEM (the XLA fallback materializes them to HBM — visible as the dominant
+memory-roofline term in EXPERIMENTS.md §Roofline), and the MXU sees
+(blk_q × hd) · (hd × blk_k) matmuls with hardware-aligned tiles.
+
+Layout: queries are flattened to (BH, S, hd) with BH = B·KVH·G and KV to
+(BKV, T, hd) with BKV = B·KVH; the BlockSpec index map folds the GQA group
+structure (``bh // g``) so repeated KV heads are never materialized.
+
+Grid: ``(BH, S/blk_q)``; each program owns one query block and streams KV
+blocks with ``jax.lax.fori_loop``, maintaining the online-softmax
+(m, l, acc) accumulators in VMEM.  Causal masking is done per (q, k)
+position pair with query positions aligned to the end of the key range.
+
+Validated in interpret mode against :func:`flashattn_ref` over
+shape/dtype sweeps (tests/test_kernels.py); the model-level custom_vjp
+path provides the backward.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, blk_q: int, blk_k: int,
+                  t_total: int, s_total: int, scale: float):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale          # (blk_q, hd)
+    nk = t_total // blk_k
+    q_pos = (t_total - s_total) + qi * blk_q + jax.lax.iota(
+        jnp.int32, blk_q)
+
+    def body(ki, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice(k_ref[0], (ki * blk_k, 0),
+                                  (blk_k, k_ref.shape[2])).astype(jnp.float32)
+        v = jax.lax.dynamic_slice(v_ref[0], (ki * blk_k, 0),
+                                  (blk_k, v_ref.shape[2])).astype(jnp.float32)
+        scores = q @ k.T                               # (blk_q, blk_k)
+        k_pos = ki * blk_k + jax.lax.iota(jnp.int32, blk_k)
+        mask = k_pos[None, :] <= q_pos[:, None]
+        scores = jnp.where(mask, scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(axis=1))
+        p = jnp.exp(scores - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=1)
+        acc_new = acc * corr[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((blk_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((blk_q,), jnp.float32)
+    a0 = jnp.zeros((blk_q, q_ref.shape[2]), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, nk, body, (m0, l0, a0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("g", "blk_q", "blk_k",
+                                             "interpret"))
+def flashattn_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     *, g: int, blk_q: int = 128, blk_k: int = 128,
+                     interpret: bool = True) -> jnp.ndarray:
+    """q: (BH, S, hd) with BH = BKV·g;  k, v: (BKV, T, hd) → (BH, S, hd).
+
+    S must divide by blk_q and T by blk_k (callers pad; see
+    ``repro.models.attention`` for the padding semantics).
+    """
+    bh, s, hd = q.shape
+    bkv, t, _ = k.shape
+    assert bh == bkv * g, (bh, bkv, g)
+    assert s % blk_q == 0 and t % blk_k == 0, (s, t, blk_q, blk_k)
+    scale = 1.0 / np.sqrt(hd)
+    grid = (bh, s // blk_q)
+    kernel = functools.partial(_flash_kernel, blk_q=blk_q, blk_k=blk_k,
+                               t_total=t, s_total=s, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_q, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, t, hd), lambda b, i, g=g: (b // g, 0, 0)),
+            pl.BlockSpec((1, t, hd), lambda b, i, g=g: (b // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, hd), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flashattn_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  *, g: int) -> jnp.ndarray:
+    """Pure-jnp oracle with identical layout/masking semantics."""
+    bh, s, hd = q.shape
+    bkv, t, _ = k.shape
+    scale = 1.0 / np.sqrt(hd)
+    kk = jnp.repeat(k, g, axis=0).astype(jnp.float32)
+    vv = jnp.repeat(v, g, axis=0).astype(jnp.float32)
+    scores = jnp.einsum("bsh,bth->bst", q.astype(jnp.float32) * scale, kk)
+    q_pos = (t - s) + jnp.arange(s)
+    mask = jnp.arange(t)[None, :] <= q_pos[:, None]
+    scores = jnp.where(mask[None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bst,bth->bsh", p, vv).astype(q.dtype)

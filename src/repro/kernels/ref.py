@@ -1,0 +1,150 @@
+"""Pure-jnp oracle for the distance-threshold interaction computation.
+
+This is the reference semantics of one *interaction* (paper §5): given an
+entry segment and a query segment, both moving linearly in 3-D over their
+temporal extents, compute the time interval during which they are within
+distance ``d`` of each other — the ``temporalIntersection`` +
+``calcTimeInterval`` pair of Algorithm 1, as branchless masked arithmetic
+over a dense (C, Q) tile.
+
+Segment packing (see ``repro.core.segments.PACKED_COLUMNS``)::
+
+    [:, 0:3] = spatial start (x, y, z)
+    [:, 3:6] = spatial end   (x, y, z)
+    [:, 6]   = t_start
+    [:, 7]   = t_end
+
+Math: with entry position ``p(t) = p0 + vp (t - tp0)`` and query position
+``q(t) = q0 + vq (t - tq0)``, the squared separation is a quadratic
+
+    f(t) = |r(t)|^2 - d^2 = a t^2 + b t + c,
+    r(t) = (p0 - vp tp0 - q0 + vq tq0) + (vp - vq) t
+
+and the hit interval is ``{t : f(t) <= 0}`` intersected with the temporal
+overlap ``[max(tp0, tq0), min(tp1, tq1)]`` (Güting et al., as cited by the
+paper).  Degenerate cases (zero relative velocity, zero-length temporal
+extents, tangent roots) are handled with masks, never branches.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# A relative-motion magnitude below this is treated as constant separation.
+_A_EPS = 1e-12
+_B_EPS = 1e-12
+
+
+def _velocity(seg: jnp.ndarray) -> jnp.ndarray:
+    """(N, 3) velocity; zero for zero-length temporal extents (static point)."""
+    dt = seg[:, 7] - seg[:, 6]
+    delta = seg[:, 3:6] - seg[:, 0:3]
+    safe_dt = jnp.where(dt > 0, dt, 1.0)
+    vel = delta / safe_dt[:, None]
+    return jnp.where((dt > 0)[:, None], vel, 0.0)
+
+
+def interaction_tile(entries: jnp.ndarray, queries: jnp.ndarray, d) -> tuple[
+        jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """All-pairs distance-threshold intervals.
+
+    Args:
+      entries: (C, 8) packed entry segments.
+      queries: (Q, 8) packed query segments.
+      d: scalar threshold distance.
+
+    Returns:
+      (t_enter, t_exit, hit): each (C, Q); ``hit`` is bool.  Where ``hit`` is
+      False the interval values are meaningless (zeros).
+    """
+    compute_dtype = jnp.promote_types(entries.dtype, jnp.float32)
+    entries = entries.astype(compute_dtype)
+    queries = queries.astype(compute_dtype)
+    d = jnp.asarray(d, compute_dtype)
+
+    ep0 = entries[:, 0:3]                      # (C, 3)
+    ets, ete = entries[:, 6], entries[:, 7]    # (C,)
+    qp0 = queries[:, 0:3]                      # (Q, 3)
+    qts, qte = queries[:, 6], queries[:, 7]    # (Q,)
+
+    ev = _velocity(entries)                    # (C, 3)
+    qv = _velocity(queries)                    # (Q, 3)
+
+    # Temporal intersection (Algorithm 1's temporalIntersection).
+    lo = jnp.maximum(ets[:, None], qts[None, :])   # (C, Q)
+    hi = jnp.minimum(ete[:, None], qte[None, :])   # (C, Q)
+    t_overlap = lo <= hi
+
+    # Relative motion r(t) = dr0 + dv * t (absolute-time parameterization).
+    # anchor: p0 - vp*tp0 per segment, so broadcasting stays rank-3 minimal.
+    e_anchor = ep0 - ev * ets[:, None]             # (C, 3)
+    q_anchor = qp0 - qv * qts[:, None]             # (Q, 3)
+    dr0 = e_anchor[:, None, :] - q_anchor[None, :, :]   # (C, Q, 3)
+    dv = ev[:, None, :] - qv[None, :, :]                # (C, Q, 3)
+
+    a = jnp.sum(dv * dv, axis=-1)                  # (C, Q)
+    b = 2.0 * jnp.sum(dr0 * dv, axis=-1)
+    c = jnp.sum(dr0 * dr0, axis=-1) - d * d
+
+    # Solution set of f(t) <= 0 as an interval [rlo, rhi] (±inf allowed).
+    inf = jnp.asarray(jnp.inf, compute_dtype)
+
+    #  quadratic branch (a > eps): roots if disc >= 0 else empty
+    disc = b * b - 4.0 * a * c
+    sq = jnp.sqrt(jnp.maximum(disc, 0.0))
+    safe_a = jnp.where(a > _A_EPS, a, 1.0)
+    q_lo = (-b - sq) / (2.0 * safe_a)
+    q_hi = (-b + sq) / (2.0 * safe_a)
+    quad_ok = disc >= 0.0
+
+    #  linear branch (a ~ 0, |b| > eps): half-line
+    safe_b = jnp.where(jnp.abs(b) > _B_EPS, b, 1.0)
+    root = -c / safe_b
+    lin_lo = jnp.where(b > 0, -inf, root)
+    lin_hi = jnp.where(b > 0, root, inf)
+
+    #  constant branch: whole line iff c <= 0
+    const_ok = c <= 0.0
+
+    is_quad = a > _A_EPS
+    is_lin = (~is_quad) & (jnp.abs(b) > _B_EPS)
+    is_const = (~is_quad) & (~is_lin)
+
+    rlo = jnp.where(is_quad, q_lo, jnp.where(is_lin, lin_lo, -inf))
+    rhi = jnp.where(is_quad, q_hi, jnp.where(is_lin, lin_hi, inf))
+    nonempty = jnp.where(is_quad, quad_ok, jnp.where(is_lin, True, const_ok))
+
+    t_enter = jnp.maximum(rlo, lo)
+    t_exit = jnp.minimum(rhi, hi)
+    hit = t_overlap & nonempty & (t_enter <= t_exit)
+
+    zero = jnp.zeros((), compute_dtype)
+    t_enter = jnp.where(hit, t_enter, zero)
+    t_exit = jnp.where(hit, t_exit, zero)
+    return t_enter, t_exit, hit
+
+
+def interaction_classes(entries: jnp.ndarray, queries: jnp.ndarray, d) -> tuple[
+        jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Classify each interaction for the §8 performance model.
+
+    Returns boolean (C, Q) masks ``(alpha, beta, gamma)``:
+      alpha — temporal hit AND spatial hit (adds to result set);
+      beta  — temporal miss (cheap short-circuit on the paper's GPU);
+      gamma — temporal hit but spatial miss.
+    Exactly one is True per pair (alpha + beta + gamma = 1, paper §8.1.1).
+    """
+    t_enter, t_exit, hit = interaction_tile(entries, queries, d)
+    del t_enter, t_exit
+    lo = jnp.maximum(entries[:, 6][:, None], queries[:, 6][None, :])
+    hi = jnp.minimum(entries[:, 7][:, None], queries[:, 7][None, :])
+    t_overlap = lo <= hi
+    beta = ~t_overlap
+    alpha = hit
+    gamma = t_overlap & ~hit
+    return alpha, beta, gamma
+
+
+def count_hits(entries: jnp.ndarray, queries: jnp.ndarray, d) -> jnp.ndarray:
+    """Total number of result-set items for the tile (scalar int32)."""
+    _, _, hit = interaction_tile(entries, queries, d)
+    return jnp.sum(hit.astype(jnp.int32))

@@ -1,0 +1,300 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first
+# init.  This file is the ONLY place the 512-device placeholder topology is
+# created; tests and benchmarks see the real single CPU device.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. constructs the step function the shape dictates (train_step for
+     train_4k; serving prefill for prefill_32k; serve decode_step for
+     decode_32k / long_500k),
+  3. ``jax.jit(fn, in_shardings, out_shardings).lower(*ShapeDtypeStructs)``
+     — no real arrays are ever allocated,
+  4. ``lowered.compile()`` — proving the sharding is coherent and the
+     program fits,
+  5. records ``memory_analysis()`` / ``cost_analysis()`` / parsed
+     collective bytes into a JSON cell record for EXPERIMENTS.md.
+
+Also lowers the paper's own workload (``--arch galaxy-db``): the
+distributed distance-threshold query step, candidate-sharded over the full
+mesh.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b \
+        --shape train_4k --mesh single --out results/
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import functools
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+import dataclasses
+
+from repro.configs import ARCHS, SHAPES, get_arch, shape_applicable
+from repro.launch import sharding as shd
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.models import shardctx, transformer
+from repro.models.attention import kv_replication_for
+from repro.roofline import analysis as roofline
+from repro.roofline import hloparse
+from repro.train import optimizer as opt_lib
+from repro.train import step as step_lib
+
+GALAXY_DB = "galaxy-db"
+GALAXY_DB_SEGMENTS = 1 << 20          # paper-scale 10^6 entry segments
+GALAXY_DB_BATCH = 512                 # query segments per kernel invocation
+
+
+# ----------------------------------------------------------------------
+# cell construction
+# ----------------------------------------------------------------------
+def _choose_microbatches(cfg, shape, mesh) -> int:
+    """Pick grad-accumulation depth so per-device saved activations fit.
+
+    The layer scan saves its carry (the residual stream x) once per layer
+    for the backward pass: bytes ≈ L · mb_seqs · S · d_model · 2.  Budget
+    4 GB for it (v5e: 16 GB − params/opt/grads/transients).
+    """
+    from repro.launch.mesh import batch_ways
+    per_dev = max(shape.global_batch // batch_ways(mesh), 1)
+    per_layer = shape.seq_len * cfg.d_model * 2
+    # big models leave less HBM headroom for saved activations
+    budget = (2 if cfg.param_count() > 20e9 else 4) * (1 << 30)
+    mb_seqs = max(int(budget // (cfg.num_layers * per_layer)), 1)
+    mb_seqs = min(mb_seqs, per_dev)
+    micro = -(-per_dev // mb_seqs)
+    while shape.global_batch % (micro * batch_ways(mesh)) and micro < per_dev:
+        micro += 1
+    return micro
+
+
+def _lower_train(cfg, shape, mesh):
+    opt_cfg = opt_lib.AdamWConfig()
+    micro = _choose_microbatches(cfg, shape, mesh)
+    state_specs = step_lib.train_state_specs(cfg)
+    gspecs = shd.grad_specs(cfg, mesh, state_specs["params"])
+    fn = step_lib.make_train_step(cfg, opt_cfg, microbatches=micro,
+                                  remat=True, grad_specs=gspecs)
+    state_sh = shd.train_state_shardings(cfg, mesh, state_specs)
+    in_sh = shd.input_shardings(cfg, shape, mesh)
+    batch_structs = shd.input_structs(cfg, shape)
+    batch_sh = {k: in_sh[k] for k in batch_structs}
+    metrics_sh = None
+    # donate the train state: in/out buffers alias (in-place update), as a
+    # real training loop would run it.
+    jitted = jax.jit(fn, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, metrics_sh),
+                     donate_argnums=(0,))
+    with mesh:
+        return jitted.lower(state_specs, batch_structs)
+
+
+def _lower_prefill(cfg, shape, mesh):
+    pspecs = transformer.param_specs(cfg)
+    psh = shd.param_shardings(cfg, mesh, pspecs)
+    in_sh = shd.input_shardings(cfg, shape, mesh)
+    batch_structs = shd.input_structs(cfg, shape)
+    batch_sh = {k: in_sh[k] for k in batch_structs if k != "labels"}
+    batch_structs = {k: v for k, v in batch_structs.items() if k != "labels"}
+    cache_specs = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, shape.global_batch, shape.seq_len))
+    cache_sh = shd.cache_shardings(cfg, shape, mesh, cache_specs)
+
+    def fn(params, batch):
+        return transformer.prefill(cfg, params, batch, shape.seq_len,
+                                   last_only=True)
+
+    jitted = jax.jit(fn, in_shardings=(psh, batch_sh),
+                     out_shardings=(None, cache_sh))
+    with mesh:
+        return jitted.lower(pspecs, batch_structs)
+
+
+def _lower_decode(cfg, shape, mesh):
+    pspecs = transformer.param_specs(cfg)
+    psh = shd.param_shardings(cfg, mesh, pspecs)
+    cache_specs = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, shape.global_batch, shape.seq_len))
+    cache_sh = shd.cache_shardings(cfg, shape, mesh, cache_specs)
+    in_structs = shd.input_structs(cfg, shape)
+    in_sh = shd.input_shardings(cfg, shape, mesh)
+    pos_struct = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(params, cache, inputs, pos):
+        return transformer.decode_step(cfg, params, cache, inputs, pos)
+
+    jitted = jax.jit(fn, in_shardings=(psh, cache_sh, in_sh["inputs"], None),
+                     out_shardings=(None, cache_sh))
+    with mesh:
+        return jitted.lower(pspecs, cache_specs, in_structs["inputs"],
+                            pos_struct)
+
+
+def _lower_galaxy_db(mesh):
+    """The paper's engine on the production mesh.
+
+    Candidates shard over pod×data (the paper's temporal partition) and —
+    beyond-paper — queries shard over "model": the batch uses all 256/512
+    chips instead of leaving the model axis idle (§Perf 3.2: 16× fewer
+    per-device interactions)."""
+    from repro.core.distributed import make_sharded_query_fn
+    cand_axes = data_axes(mesh)                 # pod+data: temporal partition
+    fn, _ = make_sharded_query_fn(mesh, cand_axes,
+                                  qry_axes=("model",),
+                                  capacity_per_shard=4096,
+                                  use_pallas=False)
+    entries = jax.ShapeDtypeStruct((GALAXY_DB_SEGMENTS, 8), jnp.float32)
+    queries = jax.ShapeDtypeStruct((GALAXY_DB_BATCH, 8), jnp.float32)
+    d = jax.ShapeDtypeStruct((), jnp.float32)
+    with mesh:
+        return fn.lower(entries, queries, d)
+
+
+# ----------------------------------------------------------------------
+# record assembly
+# ----------------------------------------------------------------------
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+           "chips": chips, "status": "ok"}
+    t0 = time.time()
+    if arch == GALAXY_DB:
+        lowered = _lower_galaxy_db(mesh)
+        kind = "prefill"      # forward-only
+        n_active = 0
+        tokens = GALAXY_DB_SEGMENTS * GALAXY_DB_BATCH  # interactions
+    else:
+        cfg = get_arch(arch)
+        shape = SHAPES[shape_name]
+        ok, why = shape_applicable(cfg, shape)
+        if not ok:
+            rec.update(status="skip", reason=why)
+            return rec
+        kind = shape.kind
+        n_active = cfg.active_param_count()
+        tokens = (shape.global_batch * shape.seq_len
+                  if kind != "decode" else shape.global_batch)
+        # Megatron-style GQA: replicate KV heads to shard over TP; archs
+        # whose heads cannot shard (e.g. 24H/kv2, 36H MHA) switch the
+        # flash-attention layout to query-sequence sharding instead.
+        tp = mesh.shape.get("model", 1)
+        r = kv_replication_for(cfg.num_heads, cfg.num_kv_heads, tp)
+        cfg = dataclasses.replace(cfg, kv_replication=r)
+        roles = {}
+        if (cfg.num_kv_heads * r) % tp != 0:
+            roles["q_seq"] = ("model",)
+        rec["kv_replication"] = r
+        rec["attn_layout"] = "seq-sharded" if roles else "head-sharded"
+        lower = {"train": _lower_train, "prefill": _lower_prefill,
+                 "decode": _lower_decode}[kind]
+        with shardctx.activation_sharding(mesh, roles):
+            lowered = lower(cfg, shape, mesh)
+    rec["lower_s"] = round(time.time() - t0, 1)
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 1)
+
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    # raw XLA numbers (NOTE: scan/while bodies are counted ONCE here —
+    # kept for reference only; the roofline uses the trip-count-scaled
+    # parse below.  See repro.roofline.hloparse.)
+    rec["cost_analysis_raw"] = {
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_per_device": float(cost.get("bytes accessed", 0.0))}
+    rec["memory"] = {
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "peak_estimate_bytes": int(mem.argument_size_in_bytes
+                                   + mem.output_size_in_bytes
+                                   + mem.temp_size_in_bytes
+                                   - mem.alias_size_in_bytes),
+    }
+    t0 = time.time()
+    hlo = compiled.as_text()
+    costs = hloparse.analyze(hlo)
+    rec["parse_s"] = round(time.time() - t0, 1)
+    rec["cost"] = {"flops_per_device": costs.flops,
+                   "traffic_bytes_per_device": costs.traffic_bytes}
+    rec["collectives_per_device"] = costs.collective_bytes
+    if costs.warnings:
+        rec["parse_warnings"] = costs.warnings[:10]
+    terms = roofline.roofline_report(
+        per_device_flops=costs.flops,
+        per_device_bytes=costs.traffic_bytes,
+        per_device_collective_bytes=costs.collective_bytes["total"],
+        chips=chips, n_active_params=n_active, tokens=tokens, kind=kind)
+    rec["roofline"] = terms.as_dict()
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help=f"architecture id or '{GALAXY_DB}'")
+    ap.add_argument("--shape", default=None, help="shape id")
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch × shape) cell + galaxy-db")
+    ap.add_argument("--out", default=None, help="directory for JSON records")
+    args = ap.parse_args(argv)
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+        cells.append((GALAXY_DB, "query_batch"))
+    else:
+        if not args.arch:
+            ap.error("--arch required unless --all")
+        cells.append((args.arch, args.shape or "train_4k"))
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}/{shape}/{'multi' if mp else 'single'}"
+            try:
+                rec = run_cell(arch, shape, mp)
+            except Exception as e:  # a failure here is a bug in the system
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "multi" if mp else "single",
+                       "status": "fail", "error": f"{type(e).__name__}: {e}"}
+                failures += 1
+            jax.clear_caches()      # bound compile-cache memory across cells
+            line = json.dumps(rec)
+            print(f"[dryrun] {tag}: {rec['status']}", flush=True)
+            if args.out:
+                os.makedirs(args.out, exist_ok=True)
+                fname = f"{arch}__{shape}__{'multi' if mp else 'single'}.json"
+                with open(os.path.join(args.out, fname), "w") as f:
+                    f.write(line)
+            else:
+                print(line)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,231 @@
+"""Sharding rules: parameters, optimizer state, activations, decode caches.
+
+Parameter rule (FSDP + TP, uniform across architectures):
+
+* leading *stack* dimensions (layers / groups) are never sharded — they are
+  scanned over;
+* of the remaining dims, the largest is sharded over ``model`` (tensor /
+  expert parallelism) and the second largest over ``data`` (FSDP) — both
+  only if the dim is ≥ the axis size (GSPMD pads otherwise, wasting
+  memory);
+* 1-D params (norm scales, biases, A_log, …) are replicated;
+* nothing is sharded over ``pod``: cross-pod links are reserved for the
+  gradient all-reduce / result concat, so parameters replicate per pod.
+
+Batch rule: batch dim over ("pod", "data") when divisible.  Decode caches:
+KV time dim over ``model`` (heads often < 16), recurrent-state head dims
+over ``model``; for global_batch=1 long-context cells, the KV time dim
+spreads over every axis (context parallelism).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import data_axes
+
+# pytree path prefixes → number of leading stacked dims
+_STACK_DIMS = {"layers": 1, "mlstm": 2, "slstm": 1,
+               "mamba_groups": 2, "mamba_tail": 1}
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return out
+
+
+def param_spec(path, shape: tuple[int, ...], mesh: Mesh,
+               *, fsdp: bool = False) -> P:
+    """Partition spec for one parameter.
+
+    ``fsdp=False`` (live bf16 params): TP over ``model`` only — params stay
+    resident for the whole step, no per-microbatch all-gathers.
+    ``fsdp=True`` (optimizer master/m/v): additionally sharded over ``data``
+    (ZeRO-2): the update runs fully sharded and new params all-gather ONCE
+    per step.
+    """
+    names = _path_names(path)
+    stack = 0
+    for n in names:
+        if n in _STACK_DIMS:
+            stack = _STACK_DIMS[n]
+            break
+    body = shape[stack:]
+    spec: list = [None] * len(shape)
+    model_n = mesh.shape.get("model", 1)
+    data_n = mesh.shape.get("data", 1)
+    # Embedding/head tables: vocab-parallel over model (padded vocab), so
+    # logits shard over vocab and CE never all-reduces (B, S, V).
+    if any(n in ("embed", "head") for n in names) and len(body) == 2:
+        spec[stack + 0] = "model" if body[0] % model_n == 0 else None
+        if fsdp and body[1] % data_n == 0 and data_n > 1:
+            spec[stack + 1] = "data"
+        return P(*spec)
+    # MoE expert weights (E, D, F)/(E, F, D): expert-parallel over model —
+    # the generic largest-dim rule would put "model" on D and make the
+    # expert FFN contraction partial over a sharded axis (measured: 720 GB
+    # of f32 all-reduce per step on qwen3 train_4k; EXPERIMENTS §Perf).
+    if "moe" in names and len(body) == 3:
+        spec[stack + 0] = "model" if body[0] % model_n == 0 else None
+        if fsdp:
+            rest = [stack + 1, stack + 2]
+            for dim_i in sorted(rest, key=lambda i: -shape[i]):
+                if shape[dim_i] % data_n == 0 and data_n > 1:
+                    spec[dim_i] = "data"
+                    break
+        return P(*spec)
+    if len(body) >= 2:
+        order = [int(i) for i in np.argsort(body)[::-1]]   # largest first
+        model_dim = next((i for i in order
+                          if model_n > 1 and body[i] % model_n == 0
+                          and body[i] >= model_n), None)
+        if model_dim is not None:
+            spec[stack + model_dim] = "model"
+        if fsdp:
+            data_dim = next((i for i in order
+                             if i != model_dim and data_n > 1
+                             and body[i] % data_n == 0 and body[i] >= data_n),
+                            None)
+            if data_dim is not None:
+                spec[stack + data_dim] = "data"
+    return P(*spec)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, specs_tree,
+                    *, fsdp: bool = False):
+    """NamedSharding tree matching a params/opt-state ShapeDtypeStruct tree."""
+    def one(path, leaf):
+        return NamedSharding(mesh, param_spec(path, leaf.shape, mesh,
+                                              fsdp=fsdp))
+    return jax.tree_util.tree_map_with_path(one, specs_tree)
+
+
+def grad_specs(cfg: ModelConfig, mesh: Mesh, param_spec_tree):
+    """PartitionSpecs for the f32 grad accumulator (ZeRO-2: data+model)."""
+    def one(path, leaf):
+        return param_spec(path, leaf.shape, mesh, fsdp=True)
+    return jax.tree_util.tree_map_with_path(one, param_spec_tree)
+
+
+def train_state_shardings(cfg: ModelConfig, mesh: Mesh, state_specs):
+    params_sh = param_shardings(cfg, mesh, state_specs["params"], fsdp=False)
+    return {
+        "params": params_sh,
+        "opt": {
+            "m": param_shardings(cfg, mesh, state_specs["opt"]["m"],
+                                 fsdp=True),
+            "v": param_shardings(cfg, mesh, state_specs["opt"]["v"],
+                                 fsdp=True),
+            "master": param_shardings(cfg, mesh, state_specs["opt"]["master"],
+                                      fsdp=True),
+            "count": NamedSharding(mesh, P()),
+        },
+    }
+
+
+# ----------------------------------------------------------------------
+# activations / inputs
+# ----------------------------------------------------------------------
+def batch_axis(mesh: Mesh, b: int):
+    axes = data_axes(mesh)
+    ways = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    return axes if (b % max(ways, 1) == 0 and b >= ways) else None
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> dict:
+    ba = batch_axis(mesh, shape.global_batch)
+    if shape.kind == "decode":
+        tok = P(ba) if ba else P()
+        if cfg.input_mode == "embeddings":
+            tok = P(ba, None) if ba else P(None, None)
+        return {"inputs": NamedSharding(mesh, tok)}
+    if cfg.input_mode == "embeddings":
+        spec = P(ba, None, None) if ba else P(None, None, None)
+        lab = P(ba, None) if ba else P(None, None)
+        return {"embeddings": NamedSharding(mesh, spec),
+                "labels": NamedSharding(mesh, lab)}
+    spec = P(ba, None) if ba else P(None, None)
+    return {"tokens": NamedSharding(mesh, spec),
+            "labels": NamedSharding(mesh, spec)}
+
+
+def input_structs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for the step inputs (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        if cfg.input_mode == "embeddings":
+            return {"inputs": jax.ShapeDtypeStruct((b, cfg.d_model),
+                                                   jnp.dtype(cfg.dtype))}
+        return {"inputs": jax.ShapeDtypeStruct((b,), jnp.int32)}
+    if cfg.input_mode == "embeddings":
+        return {"embeddings": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                   jnp.dtype(cfg.dtype)),
+                "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+
+
+# ----------------------------------------------------------------------
+# decode caches
+# ----------------------------------------------------------------------
+def cache_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    cache_specs):
+    """Sharding tree for the decode cache ShapeDtypeStructs."""
+    b = shape.global_batch
+    ba = batch_axis(mesh, b)
+    model_n = mesh.shape.get("model", 1)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        name = names[0] if names else ""
+        shp = leaf.shape
+        spec: list = [None] * len(shp)
+        if name in ("k", "v", "attn_k", "attn_v"):
+            # (L/G, B, T, KVH, hd)
+            if ba:
+                spec[1] = ba
+                spec[2] = "model"
+            else:  # batch=1 long-context: context-parallel over everything
+                spec[2] = tuple(mesh.axis_names)
+        elif name in ("ssm", "ssm_tail"):
+            # (..., B, H, N, P): heads over model
+            if ba and b % _ways(mesh, ba) == 0:
+                spec[-4] = ba
+            if shp[-3] % model_n == 0 and model_n > 1:
+                spec[-3] = "model"
+        elif name in ("conv", "conv_tail"):
+            # (..., B, K-1, d_inner)
+            if ba:
+                spec[-3] = ba
+            if shp[-1] % model_n == 0 and model_n > 1:
+                spec[-1] = "model"
+        elif name == "mlstm":
+            # (G, m, B, H, dh, dh+1)
+            if ba:
+                spec[2] = ba
+            if shp[-2] % model_n == 0 and model_n > 1:
+                spec[-2] = "model"
+        elif name == "slstm":
+            # tuple leaves (G, B, H, dh)
+            if ba:
+                spec[1] = ba
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_specs)
+
+
+def _ways(mesh, axes) -> int:
+    if not axes:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))

@@ -1,0 +1,106 @@
+"""Training driver: config → data → train loop, fault-tolerant.
+
+Production behaviors demonstrated end-to-end (and exercised by
+examples/train_lm.py on CPU-reduced configs):
+
+* **resume-from-latest**: on start, the driver restores the newest intact
+  checkpoint under --ckpt-dir (atomic-rename checkpoints mean a killed run
+  can never leave a corrupt "latest") and replays the data pipeline purely
+  from the step counter (the pipeline is stateless-per-step).
+* **periodic + signal-triggered checkpoints**: every --ckpt-every steps,
+  plus a best-effort checkpoint on SIGTERM/SIGINT (preemption notice).
+* **elastic reshard**: checkpoints store logical arrays; restoring onto a
+  different mesh just supplies different shardings (tests cover this).
+
+Usage (CPU smoke)::
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+        --reduced --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+from repro.train import checkpoint as ckpt_lib
+from repro.train import optimizer as opt_lib
+from repro.train import step as step_lib
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the CPU-scale reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    ocfg = opt_lib.AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                               total_steps=args.steps,
+                               schedule=cfg.lr_schedule)
+    train_step = jax.jit(step_lib.make_train_step(
+        cfg, ocfg, microbatches=args.microbatches))
+    pipe = TokenPipeline(TokenPipelineConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch, seed=args.seed))
+
+    start_step = 0
+    state = step_lib.init_train_state(cfg, jax.random.PRNGKey(args.seed))
+    if args.ckpt_dir and ckpt_lib.latest_step(args.ckpt_dir) is not None:
+        state, start_step, meta = ckpt_lib.restore(args.ckpt_dir, state)
+        print(f"[train] resumed from step {start_step} ({meta})", flush=True)
+
+    stop = {"now": False}
+
+    def _handler(signum, frame):
+        stop["now"] = True
+        print(f"[train] signal {signum}: checkpoint + exit after this step",
+              flush=True)
+
+    signal.signal(signal.SIGTERM, _handler)
+    signal.signal(signal.SIGINT, _handler)
+
+    t0 = time.perf_counter()
+    tokens_done = 0
+    for step in range(start_step, args.steps):
+        batch = pipe.global_batch_at(step)
+        state, metrics = train_step(state, batch)
+        tokens_done += args.batch * args.seq
+        if (step + 1) % args.log_every == 0 or step + 1 == args.steps:
+            dt = time.perf_counter() - t0
+            print(f"[train] step {step + 1:5d} loss {float(metrics['loss']):.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"tok/s {tokens_done / max(dt, 1e-9):.0f}", flush=True)
+        should_ckpt = args.ckpt_dir and (
+            (step + 1) % args.ckpt_every == 0 or step + 1 == args.steps
+            or stop["now"])
+        if should_ckpt:
+            path = ckpt_lib.save(args.ckpt_dir, step + 1, state,
+                                 meta={"arch": cfg.name, "loss":
+                                       float(metrics["loss"])})
+            print(f"[train] checkpoint -> {path}", flush=True)
+        if stop["now"]:
+            return 0
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,2 @@
+"""Model substrate: unified decoder LM over all assigned families."""
+from repro.models import transformer  # noqa: F401

@@ -1,0 +1,176 @@
+"""Shared neural-network building blocks (pure functional JAX).
+
+No framework dependency: parameters are plain pytrees (nested dicts of
+jnp arrays), every layer is an ``init`` + ``apply`` pair.  All matmuls
+accumulate in float32 (``preferred_element_type``) regardless of the
+storage dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import shardctx
+
+
+def he_init(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape, jnp.float32)
+            / np.sqrt(fan_in)).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def groupnorm(x: jnp.ndarray, num_groups: int, eps: float = 1e-6) -> jnp.ndarray:
+    """Per-head group norm used by the xLSTM/Mamba cells (no params)."""
+    shape = x.shape
+    xf = x.astype(jnp.float32).reshape(shape[:-1] + (num_groups, -1))
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return out.reshape(shape).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# rotary position embedding
+# ----------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                          # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# dense / feed-forward
+# ----------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype) -> dict:
+    return {"w": he_init(key, (d_in, d_out), d_in, dtype)}
+
+
+def dense(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("...d,df->...f", x, params["w"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def mlp_init(key, d_model: int, d_ff: int, mlp_type: str, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    if mlp_type == "swiglu":
+        return {"gate": dense_init(ks[0], d_model, d_ff, dtype),
+                "up": dense_init(ks[1], d_model, d_ff, dtype),
+                "down": dense_init(ks[2], d_ff, d_model, dtype)}
+    return {"up": dense_init(ks[0], d_model, d_ff, dtype),
+            "down": dense_init(ks[1], d_ff, d_model, dtype)}
+
+
+def mlp(params: dict, x: jnp.ndarray, mlp_type: str) -> jnp.ndarray:
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(dense(params["gate"], x)) * dense(params["up"], x)
+    elif mlp_type == "relu2":                         # nemotron squared-ReLU
+        h = jnp.square(jax.nn.relu(dense(params["up"], x)))
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(dense(params["up"], x))
+    else:
+        raise ValueError(f"unknown mlp_type {mlp_type}")
+    h = shardctx.constrain(h, ("batch",) + (None,) * (h.ndim - 2) + ("ffn",))
+    return dense(params["down"], h)
+
+
+def mlp_param_count(d_model: int, d_ff: int, mlp_type: str) -> int:
+    return d_model * d_ff * (3 if mlp_type == "swiglu" else 2)
+
+
+# ----------------------------------------------------------------------
+# embeddings / head
+# ----------------------------------------------------------------------
+def embedding_init(key, vocab: int, d_model: int, dtype) -> dict:
+    return {"table": (jax.random.normal(key, (vocab, d_model), jnp.float32)
+                      * 0.02).astype(dtype)}
+
+
+def embed(params: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params: dict, x: jnp.ndarray, true_vocab: int | None = None
+            ) -> jnp.ndarray:
+    """Logits in f32 — (B, S, V_padded); pad columns masked to −1e30 when
+    ``true_vocab`` is given (so argmax/softmax never select them)."""
+    logits = jnp.einsum("...d,vd->...v", x, params["table"],
+                        preferred_element_type=jnp.float32)
+    vp = params["table"].shape[0]
+    if true_vocab is not None and true_vocab < vp:
+        mask = jnp.arange(vp) < true_vocab
+        logits = jnp.where(mask, logits, -1e30)
+    return logits
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token CE; logits (B, S, V) f32, labels (B, S) int32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def chunked_cross_entropy(head: dict, x: jnp.ndarray, labels: jnp.ndarray,
+                          *, chunk: int = 512,
+                          true_vocab: int | None = None) -> jnp.ndarray:
+    """Fused unembed + CE, streamed over sequence chunks.
+
+    Never materializes the full (B, S, V) logit tensor — at 256k vocab and
+    1M tokens that tensor is ~1 TB in f32, so the memory-bounded form is
+    load-bearing for the large dry-run cells.  Each chunk's logits are
+    produced, reduced to (logsumexp, gold) and discarded; ``jax.checkpoint``
+    makes the backward recompute them chunk-by-chunk too.
+    """
+    b, s, d = x.shape
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+    xc = x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+    valid = (jnp.arange(nc * chunk) < s).reshape(nc, chunk)
+
+    vp = head["table"].shape[0]
+    vocab_mask = (jnp.arange(vp) < true_vocab
+                  if true_vocab is not None and true_vocab < vp else None)
+
+    @jax.checkpoint
+    def body(total, inp):
+        xb, lb, vb = inp
+        logits = jnp.einsum("bsd,vd->bsv", xb, head["table"],
+                            preferred_element_type=jnp.float32)
+        logits = shardctx.constrain(logits, ("batch", None, "vocab"))
+        if vocab_mask is not None:
+            logits = jnp.where(vocab_mask, logits, -1e30)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        return total + jnp.sum((logz - gold) * vb[None, :]), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                            (xc, lc, valid.astype(jnp.float32)))
+    return total / (b * s)

@@ -1,0 +1,233 @@
+"""State-space / linear-RNN sequence mixing.
+
+Core primitive: :func:`chunked_linear_rnn` — the SSD-style chunked scan for
+any recurrence of the form::
+
+    state_t = a_t · state_{t-1} + scale_t · (k_t ⊗ v_t)       # (Dk, Dv)
+    y_t     = q_tᵀ · state_t
+
+with per-(token, head) scalar decay ``a_t ∈ (0, 1]``.  Mamba2 (a = exp(Δ·A),
+scale = Δ, q = C, k = B, v = x) and the xLSTM mLSTM cell (a = σ(f), scale =
+σ(i), q/k/v projections) are both instances, so they share this one
+implementation: intra-chunk work is a dense L×L masked "attention" (MXU
+friendly), inter-chunk state is a short ``lax.scan`` — O(S·L) memory, never
+O(S²), which is what makes ``long_500k`` lowering possible.
+
+All math in float32; inputs/outputs in the model dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import shardctx
+from repro.models.layers import he_init
+
+
+def chunked_linear_rnn(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                       log_a: jnp.ndarray, scale: jnp.ndarray,
+                       *, chunk: int = 128,
+                       init_state: jnp.ndarray | None = None
+                       ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Run the gated linear recurrence over a full sequence.
+
+    Args:
+      q, k: (B, S, H, Dk);  v: (B, S, H, Dv)
+      log_a: (B, S, H) — log decay per token/head (≤ 0)
+      scale: (B, S, H) — input scale per token/head
+      chunk: intra-chunk length L
+      init_state: optional (B, H, Dk, Dv) initial state
+
+    Returns: (y (B, S, H, Dv), final_state (B, H, Dk, Dv)).
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    orig_dtype = q.dtype
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        zpad = lambda x: jnp.pad(x, [(0, 0), (0, pad)] +
+                                 [(0, 0)] * (x.ndim - 2))
+        q, k, v, scale = zpad(q), zpad(k), zpad(v), zpad(scale)
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+    f32 = jnp.float32
+    qc = q.astype(f32).reshape(b, nc, chunk, h, dk)
+    kc = k.astype(f32).reshape(b, nc, chunk, h, dk)
+    vc = v.astype(f32).reshape(b, nc, chunk, h, dv)
+    la = log_a.astype(f32).reshape(b, nc, chunk, h)
+    sc = scale.astype(f32).reshape(b, nc, chunk, h)
+    if init_state is None:
+        init_state = jnp.zeros((b, h, dk, dv), f32)
+    else:
+        init_state = init_state.astype(f32)
+
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]                      # i >= j
+
+    def step(state, inp):
+        qb, kb, vb, lab, scb = inp                             # (B, L, H, ·)
+        cum = jnp.cumsum(lab, axis=1)                          # (B, L, H)
+        # intra-chunk: decay from j to i is exp(cum_i − cum_j)
+        ddiff = cum[:, :, None, :] - cum[:, None, :, :]        # (B, L, L, H)
+        decay = jnp.where(causal[None, :, :, None],
+                          jnp.exp(ddiff), 0.0)
+        scores = jnp.einsum("bihd,bjhd->bijh", qb, kb)
+        m = scores * decay * scb[:, None, :, :]
+        y_intra = jnp.einsum("bijh,bjhv->bihv", m, vb)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bihd,bhdv->bihv",
+                             qb * jnp.exp(cum)[..., None], state)
+        # new carried state
+        w = jnp.exp(cum[:, -1:, :] - cum) * scb                # (B, L, H)
+        s_chunk = jnp.einsum("bjh,bjhd,bjhv->bhdv", w, kb, vb)
+        tot = jnp.exp(cum[:, -1, :])                           # (B, H)
+        state_new = state * tot[:, :, None, None] + s_chunk
+        return state_new, y_intra + y_inter
+
+    xs = (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), la.transpose(1, 0, 2, 3),
+          sc.transpose(1, 0, 2, 3))
+    final_state, ys = jax.lax.scan(step, init_state, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, h, dv)
+    return y[:, :s].astype(orig_dtype), final_state
+
+
+def linear_rnn_decode(q, k, v, log_a, scale, state):
+    """Single-token recurrence: all of q/k/v (B, H, D·), state (B, H, Dk, Dv)."""
+    f32 = jnp.float32
+    a = jnp.exp(log_a.astype(f32))[..., None, None]
+    kv = jnp.einsum("bhd,bhv->bhdv", k.astype(f32), v.astype(f32))
+    state_new = state * a + kv * scale.astype(f32)[..., None, None]
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(f32), state_new)
+    return y.astype(q.dtype), state_new
+
+
+def reference_linear_rnn(q, k, v, log_a, scale, init_state=None):
+    """Step-by-step oracle for chunked_linear_rnn (tests)."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    state = (jnp.zeros((b, h, dk, dv), jnp.float32)
+             if init_state is None else init_state.astype(jnp.float32))
+    ys = []
+    for t in range(s):
+        y, state = linear_rnn_decode(
+            q[:, t].astype(jnp.float32), k[:, t].astype(jnp.float32),
+            v[:, t].astype(jnp.float32), log_a[:, t], scale[:, t], state)
+        ys.append(y)
+    return jnp.stack(ys, axis=1).astype(q.dtype), state
+
+
+# ----------------------------------------------------------------------
+# Mamba2 block
+# ----------------------------------------------------------------------
+MAMBA_HEADDIM = 64
+MAMBA_CONV = 4
+
+
+def mamba2_init(key, d_model: int, ssm_state: int, dtype) -> dict:
+    d_inner = 2 * d_model
+    h = d_inner // MAMBA_HEADDIM
+    ks = jax.random.split(key, 5)
+    return {
+        # in_proj → [x (d_inner), z (d_inner), B (N), C (N), dt (H)]
+        "in_proj": he_init(ks[0], (d_model, 2 * d_inner + 2 * ssm_state + h),
+                           d_model, dtype),
+        "conv": (jax.random.normal(ks[1], (MAMBA_CONV, d_inner), jnp.float32)
+                 * 0.1).astype(dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),          # A = −exp(A_log) = −1
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "out_proj": he_init(ks[2], (d_inner, d_model), d_inner, dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 state: jnp.ndarray | None = None):
+    """Depthwise causal conv over time. x (B, S, C), w (K, C).
+
+    Returns (y, new_state) where state is the trailing K−1 inputs.
+    """
+    kk = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], kk - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(kk))
+    return y, xp[:, -(kk - 1):]
+
+
+def _mamba2_inner(params, xin, ssm_state, conv_state, *, d_model, n_state,
+                  chunk, decode):
+    d_inner = 2 * d_model
+    h = d_inner // MAMBA_HEADDIM
+    proj = jnp.einsum("bsd,de->bse", xin, params["in_proj"],
+                      preferred_element_type=jnp.float32).astype(xin.dtype)
+    x, z, bmat, cmat, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + n_state,
+               2 * d_inner + 2 * n_state], axis=-1)
+    x = shardctx.constrain(x, ("batch",) + (None,) * (x.ndim - 2) + ("ffn",))
+    x, conv_state = _causal_conv(x, params["conv"], conv_state)
+    x = jax.nn.silu(x)
+    b_, s_ = x.shape[0], x.shape[1]
+    xh = x.reshape(b_, s_, h, MAMBA_HEADDIM)
+    if not decode:
+        xh = shardctx.constrain(xh, ("batch", "seq", "state", None))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"])            # (B, S, H)
+    a = -jnp.exp(params["A_log"])                        # (H,) negative
+    log_a = dt * a
+    # B/C shared across heads (single group)
+    k = jnp.broadcast_to(bmat[:, :, None, :], (b_, s_, h, n_state))
+    q = jnp.broadcast_to(cmat[:, :, None, :], (b_, s_, h, n_state))
+    if decode:
+        y, ssm_state = linear_rnn_decode(
+            q[:, 0], k[:, 0], xh[:, 0], log_a[:, 0], dt[:, 0], ssm_state)
+        y = y[:, None]
+    else:
+        y, ssm_state = chunked_linear_rnn(q, k, xh, log_a, dt, chunk=chunk,
+                                          init_state=ssm_state)
+    y = y + xh * params["D"][None, None, :, None]
+    y = y.reshape(b_, s_, d_inner)
+    y = shardctx.constrain(y, ("batch",) + (None,) * (y.ndim - 2) + ("ffn",))
+    # gated RMSNorm (Mamba2's norm-before-out)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         * params["norm_scale"].astype(jnp.float32)).astype(xin.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"],
+                     preferred_element_type=jnp.float32).astype(xin.dtype)
+    return out, ssm_state, conv_state
+
+
+def mamba2_block(params: dict, x: jnp.ndarray, *, d_model: int, n_state: int,
+                 chunk: int = 128, ssm_state: jnp.ndarray | None = None,
+                 return_conv_state: bool = False):
+    """Full-sequence Mamba2 mixing. x (B, S, D) → (y, final_ssm_state[,
+    final_conv_state])."""
+    y, ssm_state, conv_state = _mamba2_inner(params, x, ssm_state, None,
+                                             d_model=d_model, n_state=n_state,
+                                             chunk=chunk, decode=False)
+    if return_conv_state:
+        return y, ssm_state, conv_state
+    return y, ssm_state
+
+
+def mamba2_decode(params: dict, x: jnp.ndarray, ssm_state: jnp.ndarray,
+                  conv_state: jnp.ndarray, *, d_model: int, n_state: int):
+    """One-token step. x (B, 1, D); states from :func:`mamba2_init_state`."""
+    return _mamba2_inner(params, x, ssm_state, conv_state, d_model=d_model,
+                         n_state=n_state, chunk=1, decode=True)
+
+
+def mamba2_init_state(batch: int, d_model: int, n_state: int, dtype):
+    d_inner = 2 * d_model
+    h = d_inner // MAMBA_HEADDIM
+    return (jnp.zeros((batch, h, n_state, MAMBA_HEADDIM), jnp.float32),
+            jnp.zeros((batch, MAMBA_CONV - 1, d_inner), dtype))
+
+
+def mamba2_param_count(d_model: int, ssm_state: int) -> int:
+    d_inner = 2 * d_model
+    h = d_inner // MAMBA_HEADDIM
+    return (d_model * (2 * d_inner + 2 * ssm_state + h)
+            + MAMBA_CONV * d_inner + 3 * h + d_inner + d_inner * d_model)

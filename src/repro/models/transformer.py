@@ -1,0 +1,532 @@
+"""Unified decoder-only LM covering every assigned architecture family.
+
+One ``ModelConfig``-driven implementation with three block patterns:
+
+* ``attn``  — dense GQA / MoE / audio / VLM transformers.  Homogeneous
+  layers ⇒ parameters are stacked (L, …) and the layer loop is a single
+  ``lax.scan`` (compact HLO: one layer body compiled once — essential for
+  512-device dry-run compile times).
+* ``xlstm`` — repeating groups of (k−1) mLSTM + 1 sLSTM layers
+  (xLSTM[7:1] ⇒ k = 8).  Outer scan over groups, inner scan over the
+  stacked mLSTM layers.
+* ``zamba`` — Mamba2 backbone with ONE weight-shared attention+MLP block
+  applied after every ``shared_attn_every`` Mamba layers (Zamba2's shared
+  block, simplified: no per-application LoRA — noted in DESIGN.md).
+
+Everything is pure-functional: ``init_params`` → pytree, ``forward`` /
+``decode_step`` are jit-friendly, caches are explicit pytrees.  Dry-run
+code never calls ``init_params`` — it uses ``jax.eval_shape`` via
+:func:`param_specs`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, moe as moe_lib, shardctx, ssm
+from repro.models import xlstm as xlstm_lib
+from repro.models.layers import (chunked_cross_entropy, cross_entropy, embed,
+                                 embedding_init, mlp, mlp_init,
+                                 mlp_param_count, rmsnorm, rmsnorm_init,
+                                 unembed)
+
+MOE_AUX_COEF = 0.01
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ======================================================================
+# parameter construction
+# ======================================================================
+def _init_attn_layer(cfg: ModelConfig, key) -> dict:
+    k1, k2 = jax.random.split(key)
+    dt = _dtype(cfg)
+    p = {
+        "ln1": rmsnorm_init(cfg.d_model, dt),
+        "attn": attention.attn_init(k1, cfg.d_model, cfg.num_heads,
+                                    cfg.num_kv_heads, cfg.resolved_head_dim,
+                                    dt, qk_norm=cfg.qk_norm),
+        "ln2": rmsnorm_init(cfg.d_model, dt),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe_lib.moe_init(k2, cfg.d_model, cfg.d_ff,
+                                    cfg.num_experts, dt)
+    else:
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp_type, dt)
+    return p
+
+
+def _init_mamba_layer(cfg: ModelConfig, key) -> dict:
+    return {"ln": rmsnorm_init(cfg.d_model, _dtype(cfg)),
+            "mamba": ssm.mamba2_init(key, cfg.d_model, cfg.ssm_state,
+                                     _dtype(cfg))}
+
+
+def _init_mlstm_layer(cfg: ModelConfig, key) -> dict:
+    return {"ln": rmsnorm_init(cfg.d_model, _dtype(cfg)),
+            "mlstm": xlstm_lib.mlstm_init(key, cfg.d_model, cfg.num_heads,
+                                          _dtype(cfg))}
+
+
+def _init_slstm_layer(cfg: ModelConfig, key) -> dict:
+    return {"ln": rmsnorm_init(cfg.d_model, _dtype(cfg)),
+            "slstm": xlstm_lib.slstm_init(key, cfg.d_model, cfg.num_heads,
+                                          _dtype(cfg))}
+
+
+def _stack_init(fn, keys):
+    return jax.vmap(fn)(keys)
+
+
+def _xlstm_group_sizes(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(num_groups, mlstm_per_group, group_len) for the xlstm pattern."""
+    k = cfg.xlstm_slstm_every or 8
+    assert cfg.num_layers % k == 0, "xlstm layers must divide group size"
+    return cfg.num_layers // k, k - 1, k
+
+
+def _zamba_group_sizes(cfg: ModelConfig) -> tuple[int, int]:
+    """(num_groups, tail_layers): layers = groups·every + tail."""
+    every = cfg.shared_attn_every or 6
+    return cfg.num_layers // every, cfg.num_layers % every
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ke, kl, kh = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    params: dict[str, Any] = {"final_ln": rmsnorm_init(cfg.d_model, dt)}
+    params["embed"] = embedding_init(ke, cfg.padded_vocab_size,
+                                     cfg.d_model, dt)
+    if not cfg.tie_embeddings:
+        params["head"] = embedding_init(kh, cfg.padded_vocab_size,
+                                        cfg.d_model, dt)
+
+    if cfg.block_pattern == "attn":
+        keys = jax.random.split(kl, cfg.num_layers)
+        params["layers"] = _stack_init(
+            functools.partial(_init_attn_layer, cfg), keys)
+    elif cfg.block_pattern == "xlstm":
+        g, m_per, _ = _xlstm_group_sizes(cfg)
+        km, ks_ = jax.random.split(kl)
+        mkeys = jax.random.split(km, g * m_per).reshape(g, m_per, 2)
+        params["mlstm"] = jax.vmap(jax.vmap(
+            functools.partial(_init_mlstm_layer, cfg)))(mkeys)
+        skeys = jax.random.split(ks_, g)
+        params["slstm"] = _stack_init(
+            functools.partial(_init_slstm_layer, cfg), skeys)
+    elif cfg.block_pattern == "zamba":
+        g, tail = _zamba_group_sizes(cfg)
+        every = cfg.shared_attn_every or 6
+        km, kt, ka = jax.random.split(kl, 3)
+        mkeys = jax.random.split(km, g * every).reshape(g, every, 2)
+        params["mamba_groups"] = jax.vmap(jax.vmap(
+            functools.partial(_init_mamba_layer, cfg)))(mkeys)
+        if tail:
+            tkeys = jax.random.split(kt, tail)
+            params["mamba_tail"] = _stack_init(
+                functools.partial(_init_mamba_layer, cfg), tkeys)
+        params["shared_attn"] = _init_attn_layer(
+            cfg if not cfg.is_moe else cfg, ka)
+    else:
+        raise ValueError(cfg.block_pattern)
+    return params
+
+
+def param_specs(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree of the parameters — no allocation."""
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+# ======================================================================
+# forward
+# ======================================================================
+def _attn_layer_fwd(cfg: ModelConfig, layer, x, positions):
+    x = shardctx.constrain(x, ("batch", "seq", None))
+    h = attention.attention_block(
+        layer["attn"], rmsnorm(layer["ln1"], x), positions,
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+        qk_norm=cfg.qk_norm, kv_repeat=cfg.kv_replication)
+    x = x + h * cfg.residual_scale
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.is_moe:
+        h, aux = moe_lib.moe_apply(
+            layer["moe"], rmsnorm(layer["ln2"], x),
+            num_experts=cfg.num_experts,
+            experts_per_token=cfg.experts_per_token,
+            capacity_factor=cfg.capacity_factor)
+    else:
+        h = mlp(layer["mlp"], rmsnorm(layer["ln2"], x), cfg.mlp_type)
+    return x + h * cfg.residual_scale, aux
+
+
+def _trunk(cfg: ModelConfig, params, x, positions, remat: bool):
+    """Run all blocks over x (B, S, D) → (x, moe_aux_sum)."""
+    if cfg.block_pattern == "attn":
+        def body(carry, layer):
+            x, aux = carry
+            x, a = _attn_layer_fwd(cfg, layer, x, positions)
+            return (x, aux + a), None
+        if remat:
+            body = jax.checkpoint(body)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+        return x, aux
+
+    if cfg.block_pattern == "xlstm":
+        def mbody(x, layer):
+            y, _ = xlstm_lib.mlstm_block(layer["mlstm"],
+                                         rmsnorm(layer["ln"], x),
+                                         num_heads=cfg.num_heads)
+            return x + y, None
+
+        def gbody(x, group):
+            mlayers, slayer = group
+            inner = jax.checkpoint(mbody) if remat else mbody
+            x, _ = jax.lax.scan(inner, x, mlayers)
+            y, _ = xlstm_lib.slstm_block(slayer["slstm"],
+                                         rmsnorm(slayer["ln"], x),
+                                         num_heads=cfg.num_heads)
+            return x + y, None
+
+        x, _ = jax.lax.scan(gbody, x, (params["mlstm"], params["slstm"]))
+        return x, jnp.zeros((), jnp.float32)
+
+    if cfg.block_pattern == "zamba":
+        shared = params["shared_attn"]
+
+        def mbody(x, layer):
+            y, _ = ssm.mamba2_block(layer["mamba"], rmsnorm(layer["ln"], x),
+                                    d_model=cfg.d_model,
+                                    n_state=cfg.ssm_state)
+            return x + y, None
+
+        def gbody(x, group):
+            inner = jax.checkpoint(mbody) if remat else mbody
+            x, _ = jax.lax.scan(inner, x, group)
+            x, _ = _attn_layer_fwd(cfg, shared, x, positions)
+            return x, None
+
+        x, _ = jax.lax.scan(gbody, x, params["mamba_groups"])
+        if "mamba_tail" in params:
+            inner = jax.checkpoint(mbody) if remat else mbody
+            x, _ = jax.lax.scan(inner, x, params["mamba_tail"])
+        return x, jnp.zeros((), jnp.float32)
+
+    raise ValueError(cfg.block_pattern)
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict, *,
+            remat: bool = False) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """→ (logits (B, S, V) f32, moe_aux scalar)."""
+    if cfg.input_mode == "embeddings":
+        x = batch["embeddings"].astype(_dtype(cfg))
+        b, s, _ = x.shape
+    else:
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = embed(params["embed"], tokens) * cfg.embed_scale
+    x = shardctx.constrain(x, ("batch", "seq", None))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, aux = _trunk(cfg, params, x, positions, remat)
+    x = rmsnorm(params["final_ln"], x)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    return unembed(head, x, cfg.vocab_size)[..., :cfg.vocab_size], aux
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict, *,
+            remat: bool = False) -> tuple[jnp.ndarray, dict]:
+    """Training loss with streamed (never-materialized) logits."""
+    if cfg.input_mode == "embeddings":
+        x = batch["embeddings"].astype(_dtype(cfg))
+        b, s, _ = x.shape
+    else:
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = embed(params["embed"], tokens) * cfg.embed_scale
+    x = shardctx.constrain(x, ("batch", "seq", None))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, aux = _trunk(cfg, params, x, positions, remat)
+    x = rmsnorm(params["final_ln"], x)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    ce = chunked_cross_entropy(head, x, batch["labels"],
+                               true_vocab=cfg.vocab_size)
+    loss = ce + MOE_AUX_COEF * aux
+    return loss, {"ce": ce, "moe_aux": aux}
+
+
+# ======================================================================
+# prefill (serve) path: forward + cache construction
+# ======================================================================
+def prefill(cfg: ModelConfig, params: dict, batch: dict, max_len: int,
+            *, last_only: bool = False) -> tuple[jnp.ndarray, dict]:
+    """Run the prompt through the model, returning (logits (B, S, V) f32,
+    decode cache positioned after the prompt).  ``max_len`` sizes the KV
+    buffers (recurrent states are position-free).  ``last_only`` keeps only
+    the final position's logits (B, 1, V) — serving never needs more, and
+    at 32k×256k-vocab the full tensor would dominate memory."""
+    if cfg.input_mode == "embeddings":
+        x = batch["embeddings"].astype(_dtype(cfg))
+        b, s, _ = x.shape
+    else:
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = embed(params["embed"], tokens) * cfg.embed_scale
+    x = shardctx.constrain(x, ("batch", "seq", None))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    hd = cfg.resolved_head_dim
+    dt = _dtype(cfg)
+
+    def pad_kv(kv):                     # (..., S, KVH, hd) → (..., max, ·, ·)
+        pad = [(0, 0)] * kv.ndim
+        pad[-3] = (0, max_len - s)
+        return jnp.pad(kv, pad)
+
+    def attn_with_kv(layer, x):
+        h, (k, v) = attention.attention_block(
+            layer["attn"], rmsnorm(layer["ln1"], x), positions,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=hd, rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+            return_kv=True)
+        x = x + h * cfg.residual_scale
+        if cfg.is_moe:
+            h, _ = moe_lib.moe_apply(
+                layer["moe"], rmsnorm(layer["ln2"], x),
+                num_experts=cfg.num_experts,
+                experts_per_token=cfg.experts_per_token,
+                capacity_factor=cfg.capacity_factor)
+        else:
+            h = mlp(layer["mlp"], rmsnorm(layer["ln2"], x), cfg.mlp_type)
+        return x + h * cfg.residual_scale, k.astype(dt), v.astype(dt)
+
+    if cfg.block_pattern == "attn":
+        def body(x, layer):
+            x, k, v = attn_with_kv(layer, x)
+            return x, (k, v)
+        x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+        cache = {"k": pad_kv(ks), "v": pad_kv(vs)}
+
+    elif cfg.block_pattern == "xlstm":
+        def mbody(x, layer):
+            y, st = xlstm_lib.mlstm_block(layer["mlstm"],
+                                          rmsnorm(layer["ln"], x),
+                                          num_heads=cfg.num_heads)
+            return x + y, st
+
+        def gbody(x, group):
+            mlayers, slayer = group
+            x, mst = jax.lax.scan(mbody, x, mlayers)
+            y, scarry = xlstm_lib.slstm_block(slayer["slstm"],
+                                              rmsnorm(slayer["ln"], x),
+                                              num_heads=cfg.num_heads)
+            return x + y, (mst, scarry)
+        x, (mst, sst) = jax.lax.scan(gbody, x,
+                                     (params["mlstm"], params["slstm"]))
+        cache = {"mlstm": mst, "slstm": sst}
+
+    elif cfg.block_pattern == "zamba":
+        def mbody(x, layer):
+            y, st, cv = ssm.mamba2_block(layer["mamba"],
+                                         rmsnorm(layer["ln"], x),
+                                         d_model=cfg.d_model,
+                                         n_state=cfg.ssm_state,
+                                         return_conv_state=True)
+            return x + y, (st, cv)
+
+        def gbody(x, group):
+            x, (st, cv) = jax.lax.scan(mbody, x, group)
+            x, k, v = attn_with_kv(params["shared_attn"], x)
+            return x, (st, cv, k, v)
+        x, (st, cv, ks, vs) = jax.lax.scan(gbody, x, params["mamba_groups"])
+        cache = {"ssm": st, "conv": cv,
+                 "attn_k": pad_kv(ks), "attn_v": pad_kv(vs)}
+        if "mamba_tail" in params:
+            x, (ts, tc) = jax.lax.scan(mbody, x, params["mamba_tail"])
+            cache["ssm_tail"] = ts
+            cache["conv_tail"] = tc
+    else:
+        raise ValueError(cfg.block_pattern)
+
+    if last_only:
+        x = x[:, -1:]
+    x = rmsnorm(params["final_ln"], x)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    return unembed(head, x, cfg.vocab_size)[..., :cfg.vocab_size], cache
+
+
+# ======================================================================
+# decode (serve) path
+# ======================================================================
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Decode cache pytree for one sequence-batch."""
+    dt = _dtype(cfg)
+    hd = cfg.resolved_head_dim
+    if cfg.block_pattern == "attn":
+        shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, hd)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    if cfg.block_pattern == "xlstm":
+        g, m_per, _ = _xlstm_group_sizes(cfg)
+        dh = cfg.d_model // cfg.num_heads
+        return {
+            "mlstm": jnp.zeros((g, m_per, batch, cfg.num_heads, dh, dh + 1),
+                               jnp.float32),
+            "slstm": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (g,) + x.shape),
+                xlstm_lib.slstm_init_state(batch, cfg.d_model,
+                                           cfg.num_heads)),
+        }
+    if cfg.block_pattern == "zamba":
+        g, tail = _zamba_group_sizes(cfg)
+        every = cfg.shared_attn_every or 6
+        s0, c0 = ssm.mamba2_init_state(batch, cfg.d_model, cfg.ssm_state, dt)
+        cache = {
+            "ssm": jnp.broadcast_to(s0, (g, every) + s0.shape),
+            "conv": jnp.broadcast_to(c0, (g, every) + c0.shape),
+            "attn_k": jnp.zeros((g, batch, max_len, cfg.num_kv_heads, hd), dt),
+            "attn_v": jnp.zeros((g, batch, max_len, cfg.num_kv_heads, hd), dt),
+        }
+        if tail:
+            cache["ssm_tail"] = jnp.broadcast_to(s0, (tail,) + s0.shape)
+            cache["conv_tail"] = jnp.broadcast_to(c0, (tail,) + c0.shape)
+        return cache
+    raise ValueError(cfg.block_pattern)
+
+
+def _attn_layer_decode(cfg, layer, x, kc, vc, pos):
+    h, kv = attention.attention_decode(
+        layer["attn"], rmsnorm(layer["ln1"], x), {"k": kc, "v": vc}, pos,
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+        qk_norm=cfg.qk_norm)
+    x = x + h * cfg.residual_scale
+    if cfg.is_moe:
+        h, _ = moe_lib.moe_apply(
+            layer["moe"], rmsnorm(layer["ln2"], x),
+            num_experts=cfg.num_experts,
+            experts_per_token=cfg.experts_per_token,
+            capacity_factor=cfg.capacity_factor)
+    else:
+        h = mlp(layer["mlp"], rmsnorm(layer["ln2"], x), cfg.mlp_type)
+    return x + h * cfg.residual_scale, kv["k"], kv["v"]
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                inputs: jnp.ndarray, pos) -> tuple[jnp.ndarray, dict]:
+    """One-token decode.
+
+    inputs: (B,) int32 tokens, or (B, D) embeddings for ``embeddings`` mode.
+    pos: scalar int32 — current position (KV written there; recurrent
+    states are position-free).  Returns (logits (B, V) f32, new cache).
+    """
+    if cfg.input_mode == "embeddings":
+        x = inputs[:, None, :].astype(_dtype(cfg))
+    else:
+        x = embed(params["embed"], inputs[:, None]) * cfg.embed_scale
+
+    if cfg.block_pattern == "attn":
+        def body(x, inp):
+            layer, kc, vc = inp
+            x, k_new, v_new = _attn_layer_decode(cfg, layer, x, kc, vc, pos)
+            return x, (k_new, v_new)
+        x, (ks, vs) = jax.lax.scan(body, x,
+                                   (params["layers"], cache["k"], cache["v"]))
+        cache = {"k": ks, "v": vs}
+
+    elif cfg.block_pattern == "xlstm":
+        def mbody(x, inp):
+            layer, st = inp
+            y, st = xlstm_lib.mlstm_decode(layer["mlstm"],
+                                           rmsnorm(layer["ln"], x), st,
+                                           num_heads=cfg.num_heads)
+            return x + y, st
+
+        def gbody(x, inp):
+            mlayers, mstates, slayer, scarry = inp
+            x, mstates = jax.lax.scan(mbody, x, (mlayers, mstates))
+            y, scarry = xlstm_lib.slstm_decode(
+                slayer["slstm"], rmsnorm(slayer["ln"], x), scarry,
+                num_heads=cfg.num_heads)
+            return x + y, (mstates, scarry)
+
+        x, (mst, sst) = jax.lax.scan(
+            gbody, x, (params["mlstm"], cache["mlstm"], params["slstm"],
+                       cache["slstm"]))
+        cache = {"mlstm": mst, "slstm": sst}
+
+    elif cfg.block_pattern == "zamba":
+        shared = params["shared_attn"]
+
+        def mbody(x, inp):
+            layer, st, cv = inp
+            y, st, cv = ssm.mamba2_decode(layer["mamba"],
+                                          rmsnorm(layer["ln"], x), st, cv,
+                                          d_model=cfg.d_model,
+                                          n_state=cfg.ssm_state)
+            return x + y, (st, cv)
+
+        def gbody(x, inp):
+            glayers, gssm, gconv, kc, vc = inp
+            x, (gssm, gconv) = jax.lax.scan(mbody, x, (glayers, gssm, gconv))
+            x, k_new, v_new = _attn_layer_decode(cfg, shared, x, kc, vc, pos)
+            return x, (gssm, gconv, k_new, v_new)
+
+        x, (ssm_s, conv_s, ks, vs) = jax.lax.scan(
+            gbody, x, (params["mamba_groups"], cache["ssm"], cache["conv"],
+                       cache["attn_k"], cache["attn_v"]))
+        new_cache = {"ssm": ssm_s, "conv": conv_s, "attn_k": ks, "attn_v": vs}
+        if "mamba_tail" in params:
+            x, (ts, tc) = jax.lax.scan(
+                mbody, x, (params["mamba_tail"], cache["ssm_tail"],
+                           cache["conv_tail"]))
+            new_cache["ssm_tail"] = ts
+            new_cache["conv_tail"] = tc
+        cache = new_cache
+    else:
+        raise ValueError(cfg.block_pattern)
+
+    x = rmsnorm(params["final_ln"], x)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    return unembed(head, x, cfg.vocab_size)[:, 0, :cfg.vocab_size], cache
+
+
+# ======================================================================
+# parameter counting (for roofline MODEL_FLOPS)
+# ======================================================================
+def _attn_layer_params(cfg: ModelConfig, active_only: bool) -> int:
+    hd = cfg.resolved_head_dim
+    n = (cfg.d_model * cfg.num_heads * hd                # wq
+         + 2 * cfg.d_model * cfg.num_kv_heads * hd       # wk, wv
+         + cfg.num_heads * hd * cfg.d_model)             # wo
+    if cfg.is_moe:
+        experts = cfg.experts_per_token if active_only else cfg.num_experts
+        n += experts * 3 * cfg.d_model * cfg.d_ff + cfg.d_model * cfg.num_experts
+    else:
+        n += mlp_param_count(cfg.d_model, cfg.d_ff, cfg.mlp_type)
+    return n
+
+
+def param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    d = cfg.d_model
+    n = cfg.padded_vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    if cfg.block_pattern == "attn":
+        n += cfg.num_layers * _attn_layer_params(cfg, active_only)
+    elif cfg.block_pattern == "xlstm":
+        g, m_per, k = _xlstm_group_sizes(cfg)
+        dh = d // cfg.num_heads
+        mlstm = 5 * d * d + 2 * cfg.num_heads * d
+        slstm = 4 * d * d + cfg.num_heads * dh * 4 * dh + d * d
+        n += g * (m_per * mlstm + slstm)
+    elif cfg.block_pattern == "zamba":
+        g, tail = _zamba_group_sizes(cfg)
+        every = cfg.shared_attn_every or 6
+        n += (g * every + tail) * ssm.mamba2_param_count(d, cfg.ssm_state)
+        n += _attn_layer_params(cfg, active_only)   # shared: counted once
+    return n

@@ -1,0 +1,189 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM is a gated linear recurrence over an outer-product (matrix) memory::
+
+    C_t = f_t · C_{t−1} + i_t · (k_t ⊗ v_t)        # (Dh, Dh) per head
+    n_t = f_t · n_{t−1} + i_t · k_t                # normalizer
+    y_t = (q_tᵀ C_t) / max(|q_tᵀ n_t|, 1)
+
+— exactly the :func:`repro.models.ssm.chunked_linear_rnn` recurrence with
+scalar-per-head decay, so the chunked SSD machinery is reused (the
+normalizer rides along as one extra value channel).  Hardware adaptation
+note (recorded in DESIGN.md): the paper's exponential input gate with a
+running max-stabilizer is replaced by sigmoid gates — same matrix-memory
+structure and identical compute/communication shape, numerically safe
+without carrying a per-head max across chunks.
+
+sLSTM has a genuine nonlinear recurrence (recurrent weights R act on
+h_{t−1}), so it cannot be parallelized over time; it is a ``lax.scan``
+with block-diagonal (per-head) recurrent matrices, faithful to the paper's
+exponential gating with the m_t stabilizer state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import shardctx
+from repro.models.layers import groupnorm, he_init
+from repro.models.ssm import chunked_linear_rnn, linear_rnn_decode
+
+
+# ----------------------------------------------------------------------
+# mLSTM
+# ----------------------------------------------------------------------
+def mlstm_init(key, d_model: int, num_heads: int, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    dh = d_model // num_heads
+    return {
+        "wq": he_init(ks[0], (d_model, d_model), d_model, dtype),
+        "wk": he_init(ks[1], (d_model, d_model), d_model, dtype),
+        "wv": he_init(ks[2], (d_model, d_model), d_model, dtype),
+        "wif": he_init(ks[3], (d_model, 2 * num_heads), d_model, jnp.float32),
+        "wgate": he_init(ks[4], (d_model, d_model), d_model, dtype),
+        "wo": he_init(ks[5], (d_model, d_model), d_model, dtype),
+        "f_bias": jnp.full((num_heads,), 3.0, jnp.float32),  # start remembering
+    }
+
+
+def _mlstm_qkvif(params, x, num_heads):
+    b, s, d = x.shape
+    dh = d // num_heads
+    q = jnp.einsum("bsd,de->bse", x, params["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("bsd,de->bse", x, params["wk"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsd,de->bse", x, params["wv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    q = q.reshape(b, s, num_heads, dh) / jnp.sqrt(dh).astype(x.dtype)
+    k = k.reshape(b, s, num_heads, dh)
+    v = v.reshape(b, s, num_heads, dh)
+    # few heads (4): shard the key/query feature dim over "model" instead
+    q = shardctx.constrain(q, ("batch", "seq", None, "state"))
+    k = shardctx.constrain(k, ("batch", "seq", None, "state"))
+    gif = jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), params["wif"])
+    i_raw, f_raw = jnp.split(gif, 2, axis=-1)
+    log_a = jax.nn.log_sigmoid(f_raw + params["f_bias"])     # (B, S, H)
+    scale = jax.nn.sigmoid(i_raw)
+    return q, k, v, log_a, scale
+
+
+def mlstm_block(params: dict, x: jnp.ndarray, *, num_heads: int,
+                chunk: int = 128, state: jnp.ndarray | None = None):
+    """x (B, S, D) → (y (B, S, D), final_state (B, H, Dh, Dh+1))."""
+    b, s, d = x.shape
+    dh = d // num_heads
+    q, k, v, log_a, scale = _mlstm_qkvif(params, x, num_heads)
+    v_aug = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], -1)
+    y_aug, state = chunked_linear_rnn(q, k, v_aug, log_a, scale, chunk=chunk,
+                                      init_state=state)
+    y, n = y_aug[..., :dh], y_aug[..., dh:]
+    y = y / jnp.maximum(jnp.abs(n), 1.0)
+    y = groupnorm(y.reshape(b, s, d), num_heads)
+    gate = jax.nn.silu(jnp.einsum("bsd,de->bse", x, params["wgate"],
+                                  preferred_element_type=jnp.float32)
+                       ).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y * gate, params["wo"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, state
+
+
+def mlstm_decode(params: dict, x: jnp.ndarray, state: jnp.ndarray,
+                 *, num_heads: int):
+    """One-token step; x (B, 1, D), state (B, H, Dh, Dh+1)."""
+    b, _, d = x.shape
+    dh = d // num_heads
+    q, k, v, log_a, scale = _mlstm_qkvif(params, x, num_heads)
+    v_aug = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], -1)
+    y_aug, state = linear_rnn_decode(q[:, 0], k[:, 0], v_aug[:, 0],
+                                     log_a[:, 0], scale[:, 0], state)
+    y, n = y_aug[..., :dh], y_aug[..., dh:]
+    y = (y / jnp.maximum(jnp.abs(n), 1.0)).reshape(b, 1, d)
+    y = groupnorm(y, num_heads)
+    gate = jax.nn.silu(jnp.einsum("bsd,de->bse", x, params["wgate"],
+                                  preferred_element_type=jnp.float32)
+                       ).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y * gate, params["wo"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, state
+
+
+def mlstm_init_state(batch: int, d_model: int, num_heads: int):
+    dh = d_model // num_heads
+    return jnp.zeros((batch, num_heads, dh, dh + 1), jnp.float32)
+
+
+# ----------------------------------------------------------------------
+# sLSTM
+# ----------------------------------------------------------------------
+def slstm_init(key, d_model: int, num_heads: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    dh = d_model // num_heads
+    return {
+        "w": he_init(ks[0], (d_model, 4 * d_model), d_model, dtype),
+        # block-diagonal recurrent weights, one (Dh, 4Dh) block per head
+        "r": he_init(ks[1], (num_heads, dh, 4 * dh), dh, jnp.float32),
+        "wo": he_init(ks[2], (d_model, d_model), d_model, dtype),
+        "f_bias": jnp.full((num_heads, dh), 3.0, jnp.float32),
+    }
+
+
+def slstm_cell(params, xw_t, carry, num_heads):
+    """One timestep. xw_t: (B, 4·D) input pre-activations (f32)."""
+    h, c, n, m = carry                                  # each (B, H, Dh)
+    b = h.shape[0]
+    dh = h.shape[-1]
+    rec = jnp.einsum("bhd,hde->bhe", h, params["r"])    # (B, H, 4Dh)
+    pre = xw_t.reshape(b, num_heads, 4 * dh) + rec
+    z_r, i_r, f_r, o_r = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z_r)
+    o = jax.nn.sigmoid(o_r)
+    log_f = jax.nn.log_sigmoid(f_r + params["f_bias"])
+    log_i = i_r
+    m_new = jnp.maximum(log_f + m, log_i)               # stabilizer state
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = f_s * n + i_s
+    h_new = o * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_block(params: dict, x: jnp.ndarray, *, num_heads: int,
+                carry=None):
+    """x (B, S, D) → (y, final_carry).  Sequential lax.scan over time."""
+    b, s, d = x.shape
+    dh = d // num_heads
+    xw = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                    params["w"].astype(jnp.float32))       # (B, S, 4D)
+    if carry is None:
+        carry = slstm_init_state(b, d, num_heads)
+
+    def step(cr, xw_t):
+        cr = slstm_cell(params, xw_t, cr, num_heads)
+        return cr, cr[0]
+
+    carry, hs = jax.lax.scan(step, carry, xw.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    y = groupnorm(y, num_heads)
+    out = jnp.einsum("bse,ed->bsd", y, params["wo"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, carry
+
+
+def slstm_decode(params: dict, x: jnp.ndarray, carry, *, num_heads: int):
+    b, _, d = x.shape
+    xw = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                    params["w"].astype(jnp.float32))[:, 0]
+    carry = slstm_cell(params, xw, carry, num_heads)
+    y = carry[0].reshape(b, 1, d).astype(x.dtype)
+    y = groupnorm(y, num_heads)
+    out = jnp.einsum("bse,ed->bsd", y, params["wo"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, carry
+
+
+def slstm_init_state(batch: int, d_model: int, num_heads: int):
+    dh = d_model // num_heads
+    z = jnp.zeros((batch, num_heads, dh), jnp.float32)
+    return (z, z.copy(), z.copy(), jnp.full_like(z, -1e30))

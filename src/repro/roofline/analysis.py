@@ -1,0 +1,143 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+Terms (per the task's formulas, TPU v5e targets)::
+
+    compute    = HLO_FLOPs        / (chips × peak_FLOP/s)
+    memory     = HLO_bytes        / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw)
+
+``compiled.cost_analysis()`` on an SPMD-partitioned module reports
+**per-device** flops/bytes (verified empirically: a (64,128)×(128,256)
+matmul on a (4,2) mesh reports 1/8 of the global FLOPs).  We therefore
+define HLO_FLOPs = per_device × chips so the formulas above hold as
+written; the terms then equal per_device_quantity / per_chip_rate.
+
+collective_bytes is not in cost_analysis: we parse the per-device HLO
+(``compiled.as_text()``), build a name → output-shape map over all
+instructions, and for every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute sum the **operand** sizes (falling back to
+the output size when operands are unresolvable).  These are per-device
+bytes; ×chips gives the global collective_bytes the formula divides back
+down.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# TPU v5e targets (given by the task).
+HW = {
+    "peak_flops": 197e12,     # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,          # bytes/s per chip
+    "link_bw": 50e9,          # bytes/s per ICI link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*?\)|\w+\[[^\]]*\]\S*)\s+"
+    r"([\w\-]+)(?:-start|-done)?\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of an HLO shape string (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-device operand bytes per collective kind (+ 'total')."""
+    shapes: dict[str, str] = {}
+    colls: list[tuple[str, str, str]] = []   # (kind, out_shape, args_str)
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape, op = m.group(1), m.group(2), m.group(3)
+        shapes[name] = shape
+        for kind in _COLLECTIVES:
+            if op == kind or op == kind + "-start":
+                args = line[m.end():]
+                depth = 1
+                for i, ch in enumerate(args):
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            args = args[:i]
+                            break
+                colls.append((kind, shape, args))
+                break
+    out = {k: 0 for k in _COLLECTIVES}
+    for kind, shape, args in colls:
+        operands = _OPERAND_RE.findall(args)
+        b = sum(shape_bytes(shapes[o]) for o in operands if o in shapes)
+        if b == 0:
+            b = shape_bytes(shape)       # fallback: output size
+        out[kind] += b
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def model_flops(n_active_params: int, tokens: int, kind: str) -> float:
+    """MODEL_FLOPS: 6·N·D train (fwd+bwd), 2·N·D prefill/decode forward."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active_params * tokens
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    hlo_flops_global: float
+    hlo_bytes_global: float
+    collective_bytes_global: float
+    model_flops: float
+    useful_flops_ratio: float    # MODEL_FLOPS / HLO_FLOPs (global)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline_report(*, per_device_flops: float, per_device_bytes: float,
+                    per_device_collective_bytes: float, chips: int,
+                    n_active_params: int, tokens: int, kind: str,
+                    hw: dict = HW) -> RooflineTerms:
+    hlo_flops = per_device_flops * chips
+    hlo_bytes = per_device_bytes * chips
+    coll_bytes = per_device_collective_bytes * chips
+    compute_s = hlo_flops / (chips * hw["peak_flops"])
+    memory_s = hlo_bytes / (chips * hw["hbm_bw"])
+    collective_s = coll_bytes / (chips * hw["link_bw"])
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(n_active_params, tokens, kind)
+    return RooflineTerms(
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck,
+        hlo_flops_global=hlo_flops, hlo_bytes_global=hlo_bytes,
+        collective_bytes_global=coll_bytes, model_flops=mf,
+        useful_flops_ratio=(mf / hlo_flops if hlo_flops else 0.0))

@@ -1,0 +1,1 @@
+from repro.serve import batcher, engine  # noqa: F401

@@ -1,0 +1,75 @@
+"""Serving engine: jitted prefill + decode loop over the unified LM.
+
+Prompt lengths are bucketed to powers of two (same Θ-amortization trick as
+the query engine's shape bucketing — one compile per bucket, not per
+length).  Decode positions are traced scalars, so the whole generation
+loop reuses a single compiled step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+
+def _bucket(n: int, lo: int = 16) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512,
+                 pad_id: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.pad_id = pad_id
+        self._prefill = jax.jit(
+            functools.partial(transformer.prefill, cfg),
+            static_argnames=("max_len",))
+        self._decode = jax.jit(functools.partial(transformer.decode_step, cfg))
+
+    # ------------------------------------------------------------------
+    def generate(self, prompts: list[list[int]], max_new_tokens: int,
+                 *, temperature: float = 0.0, seed: int = 0
+                 ) -> list[list[int]]:
+        """Batched greedy/temperature generation.
+
+        The whole batch prefills at the bucketed max prompt length (left-
+        padded) and decodes in lockstep; per-sequence prompt offsets are
+        honored by masking (shorter prompts start generating from their own
+        last token).
+        """
+        cfg = self.cfg
+        b = len(prompts)
+        lens = np.array([len(p) for p in prompts])
+        s = _bucket(int(lens.max()))
+        toks = np.full((b, s), self.pad_id, np.int32)
+        for i, p in enumerate(prompts):        # right-aligned ⇒ uniform pos
+            toks[i, s - len(p):] = p
+        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)},
+                                      max_len=s + max_new_tokens)
+        key = jax.random.PRNGKey(seed)
+        out = [list(p) for p in prompts]
+        last = logits[:, -1]                   # (B, V)
+        pos = s
+        for t in range(max_new_tokens):
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, last / temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(last, axis=-1)
+            nxt = nxt.astype(jnp.int32)
+            for i in range(b):
+                out[i].append(int(nxt[i]))
+            last, cache = self._decode(self.params, cache, nxt,
+                                       jnp.int32(pos))
+            pos += 1
+        return out

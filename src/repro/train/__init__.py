@@ -1,0 +1,1 @@
+from repro.train import checkpoint, compress, optimizer, step  # noqa: F401

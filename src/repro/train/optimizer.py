@@ -1,0 +1,103 @@
+"""AdamW with f32 master weights + LR schedules (cosine, WSD).
+
+WSD (warmup–stable–decay) is MiniCPM's schedule (arXiv:2404.06395): linear
+warmup, long constant plateau, short exponential-ish decay tail — included
+because minicpm-2b is an assigned architecture that names it.
+
+State layout: ``{"m", "v", "master", "count"}`` where ``master`` is the f32
+copy of the (possibly bf16) parameters; the update returns new bf16 params
+cast from the master, so repeated training is invariant to the storage
+dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"       # cosine | wsd | constant
+    wsd_decay_frac: float = 0.1    # last 10% of steps decay
+
+
+def schedule_fn(cfg: AdamWConfig) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def fn(count):
+        step = count.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        if cfg.schedule == "constant":
+            return cfg.lr * warm
+        if cfg.schedule == "cosine":
+            frac = jnp.clip((step - cfg.warmup_steps)
+                            / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                            0.0, 1.0)
+            return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        if cfg.schedule == "wsd":
+            decay_start = cfg.total_steps * (1.0 - cfg.wsd_decay_frac)
+            frac = jnp.clip((step - decay_start)
+                            / jnp.maximum(cfg.total_steps - decay_start, 1),
+                            0.0, 1.0)
+            # stable plateau, then linear-in-sqrt decay tail
+            return cfg.lr * warm * (1.0 - frac) ** 0.5
+        raise ValueError(cfg.schedule)
+    return fn
+
+
+def init_state(params) -> dict:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "master": jax.tree.map(f32, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state
+                  ) -> tuple[dict, dict, dict]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    lr = schedule_fn(cfg)(count)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m2 / (1 - cfg.b1 ** count.astype(jnp.float32))
+        vhat = v2 / (1 - cfg.b2 ** count.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * master
+        master2 = master - lr * delta
+        return m2, v2, master2
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_w = jax.tree.leaves(state["master"])
+    out = [upd(g, m, v, w) for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w)]
+    new_m = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_master = jax.tree.unflatten(treedef, [o[2] for o in out])
+    dtypes = jax.tree.map(lambda p: p.dtype, params)
+    new_params = jax.tree.map(lambda w, dt: w.astype(dt), new_master, dtypes)
+    new_state = {"m": new_m, "v": new_v, "master": new_master, "count": count}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,153 @@
+"""Batch-generation algorithms: Fig. 2 arithmetic + partition invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import random_segments
+from repro.core import batching
+from repro.core.index import TemporalBinIndex
+from repro.core.segments import SegmentArray
+
+
+def _fig2_world():
+    """Reconstruction of the paper's Fig. 2: 4 entry bins with 6/3/3/2
+    segments and temporal extents chosen so that 10-query batches overlap
+    bins exactly as in the figure (120/60 interactions for batches 2/3,
+    300 when merged — the §4 worked arithmetic)."""
+    # bins over [0, 12): width 3. Entry segments per bin, extents inside bin.
+    counts = [6, 3, 3, 2]
+    ts, te = [], []
+    for b, c in enumerate(counts):
+        for i in range(c):
+            t0 = 3.0 * b + 0.1 + 0.2 * i
+            ts.append(t0)
+            te.append(3.0 * b + 2.9)         # stays within its bin
+    ts, te = np.array(ts, np.float32), np.array(te, np.float32)
+    n = len(ts)
+    z = np.zeros(n, np.float32)
+    db = SegmentArray(z, z.copy(), z.copy(), z.copy(), z.copy(), z.copy(),
+                      ts, te, np.arange(n, dtype=np.int32),
+                      np.zeros(n, np.int32))
+    idx = TemporalBinIndex.build(db, num_bins=4)
+    return db, idx
+
+
+def _queries(ts_list):
+    ts = np.asarray(ts_list, np.float32)
+    n = len(ts)
+    z = np.zeros(n, np.float32)
+    return SegmentArray(z, z.copy(), z.copy(), z.copy(), z.copy(), z.copy(),
+                        ts, ts + 0.05, np.arange(n, dtype=np.int32),
+                        np.zeros(n, np.int32))
+
+
+class TestFig2Arithmetic:
+    def test_batch_interaction_counts(self):
+        """Batch 2 spans bins B0–B2 ⇒ 10·(6+3+3) = 120; batch 3 spans
+        B1–B2 ⇒ 10·(3+3) = 60; merged 20-batch ⇒ 20·(6+3+3) = 240… the
+        paper's text example merges batches overlapping B0..B2 for 300 with
+        an extra bin; we verify the structural rule numInts = |Q|·|E|."""
+        db, idx = _fig2_world()
+        q2 = _queries(np.linspace(2.0, 8.0, 10))       # overlaps B0,B1,B2
+        plan = batching.periodic(idx, q2, 10)
+        assert plan.num_batches == 1
+        assert plan.batches[0].num_ints == 10 * (6 + 3 + 3)
+
+        q3 = _queries(np.linspace(4.0, 8.0, 10))       # overlaps B1,B2
+        plan3 = batching.periodic(idx, q3, 10)
+        assert plan3.batches[0].num_ints == 10 * (3 + 3)
+
+        merged = SegmentArray.concatenate([q2, q3]).sort_by_tstart()
+        planm = batching.periodic(idx, merged, 20)
+        assert planm.batches[0].num_ints == 20 * (6 + 3 + 3)
+        # merging created 300−120−60 = 60·? extra wasteful interactions
+        extra = planm.total_interactions - (plan.total_interactions
+                                            + plan3.total_interactions)
+        assert extra == 20 * 12 - 120 - 60
+
+    def test_free_merge_detected_by_greedy(self):
+        """Two batches overlapping the same bins merge for free (paper §6:
+        'no extra wasteful interactions will be generated')."""
+        db, idx = _fig2_world()
+        q = _queries(np.linspace(0.2, 2.0, 20))        # all within B0
+        plan = batching.greedysetsplit_min(idx, q, bound=1)
+        assert plan.num_batches == 1                   # all free merges
+        assert plan.total_interactions == 20 * 6
+
+
+ALGO_CASES = [
+    ("periodic", {"s": 16}),
+    ("setsplit-fixed", {"num_batches": 8}),
+    ("setsplit-max", {"max_size": 32}),
+    ("setsplit-minmax", {"min_size": 4, "max_size": 32}),
+    ("greedysetsplit-min", {"bound": 8}),
+    ("greedysetsplit-max", {"bound": 32}),
+]
+
+
+class TestPartitionInvariants:
+    @pytest.mark.parametrize("name,kw", ALGO_CASES)
+    def test_contiguous_exhaustive_partition(self, name, kw):
+        rng = np.random.default_rng(1)
+        db = random_segments(rng, 400)
+        queries = random_segments(rng, 97)
+        idx = TemporalBinIndex.build(db, num_bins=64)
+        plan = batching.ALGORITHMS[name](idx, queries, **kw)
+        # batches tile [0, len) contiguously in order
+        expect = 0
+        for b in plan.batches:
+            assert b.q_first == expect
+            assert b.q_last >= b.q_first
+            expect = b.q_last + 1
+        assert expect == len(queries)
+
+    def test_setsplit_fixed_reaches_target(self):
+        rng = np.random.default_rng(2)
+        db = random_segments(rng, 300)
+        queries = random_segments(rng, 60)
+        idx = TemporalBinIndex.build(db, num_bins=32)
+        plan = batching.setsplit_fixed(idx, queries, 7)
+        assert plan.num_batches == 7
+
+    def test_setsplit_minmax_respects_min(self):
+        rng = np.random.default_rng(3)
+        db = random_segments(rng, 300)
+        queries = random_segments(rng, 80)
+        idx = TemporalBinIndex.build(db, num_bins=32)
+        plan = batching.setsplit_minmax(idx, queries, 5, 40)
+        if plan.num_batches > 1:
+            assert plan.sizes().min() >= 5
+
+    def test_greedy_min_respects_bound(self):
+        rng = np.random.default_rng(4)
+        db = random_segments(rng, 300)
+        queries = random_segments(rng, 80)
+        idx = TemporalBinIndex.build(db, num_bins=32)
+        plan = batching.greedysetsplit_min(idx, queries, 6)
+        # every batch except possibly the last reaches the bound
+        assert all(s >= 6 for s in plan.sizes()[:-1])
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 1000), s=st.integers(1, 50))
+    def test_periodic_num_ints_consistent(self, seed, s):
+        """num_ints recorded per batch equals size × index candidates."""
+        rng = np.random.default_rng(seed)
+        db = random_segments(rng, 200)
+        queries = random_segments(rng, 41)
+        idx = TemporalBinIndex.build(db, num_bins=16)
+        plan = batching.periodic(idx, queries, s)
+        for b in plan.batches:
+            qt1 = float(queries.te[b.q_first:b.q_last + 1].max())
+            assert b.qt1 == pytest.approx(qt1)
+            assert b.num_ints == b.size * idx.num_candidates(b.qt0, b.qt1)
+
+    def test_merging_never_decreases_interactions(self):
+        """Fig. 3's monotonicity: larger periodic batches ⇒ ≥ interactions."""
+        rng = np.random.default_rng(5)
+        db = random_segments(rng, 500)
+        queries = random_segments(rng, 96)
+        idx = TemporalBinIndex.build(db, num_bins=64)
+        totals = [batching.periodic(idx, queries, s).total_interactions
+                  for s in (1, 4, 16, 48, 96)]
+        assert all(a <= b for a, b in zip(totals, totals[1:]))

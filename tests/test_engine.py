@@ -1,0 +1,117 @@
+"""End-to-end query engine vs brute force, across batching algorithms."""
+import numpy as np
+import pytest
+
+from conftest import random_segments
+from repro.core import batching, brute_force
+from repro.core.engine import DistanceThresholdEngine
+from repro.core.rtree import RTreeEngine
+
+
+def _check_equal(rs, bf):
+    # interval endpoints may differ at f32 fusion-order level (~1e-5 rel)
+    # between differently-shaped XLA programs; hits must match exactly.
+    rs = rs.sorted_canonical()
+    assert len(rs) == len(bf)
+    np.testing.assert_array_equal(rs.entry_idx, bf.entry_idx)
+    np.testing.assert_array_equal(rs.query_idx, bf.query_idx)
+    np.testing.assert_allclose(rs.t_enter, bf.t_enter, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(rs.t_exit, bf.t_exit, rtol=1e-4, atol=1e-3)
+
+
+@pytest.fixture(scope="module")
+def world():
+    rng = np.random.default_rng(42)
+    db = random_segments(rng, 1500)
+    queries = random_segments(rng, 120)
+    d = 4.0
+    bf = brute_force(db, queries, d)
+    assert len(bf) > 0, "fixture produced no hits — adjust parameters"
+    return db, queries, d, bf
+
+
+ALGO_CASES = [
+    ("periodic", {"s": 32}),
+    ("periodic", {"s": 1}),
+    ("periodic", {"s": 120}),
+    ("setsplit-fixed", {"num_batches": 6}),
+    ("setsplit-minmax", {"min_size": 8, "max_size": 64}),
+    ("greedysetsplit-min", {"bound": 16}),
+    ("greedysetsplit-max", {"bound": 48}),
+]
+
+
+class TestEngineCorrectness:
+    @pytest.mark.parametrize("name,kw", ALGO_CASES)
+    def test_engine_equals_brute_force(self, world, name, kw):
+        db, queries, d, bf = world
+        eng = DistanceThresholdEngine(db, num_bins=128)
+        plan = batching.ALGORITHMS[name](eng.index, queries, **kw)
+        rs, stats = eng.execute(queries, d, plan)
+        _check_equal(rs, bf)
+        assert stats.total_hits == len(bf)
+        assert stats.num_invocations == plan.num_batches
+
+    def test_overflow_retry_path(self, world):
+        db, queries, d, bf = world
+        eng = DistanceThresholdEngine(db, num_bins=128, default_capacity=256)
+        plan = batching.periodic(eng.index, queries, 64)
+        rs, stats = eng.execute(queries, d, plan)
+        _check_equal(rs, bf)
+
+    def test_determinism(self, world):
+        db, queries, d, _ = world
+        eng = DistanceThresholdEngine(db, num_bins=128)
+        plan = batching.periodic(eng.index, queries, 32)
+        rs1, _ = eng.execute(queries, d, plan)
+        rs2, _ = eng.execute(queries, d, plan)
+        np.testing.assert_array_equal(rs1.entry_idx, rs2.entry_idx)
+        np.testing.assert_array_equal(rs1.query_idx, rs2.query_idx)
+
+    def test_num_bins_invariance(self, world):
+        """Result set is independent of the index granularity (bins only
+        change the candidate over-approximation)."""
+        db, queries, d, bf = world
+        for nb in (4, 1000):
+            eng = DistanceThresholdEngine(db, num_bins=nb)
+            plan = batching.periodic(eng.index, queries, 32)
+            rs, _ = eng.execute(queries, d, plan)
+            _check_equal(rs, bf)
+
+    def test_zero_distance_threshold(self, world):
+        db, queries, _, _ = world
+        eng = DistanceThresholdEngine(db, num_bins=128)
+        plan = batching.periodic(eng.index, queries, 32)
+        rs, stats = eng.execute(queries, 0.0, plan)
+        bf0 = brute_force(db, queries, 0.0)
+        assert len(rs.sorted_canonical()) == len(bf0)
+
+
+class TestRTreeBaseline:
+    def test_rtree_equals_brute_force(self, world):
+        db, queries, d, bf = world
+        rt = RTreeEngine(db, r=12)
+        _check_equal(rt.query(queries, d), bf)
+
+    def test_rtree_parallel_matches(self, world):
+        db, queries, d, bf = world
+        rt = RTreeEngine(db, r=12)
+        _check_equal(rt.query_parallel(queries, d, num_threads=3), bf)
+
+    @pytest.mark.parametrize("r", [1, 4, 32])
+    def test_r_invariance(self, world, r):
+        """Segments-per-MBB trades performance, never correctness (Fig. 5
+        explores the performance side)."""
+        db, queries, d, bf = world
+        rt = RTreeEngine(db, r=r)
+        _check_equal(rt.query(queries, d), bf)
+
+
+class TestScenarioIntegration:
+    def test_scenario_s1_small(self, small_scenario):
+        db, queries, d = small_scenario
+        bf = brute_force(db, queries, d)
+        eng = DistanceThresholdEngine(db, num_bins=500)
+        plan = batching.periodic(eng.index, queries, 64)
+        rs, _ = eng.execute(queries, d, plan)
+        _check_equal(rs, bf)

@@ -1,0 +1,100 @@
+"""Temporal-bin index: the paper's §4 worked example (Fig. 1) + properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import random_segments
+from repro.core.index import TemporalBinIndex
+from repro.core.segments import SegmentArray
+
+
+def _fig1_db() -> SegmentArray:
+    """The 14-segment example of Fig. 1: extent [0, 12], 4 bins of width 3.
+
+    Bin B1 holds the segments with t_start in [3, 6): l6, l7, l8 (0-based
+    5..7); l8 has the largest t_end at 6.2 ⇒ B1 = (3, 6.2, 5, 7).
+    """
+    ts = np.array([0.0, 0.5, 1.0, 1.5, 2.0,        # bin 0 (5 segs)
+                   3.0, 4.0, 5.0,                  # bin 1 (l6, l7, l8)
+                   6.0, 7.0, 8.0,                  # bin 2
+                   9.0, 10.0, 10.5], np.float32)   # bin 3
+    te = np.array([2.0, 2.5, 2.8, 2.9, 3.5,
+                   5.0, 5.5, 6.2,
+                   8.0, 8.5, 8.9,
+                   11.0, 11.5, 12.0], np.float32)
+    n = len(ts)
+    z = np.zeros(n, np.float32)
+    return SegmentArray(z, z.copy(), z.copy(), z.copy(), z.copy(), z.copy(),
+                        ts, te, np.arange(n, dtype=np.int32),
+                        np.zeros(n, np.int32))
+
+
+class TestFig1:
+    def test_bin_descriptions(self):
+        idx = TemporalBinIndex.build(_fig1_db(), num_bins=4)
+        assert idx.bin_width == pytest.approx(3.0)
+        # B1: t_start in [3,6) → segments 5..7, B_end = 6.2
+        assert idx.b_first[1] == 5 and idx.b_last[1] == 7
+        assert idx.b_end[1] == pytest.approx(6.2)
+        assert idx.b_first[0] == 0 and idx.b_last[0] == 4
+        assert idx.b_end[0] == pytest.approx(3.5)
+        assert idx.b_first[3] == 11 and idx.b_last[3] == 13
+
+    def test_query_overlapping_bins(self):
+        """Paper §4: query [8, 10] overlaps bins B2 and B3 ⇒ candidates
+        l9..l14 (0-based 8..13)."""
+        idx = TemporalBinIndex.build(_fig1_db(), num_bins=4)
+        first, last = idx.candidate_range(8.0, 10.0)
+        assert (first, last) == (8, 13)
+
+    def test_query_before_everything(self):
+        idx = TemporalBinIndex.build(_fig1_db(), num_bins=4)
+        assert idx.candidate_range(-5.0, -1.0) == (0, -1)
+
+    def test_num_interactions(self):
+        idx = TemporalBinIndex.build(_fig1_db(), num_bins=4)
+        assert idx.num_interactions(8.0, 10.0, batch_size=10) == 60
+
+
+class TestProperties:
+    def test_requires_sorted(self):
+        db = _fig1_db().take(np.array([3, 1, 0]))
+        with pytest.raises(ValueError):
+            TemporalBinIndex.build(db, num_bins=4)
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 10_000), num_bins=st.integers(1, 200),
+           n=st.integers(1, 300))
+    def test_candidate_range_is_superset(self, seed, num_bins, n):
+        """Every temporally overlapping segment is inside the candidate
+        range (the index may over-approximate, never under)."""
+        rng = np.random.default_rng(seed)
+        db = random_segments(rng, n)
+        idx = TemporalBinIndex.build(db, num_bins=num_bins)
+        qt0, qt1 = sorted(rng.uniform(-5, 60, 2))
+        first, last = idx.candidate_range(qt0, qt1)
+        overlap = np.nonzero((db.ts <= qt1) & (db.te >= qt0))[0]
+        if overlap.size:
+            assert first <= overlap.min() and last >= overlap.max()
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000), n=st.integers(2, 200))
+    def test_batch_matches_scalar(self, seed, n):
+        rng = np.random.default_rng(seed)
+        db = random_segments(rng, n)
+        idx = TemporalBinIndex.build(db, num_bins=50)
+        qt0s = rng.uniform(-5, 55, 20)
+        qt1s = qt0s + rng.uniform(0, 10, 20)
+        firsts, lasts = idx.candidate_range_batch(qt0s, qt1s)
+        for i in range(20):
+            assert (firsts[i], lasts[i]) == idx.candidate_range(
+                float(qt0s[i]), float(qt1s[i]))
+
+    def test_bins_partition_segments(self):
+        rng = np.random.default_rng(0)
+        db = random_segments(rng, 500)
+        idx = TemporalBinIndex.build(db, num_bins=64)
+        nonempty = idx.b_last >= idx.b_first
+        total = int((idx.b_last[nonempty] - idx.b_first[nonempty] + 1).sum())
+        assert total == len(db)

@@ -1,0 +1,143 @@
+"""Per-kernel allclose sweeps: Pallas kernels vs pure-jnp oracles."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import random_segments
+from repro.kernels import ops, ref
+from repro.kernels.distthresh import distthresh_pallas
+from repro.kernels.flashattn import flashattn_pallas, flashattn_ref
+
+
+class TestDistThreshKernel:
+    @pytest.mark.parametrize("c,q,cblk,qblk", [
+        (16, 16, 8, 8), (32, 8, 16, 8), (8, 64, 8, 32), (128, 128, 64, 64),
+    ])
+    @pytest.mark.parametrize("dtype", [np.float32])
+    def test_matches_oracle_shapes(self, c, q, cblk, qblk, dtype):
+        rng = np.random.default_rng(c * 1000 + q)
+        entries = random_segments(rng, c).packed().astype(dtype)
+        queries = random_segments(rng, q).packed().astype(dtype)
+        d = np.float32(3.0)
+        te_p, tx_p, hit_p = distthresh_pallas(
+            entries, queries.T, d, cand_blk=cblk, qry_blk=qblk)
+        te_r, tx_r, hit_r = ref.interaction_tile(entries, queries, d)
+        np.testing.assert_array_equal(np.asarray(hit_p).astype(bool),
+                                      np.asarray(hit_r))
+        # f32 root-solve: interval endpoints agree to ~1e-5 relative
+        np.testing.assert_allclose(np.asarray(te_p), np.asarray(te_r),
+                                   rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(tx_p), np.asarray(tx_r),
+                                   rtol=1e-4, atol=1e-3)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           d=st.floats(0.1, 20.0))
+    def test_matches_oracle_random(self, seed, d):
+        rng = np.random.default_rng(seed)
+        entries = random_segments(rng, 24).packed()
+        queries = random_segments(rng, 16).packed()
+        te_p, tx_p, hit_p = distthresh_pallas(
+            entries, queries.T, np.float32(d), cand_blk=8, qry_blk=8)
+        te_r, tx_r, hit_r = ref.interaction_tile(entries, queries,
+                                                 np.float32(d))
+        np.testing.assert_array_equal(np.asarray(hit_p).astype(bool),
+                                      np.asarray(hit_r))
+        np.testing.assert_allclose(np.asarray(te_p), np.asarray(te_r),
+                                   rtol=1e-4, atol=1e-3)
+
+    def test_analytic_head_on_approach(self):
+        """Two points approaching head-on, both at unit speed: separation
+        |10 − 2t| ≤ d=2 ⇒ interval [4, 6] around the meeting at t=5."""
+        entries = np.array([[0, 0, 0, 10, 0, 0, 0, 10]], np.float32)
+        queries = np.array([[10, 0, 0, 0, 0, 0, 0, 10]], np.float32)
+        d = np.float32(2.0)
+        te, tx, hit = ref.interaction_tile(entries, queries, d)
+        assert bool(hit[0, 0])
+        assert float(te[0, 0]) == pytest.approx(4.0, abs=1e-5)
+        assert float(tx[0, 0]) == pytest.approx(6.0, abs=1e-5)
+
+    def test_parallel_motion_never_within(self):
+        entries = np.array([[0, 0, 0, 10, 0, 0, 0, 10]], np.float32)
+        queries = np.array([[0, 5, 0, 10, 5, 0, 0, 10]], np.float32)
+        _, _, hit = ref.interaction_tile(entries, queries, np.float32(2.0))
+        assert not bool(hit[0, 0])
+
+    def test_parallel_motion_always_within(self):
+        entries = np.array([[0, 0, 0, 10, 0, 0, 0, 10]], np.float32)
+        queries = np.array([[0, 1, 0, 10, 1, 0, 0, 10]], np.float32)
+        te, tx, hit = ref.interaction_tile(entries, queries, np.float32(2.0))
+        assert bool(hit[0, 0])
+        assert float(te[0, 0]) == pytest.approx(0.0, abs=1e-5)
+        assert float(tx[0, 0]) == pytest.approx(10.0, abs=1e-5)
+
+    def test_temporal_miss(self):
+        entries = np.array([[0, 0, 0, 1, 0, 0, 0, 1]], np.float32)
+        queries = np.array([[0, 0, 0, 1, 0, 0, 5, 6]], np.float32)
+        _, _, hit = ref.interaction_tile(entries, queries, np.float32(100.0))
+        assert not bool(hit[0, 0])
+
+    def test_classes_partition(self):
+        rng = np.random.default_rng(7)
+        entries = random_segments(rng, 40).packed()
+        queries = random_segments(rng, 30).packed()
+        a, b, g = ref.interaction_classes(entries, queries, np.float32(3.0))
+        total = (np.asarray(a).astype(int) + np.asarray(b).astype(int)
+                 + np.asarray(g).astype(int))
+        np.testing.assert_array_equal(total, np.ones_like(total))
+
+
+class TestQueryBlockCompaction:
+    def test_counts_and_order(self):
+        rng = np.random.default_rng(11)
+        entries = random_segments(rng, 32).packed()
+        queries = random_segments(rng, 16).packed()
+        d = np.float32(5.0)
+        out = ops.query_block(entries, queries, d, capacity=4096,
+                              use_pallas=False)
+        _, _, hit = ref.interaction_tile(entries, queries, d)
+        hit = np.asarray(hit)
+        count = int(out["count"])
+        assert count == hit.sum()
+        ei, qi = np.nonzero(hit)                      # row-major ground truth
+        np.testing.assert_array_equal(np.asarray(out["entry_idx"][:count]), ei)
+        np.testing.assert_array_equal(np.asarray(out["query_idx"][:count]), qi)
+        assert np.all(np.asarray(out["entry_idx"][count:]) == -1)
+
+    def test_overflow_reports_true_count(self):
+        rng = np.random.default_rng(12)
+        entries = random_segments(rng, 32).packed()
+        queries = random_segments(rng, 16).packed()
+        d = np.float32(50.0)                          # everything hits
+        out = ops.query_block(entries, queries, d, capacity=8,
+                              use_pallas=False)
+        assert int(out["count"]) > 8                 # caller must retry
+
+
+class TestFlashAttnKernel:
+    @pytest.mark.parametrize("bkv,g,s,t,hd,bq,bk", [
+        (2, 2, 16, 16, 8, 8, 8),
+        (1, 4, 32, 32, 16, 16, 8),
+        (2, 1, 8, 16, 8, 8, 8),       # windowed: S < T
+        (1, 2, 64, 64, 32, 32, 32),
+    ])
+    def test_matches_ref(self, bkv, g, s, t, hd, bq, bk):
+        rng = np.random.default_rng(bkv * 100 + s)
+        q = rng.normal(size=(bkv * g, s, hd)).astype(np.float32)
+        k = rng.normal(size=(bkv, t, hd)).astype(np.float32)
+        v = rng.normal(size=(bkv, t, hd)).astype(np.float32)
+        o1 = np.asarray(flashattn_pallas(q, k, v, g=g, blk_q=bq, blk_k=bk))
+        o2 = np.asarray(flashattn_ref(q, k, v, g=g))
+        np.testing.assert_allclose(o1, o2, atol=1e-5)
+
+    def test_bf16(self):
+        import jax.numpy as jnp
+        rng = np.random.default_rng(3)
+        q = jnp.asarray(rng.normal(size=(2, 16, 8)), jnp.bfloat16)
+        k = jnp.asarray(rng.normal(size=(2, 16, 8)), jnp.bfloat16)
+        v = jnp.asarray(rng.normal(size=(2, 16, 8)), jnp.bfloat16)
+        o1 = flashattn_pallas(q, k, v, g=1, blk_q=8, blk_k=8)
+        o2 = flashattn_ref(q, k, v, g=1)
+        np.testing.assert_allclose(np.asarray(o1, np.float32),
+                                   np.asarray(o2, np.float32), atol=0.1)

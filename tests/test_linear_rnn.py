@@ -1,0 +1,128 @@
+"""Chunked linear-RNN (SSD) scan vs step-by-step oracle; Mamba2/mLSTM
+block/decode parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models import ssm, xlstm
+
+
+def _rand_inputs(rng, b, s, h, dk, dv):
+    q = rng.normal(size=(b, s, h, dk)).astype(np.float32)
+    k = rng.normal(size=(b, s, h, dk)).astype(np.float32)
+    v = rng.normal(size=(b, s, h, dv)).astype(np.float32)
+    log_a = -np.abs(rng.normal(0.3, 0.3, size=(b, s, h))).astype(np.float32)
+    scale = rng.uniform(0.1, 1.0, size=(b, s, h)).astype(np.float32)
+    return q, k, v, log_a, scale
+
+
+class TestChunkedLinearRNN:
+    @pytest.mark.parametrize("s,chunk", [(8, 4), (16, 16), (10, 4), (7, 8)])
+    def test_matches_reference(self, s, chunk):
+        rng = np.random.default_rng(s * 10 + chunk)
+        q, k, v, la, sc = _rand_inputs(rng, 2, s, 3, 4, 5)
+        y1, st1 = ssm.chunked_linear_rnn(q, k, v, la, sc, chunk=chunk)
+        y2, st2 = ssm.reference_linear_rnn(q, k, v, la, sc)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(st1), np.asarray(st2),
+                                   atol=1e-4, rtol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 1000), s=st.integers(1, 24),
+           chunk=st.sampled_from([2, 4, 8]))
+    def test_property_random(self, seed, s, chunk):
+        rng = np.random.default_rng(seed)
+        q, k, v, la, sc = _rand_inputs(rng, 1, s, 2, 3, 3)
+        y1, _ = ssm.chunked_linear_rnn(q, k, v, la, sc, chunk=chunk)
+        y2, _ = ssm.reference_linear_rnn(q, k, v, la, sc)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_initial_state_carries(self):
+        """Splitting a sequence in two with carried state == one pass."""
+        rng = np.random.default_rng(5)
+        q, k, v, la, sc = _rand_inputs(rng, 2, 12, 2, 4, 4)
+        y_full, st_full = ssm.chunked_linear_rnn(q, k, v, la, sc, chunk=4)
+        y1, st1 = ssm.chunked_linear_rnn(q[:, :5], k[:, :5], v[:, :5],
+                                         la[:, :5], sc[:, :5], chunk=4)
+        y2, st2 = ssm.chunked_linear_rnn(q[:, 5:], k[:, 5:], v[:, 5:],
+                                         la[:, 5:], sc[:, 5:], chunk=4,
+                                         init_state=st1)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                                   np.asarray(y_full), atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full),
+                                   atol=1e-4, rtol=1e-4)
+
+
+class TestMamba2:
+    def test_block_decode_parity(self):
+        """Running the block over S tokens == S decode steps."""
+        d_model, n_state, b, s = 32, 8, 2, 6
+        key = jax.random.PRNGKey(0)
+        params = ssm.mamba2_init(key, d_model, n_state, jnp.float32)
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(b, s, d_model)).astype(np.float32)
+        y_blk, st_blk, cv_blk = ssm.mamba2_block(
+            params, x, d_model=d_model, n_state=n_state, chunk=4,
+            return_conv_state=True)
+        st, cv = ssm.mamba2_init_state(b, d_model, n_state, jnp.float32)
+        ys = []
+        for t in range(s):
+            y, st, cv = ssm.mamba2_decode(params, x[:, t:t + 1], st, cv,
+                                          d_model=d_model, n_state=n_state)
+            ys.append(y)
+        y_dec = np.concatenate([np.asarray(y) for y in ys], axis=1)
+        np.testing.assert_allclose(y_dec, np.asarray(y_blk), atol=1e-4,
+                                   rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(st), np.asarray(st_blk),
+                                   atol=1e-4, rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(cv), np.asarray(cv_blk),
+                                   atol=1e-5)
+
+
+class TestXLSTM:
+    def test_mlstm_block_decode_parity(self):
+        d_model, heads, b, s = 32, 4, 2, 5
+        key = jax.random.PRNGKey(1)
+        params = xlstm.mlstm_init(key, d_model, heads, jnp.float32)
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=(b, s, d_model)).astype(np.float32)
+        y_blk, st_blk = xlstm.mlstm_block(params, x, num_heads=heads, chunk=4)
+        st = xlstm.mlstm_init_state(b, d_model, heads)
+        ys = []
+        for t in range(s):
+            y, st = xlstm.mlstm_decode(params, x[:, t:t + 1], st,
+                                       num_heads=heads)
+            ys.append(np.asarray(y))
+        y_dec = np.concatenate(ys, axis=1)
+        np.testing.assert_allclose(y_dec, np.asarray(y_blk), atol=1e-4,
+                                   rtol=1e-3)
+
+    def test_slstm_block_decode_parity(self):
+        d_model, heads, b, s = 16, 2, 2, 5
+        key = jax.random.PRNGKey(2)
+        params = xlstm.slstm_init(key, d_model, heads, jnp.float32)
+        rng = np.random.default_rng(2)
+        x = rng.normal(size=(b, s, d_model)).astype(np.float32)
+        y_blk, carry_blk = xlstm.slstm_block(params, x, num_heads=heads)
+        carry = xlstm.slstm_init_state(b, d_model, heads)
+        ys = []
+        for t in range(s):
+            y, carry = xlstm.slstm_decode(params, x[:, t:t + 1], carry,
+                                          num_heads=heads)
+            ys.append(np.asarray(y))
+        np.testing.assert_allclose(np.concatenate(ys, 1), np.asarray(y_blk),
+                                   atol=1e-5)
+
+    def test_slstm_stabilizer_no_overflow(self):
+        """Exponential gating stays finite under extreme inputs."""
+        d_model, heads = 16, 2
+        params = xlstm.slstm_init(jax.random.PRNGKey(3), d_model, heads,
+                                  jnp.float32)
+        x = np.full((1, 20, d_model), 30.0, np.float32)
+        y, _ = xlstm.slstm_block(params, x, num_heads=heads)
+        assert np.isfinite(np.asarray(y)).all()

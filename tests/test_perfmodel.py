@@ -1,0 +1,85 @@
+"""§8 performance model: exact β, α estimation, batch-size picking."""
+import numpy as np
+import pytest
+
+from conftest import random_segments
+from repro.core import brute_force
+from repro.core.engine import DistanceThresholdEngine
+from repro.core.perfmodel import (ResponseTimeModel, benchmark_device_curves,
+                                  benchmark_host_curves, estimate_alpha_by_epoch,
+                                  exact_beta, _make_class_tiles)
+from repro.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def world():
+    rng = np.random.default_rng(9)
+    db = random_segments(rng, 800)
+    queries = random_segments(rng, 64)
+    return db, queries, 4.0
+
+
+class TestClassTiles:
+    @pytest.mark.parametrize("cls,which", [("alpha", 0), ("beta", 1),
+                                           ("gamma", 2)])
+    def test_single_class_workloads(self, cls, which):
+        """The synthetic benchmark workloads are pure α / β / γ."""
+        rng = np.random.default_rng(0)
+        e, q, d = _make_class_tiles(32, 16, cls, rng)
+        masks = ref.interaction_classes(e, q, np.float32(d))
+        frac = [float(np.asarray(m).mean()) for m in masks]
+        assert frac[which] == pytest.approx(1.0)
+
+
+class TestBeta:
+    def test_exact_beta_matches_bruteforce(self, world):
+        db, queries, d = world
+        eng = DistanceThresholdEngine(db, num_bins=64)
+        from repro.core.batching import periodic
+        plan = periodic(eng.index, queries, 16)
+        for b in plan.batches:
+            if b.num_candidates == 0:
+                continue
+            beta = exact_beta(eng, queries, b.q_first, b.q_last,
+                              b.cand_first, b.cand_last)
+            e = eng._packed[b.cand_first:b.cand_last + 1]
+            q = queries.packed()[b.q_first:b.q_last + 1]
+            _, bm, _ = ref.interaction_classes(e, q, np.float32(d))
+            assert beta == pytest.approx(float(np.asarray(bm).mean()),
+                                         abs=1e-6)
+
+
+class TestAlpha:
+    def test_alpha_in_range_and_sane(self, world):
+        db, queries, d = world
+        eng = DistanceThresholdEngine(db, num_bins=64)
+        alphas = estimate_alpha_by_epoch(eng, queries, d, s=16,
+                                         num_epochs=10, seed=0)
+        assert alphas.shape == (10,)
+        assert np.all(alphas >= 0) and np.all(alphas <= 1)
+
+
+class TestModelPick:
+    def test_predicts_and_picks(self, world):
+        db, queries, d = world
+        eng = DistanceThresholdEngine(db, num_bins=64)
+        dev = benchmark_device_curves(c_values=(256, 1024), q_values=(16, 64),
+                                      repeats=1)
+        host = benchmark_host_curves(eng, queries, s_values=(16, 64))
+        model = ResponseTimeModel(dev, host, num_epochs=5)
+        s, preds = model.pick_batch_size(eng, queries, d,
+                                         candidates=(16, 32, 64))
+        assert s in (16, 32, 64)
+        assert all(p["total_seconds"] > 0 for p in preds)
+        # predicted hits within a reasonable factor of truth
+        bf = brute_force(db, queries, d)
+        pred_hits = [p for p in preds if p["s"] == s][0]["predicted_hits"]
+        if len(bf) > 50:
+            assert 0.2 <= (pred_hits + 1) / (len(bf) + 1) <= 5.0
+
+    def test_device_model_monotone_in_interactions(self):
+        dev = benchmark_device_curves(c_values=(256, 4096),
+                                      q_values=(16, 256), repeats=1)
+        t_small = dev.predict(256, 16, 1 / 3, 1 / 3, 1 / 3)
+        t_big = dev.predict(4096, 256, 1 / 3, 1 / 3, 1 / 3)
+        assert t_big > t_small > 0

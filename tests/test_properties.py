@@ -1,0 +1,82 @@
+"""System-level property tests (hypothesis): invariants of the full
+pipeline under randomized databases, query sets and parameters."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import random_segments
+from repro.core import batching, brute_force
+from repro.core.engine import DistanceThresholdEngine
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       num_bins=st.sampled_from([3, 17, 256]),
+       s=st.integers(1, 60),
+       d=st.floats(0.5, 8.0))
+def test_engine_equals_bruteforce_randomized(seed, num_bins, s, d):
+    """For ANY (db, queries, bins, batch size, threshold): the engine's
+    result set equals brute force — the index/batching layers are pure
+    over-approximation and can never change results."""
+    rng = np.random.default_rng(seed)
+    db = random_segments(rng, 300)
+    queries = random_segments(rng, 40)
+    eng = DistanceThresholdEngine(db, num_bins=num_bins)
+    plan = batching.periodic(eng.index, queries, s)
+    rs, _ = eng.execute(queries, float(d), plan)
+    rs = rs.sorted_canonical()
+    bf = brute_force(db, queries, float(d))
+    assert len(rs) == len(bf)
+    np.testing.assert_array_equal(rs.entry_idx, bf.entry_idx)
+    np.testing.assert_array_equal(rs.query_idx, bf.query_idx)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), d1=st.floats(0.5, 4.0),
+       extra=st.floats(0.5, 4.0))
+def test_result_set_monotone_in_d(seed, d1, extra):
+    """Distance-threshold monotonicity: d ≤ d' ⇒ results(d) ⊆ results(d')."""
+    rng = np.random.default_rng(seed)
+    db = random_segments(rng, 200)
+    queries = random_segments(rng, 20)
+    small = brute_force(db, queries, float(d1))
+    big = brute_force(db, queries, float(d1 + extra))
+    small_keys = set(zip(small.entry_idx.tolist(), small.query_idx.tolist()))
+    big_keys = set(zip(big.entry_idx.tolist(), big.query_idx.tolist()))
+    assert small_keys <= big_keys
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_intervals_within_overlap(seed):
+    """Every reported interval lies inside the segments' temporal overlap
+    and satisfies t_enter ≤ t_exit."""
+    rng = np.random.default_rng(seed)
+    db = random_segments(rng, 200)
+    queries = random_segments(rng, 20)
+    rs = brute_force(db, queries, 5.0)
+    if len(rs) == 0:
+        return
+    e, q = rs.entry_idx, rs.query_idx
+    lo = np.maximum(db.ts[e], queries.ts[q])
+    hi = np.minimum(db.te[e], queries.te[q])
+    eps = 1e-3
+    assert np.all(rs.t_enter <= rs.t_exit + eps)
+    assert np.all(rs.t_enter >= lo - eps)
+    assert np.all(rs.t_exit <= hi + eps)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), algo=st.sampled_from(
+    ["setsplit-minmax", "greedysetsplit-min", "greedysetsplit-max"]))
+def test_batching_never_loses_queries(seed, algo):
+    rng = np.random.default_rng(seed)
+    db = random_segments(rng, 150)
+    queries = random_segments(rng, 33)
+    eng = DistanceThresholdEngine(db, num_bins=32)
+    kw = {"setsplit-minmax": {"min_size": 2, "max_size": 16},
+          "greedysetsplit-min": {"bound": 4},
+          "greedysetsplit-max": {"bound": 16}}[algo]
+    plan = batching.ALGORITHMS[algo](eng.index, queries, **kw)
+    assert plan.sizes().sum() == len(queries)
+    assert plan.total_interactions >= 0

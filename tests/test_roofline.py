@@ -1,0 +1,113 @@
+"""Roofline machinery: HLO shape parsing, trip-count-scaled costs,
+collective accounting, roofline term arithmetic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import analysis, hloparse
+
+
+class TestShapeBytes:
+    @pytest.mark.parametrize("s,expect", [
+        ("f32[2,3]{1,0}", 24),
+        ("bf16[4,4]", 32),
+        ("pred[8]", 8),
+        ("(f32[2], s32[3])", 20),
+        ("f32[]", 4),
+        ("u8[10,10]", 100),
+    ])
+    def test_cases(self, s, expect):
+        assert analysis.shape_bytes(s) == expect
+
+
+class TestHloParse:
+    def test_scan_trip_count_scaling(self):
+        def f(x, ws):
+            def body(x, w):
+                return jnp.tanh(x @ w), None
+            y, _ = jax.lax.scan(body, x, ws)
+            return y.sum()
+        xs = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+        ws = jax.ShapeDtypeStruct((10, 16, 16), jnp.float32)
+        txt = jax.jit(f).lower(xs, ws).compile().as_text()
+        costs = hloparse.analyze(txt)
+        expect = 10 * 2 * 8 * 16 * 16
+        assert costs.flops == pytest.approx(expect, rel=0.01)
+
+    def test_nested_scan(self):
+        def f(x, ws):
+            def outer(x, wp):
+                def inner(x, w):
+                    return jnp.tanh(x @ w), None
+                x, _ = jax.lax.scan(inner, x, wp)
+                return x, None
+            y, _ = jax.lax.scan(outer, x, ws)
+            return y.sum()
+        xs = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+        ws = jax.ShapeDtypeStruct((5, 3, 16, 16), jnp.float32)
+        txt = jax.jit(f).lower(xs, ws).compile().as_text()
+        costs = hloparse.analyze(txt)
+        assert costs.flops == pytest.approx(15 * 2 * 8 * 16 * 16, rel=0.01)
+
+    def test_plain_matmul(self):
+        f = lambda a, b: (a @ b).sum()
+        a = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+        b = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+        txt = jax.jit(f).lower(a, b).compile().as_text()
+        costs = hloparse.analyze(txt)
+        assert costs.flops == pytest.approx(2 * 32 * 64 * 128, rel=0.01)
+        assert costs.collective_bytes["total"] == 0
+
+    def test_traffic_scan_params_not_overcounted(self):
+        """Stacked scan weights are dynamic-sliced per iteration — traffic
+        must count the slice, not the whole stacked buffer × trips."""
+        def f(x, ws):
+            def body(x, w):
+                return jnp.tanh(x @ w), None
+            y, _ = jax.lax.scan(body, x, ws)
+            return y.sum()
+        xs = jax.ShapeDtypeStruct((8, 128), jnp.float32)
+        ws = jax.ShapeDtypeStruct((20, 128, 128), jnp.float32)
+        txt = jax.jit(f).lower(xs, ws).compile().as_text()
+        costs = hloparse.analyze(txt)
+        full_buffer_x_trips = 20 * (20 * 128 * 128 * 4)
+        assert costs.traffic_bytes < full_buffer_x_trips
+
+
+class TestRooflineTerms:
+    def test_formulas(self):
+        t = analysis.roofline_report(
+            per_device_flops=197e12, per_device_bytes=819e9,
+            per_device_collective_bytes=50e9, chips=256,
+            n_active_params=1_000_000, tokens=1000, kind="train")
+        assert t.compute_s == pytest.approx(1.0)
+        assert t.memory_s == pytest.approx(1.0)
+        assert t.collective_s == pytest.approx(1.0)
+        assert t.model_flops == pytest.approx(6e9)
+
+    def test_bottleneck_selection(self):
+        t = analysis.roofline_report(
+            per_device_flops=1e12, per_device_bytes=819e9 * 5,
+            per_device_collective_bytes=0, chips=2,
+            n_active_params=1, tokens=1, kind="prefill")
+        assert t.bottleneck == "memory"
+
+    def test_model_flops_kinds(self):
+        assert analysis.model_flops(10, 5, "train") == 300
+        assert analysis.model_flops(10, 5, "prefill") == 100
+        assert analysis.model_flops(10, 5, "decode") == 100
+
+
+class TestCollectiveParse:
+    def test_psum_counted(self):
+        """A hand-written HLO module with one all-reduce parses correctly."""
+        hlo = """
+ENTRY %main (p: f32[16]) -> f32[16] {
+  %p = f32[16]{0} parameter(0)
+  ROOT %ar = f32[16]{0} all-reduce(%p), replica_groups={}, to_apply=%add
+}
+"""
+        out = analysis.collective_bytes(hlo)
+        assert out["all-reduce"] == 64
+        assert out["total"] == 64

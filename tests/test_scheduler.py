@@ -1,0 +1,71 @@
+"""Straggler mitigation: deadline re-issue keeps results exact and drops
+late duplicates."""
+import time
+
+import numpy as np
+import pytest
+
+from conftest import random_segments
+from repro.core import batching, brute_force
+from repro.core.engine import DistanceThresholdEngine
+from repro.core.scheduler import DeadlineScheduler
+
+
+@pytest.fixture(scope="module")
+def world():
+    rng = np.random.default_rng(21)
+    db = random_segments(rng, 800)
+    queries = random_segments(rng, 96)
+    d = 4.0
+    return db, queries, d, brute_force(db, queries, d)
+
+
+def test_no_stragglers_exact(world):
+    db, queries, d, bf = world
+    eng = DistanceThresholdEngine(db, num_bins=64)
+    plan = batching.periodic(eng.index, queries, 16)
+    eng.execute(queries, d, plan)                 # warm jit
+    sched = DeadlineScheduler(eng, workers=2, min_deadline=5.0)
+    rs, stats = sched.execute(queries, d, plan)
+    rs = rs.sorted_canonical()
+    assert len(rs) == len(bf)
+    np.testing.assert_array_equal(rs.entry_idx, bf.entry_idx)
+    assert stats.reissued == 0
+    assert stats.completed == plan.num_batches
+
+
+def test_straggler_reissued_and_results_exact(world):
+    """First attempt of batch 0 hangs well past its deadline: the batch is
+    re-issued, the result set stays exactly correct, and the straggler's
+    late completion is dropped as a duplicate."""
+    db, queries, d, bf = world
+    eng = DistanceThresholdEngine(db, num_bins=64)
+    plan = batching.periodic(eng.index, queries, 16)
+    eng.execute(queries, d, plan)                 # warm jit
+
+    def delay(idx, attempt):
+        if idx == 0 and attempt == 0:
+            time.sleep(1.0)                       # straggler
+
+    sched = DeadlineScheduler(eng, workers=2, min_deadline=0.2,
+                              delay_hook=delay)
+    rs, stats = sched.execute(queries, d, plan)
+    rs = rs.sorted_canonical()
+    assert len(rs) == len(bf)
+    np.testing.assert_array_equal(rs.entry_idx, bf.entry_idx)
+    np.testing.assert_array_equal(rs.query_idx, bf.query_idx)
+    assert stats.reissued >= 1
+    assert stats.completed == plan.num_batches
+
+
+def test_model_driven_deadlines(world):
+    """Deadlines derived from the §8 model's per-batch prediction."""
+    db, queries, d, bf = world
+    eng = DistanceThresholdEngine(db, num_bins=64)
+    plan = batching.periodic(eng.index, queries, 32)
+    eng.execute(queries, d, plan)
+    pred = lambda batch: 1e-6 * batch.num_ints    # crude linear model
+    sched = DeadlineScheduler(eng, workers=2, slack=50.0,
+                              predict_seconds=pred, min_deadline=2.0)
+    rs, stats = sched.execute(queries, d, plan)
+    assert len(rs.sorted_canonical()) == len(bf)

@@ -1,0 +1,183 @@
+"""Training substrate: optimizer schedules, microbatch equivalence,
+checkpoint atomicity + elastic restore, gradient compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+from repro.train import checkpoint as ckpt
+from repro.train import compress
+from repro.train import optimizer as opt_lib
+from repro.train import step as step_lib
+
+
+class TestOptimizer:
+    def test_cosine_schedule_shape(self):
+        cfg = opt_lib.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                                  schedule="cosine")
+        fn = opt_lib.schedule_fn(cfg)
+        assert float(fn(jnp.int32(0))) == pytest.approx(0.0)
+        assert float(fn(jnp.int32(10))) == pytest.approx(1.0)
+        assert float(fn(jnp.int32(100))) == pytest.approx(0.0, abs=1e-6)
+        assert float(fn(jnp.int32(55))) == pytest.approx(0.5, abs=0.02)
+
+    def test_wsd_schedule_shape(self):
+        """MiniCPM's warmup–stable–decay: flat plateau then decay tail."""
+        cfg = opt_lib.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                                  schedule="wsd", wsd_decay_frac=0.2)
+        fn = opt_lib.schedule_fn(cfg)
+        assert float(fn(jnp.int32(40))) == pytest.approx(1.0)
+        assert float(fn(jnp.int32(79))) == pytest.approx(1.0)
+        assert float(fn(jnp.int32(90))) < 1.0
+        assert float(fn(jnp.int32(100))) == pytest.approx(0.0, abs=1e-3)
+
+    def test_grad_clip(self):
+        params = {"w": jnp.ones((4,), jnp.float32)}
+        state = opt_lib.init_state(params)
+        cfg = opt_lib.AdamWConfig(lr=0.0, grad_clip=1.0, weight_decay=0.0)
+        huge = {"w": jnp.full((4,), 1e6, jnp.float32)}
+        _, _, metrics = opt_lib.apply_updates(cfg, params, huge, state)
+        assert float(metrics["grad_norm"]) > 1e5   # reported pre-clip
+
+    def test_loss_decreases(self):
+        cfg = ARCHS["granite-3-2b"].reduced()
+        ocfg = opt_lib.AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=50)
+        ts = jax.jit(step_lib.make_train_step(cfg, ocfg, microbatches=1))
+        state = step_lib.init_train_state(cfg, jax.random.PRNGKey(0))
+        pipe = TokenPipeline(TokenPipelineConfig(
+            vocab_size=cfg.vocab_size, seq_len=32, global_batch=8))
+        losses = []
+        for i in range(6):
+            state, m = ts(state, pipe.global_batch_at(i))
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0]
+
+    def test_microbatch_equivalence(self):
+        """microbatches=1 and =4 produce (nearly) identical updates."""
+        cfg = ARCHS["starcoder2-3b"].reduced()
+        ocfg = opt_lib.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+        pipe = TokenPipeline(TokenPipelineConfig(
+            vocab_size=cfg.vocab_size, seq_len=16, global_batch=8))
+        batch = pipe.global_batch_at(0)
+        outs, losses = [], []
+        for mb in (1, 4):
+            ts = jax.jit(step_lib.make_train_step(cfg, ocfg, microbatches=mb))
+            state = step_lib.init_train_state(cfg, jax.random.PRNGKey(0))
+            state, m = ts(state, batch)
+            outs.append(state["opt"]["master"])
+            losses.append(float(m["loss"]))
+        assert losses[0] == pytest.approx(losses[1], rel=1e-4)
+        # Adam's step-1 update is sign-like (m̂/√v̂ ≈ ±1), so float-level
+        # grad differences can flip near-zero coordinates: bound the
+        # absolute weight difference by ~2·lr instead of elementwise rtol.
+        for a, b in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(outs[1])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=2.5 * ocfg.lr)
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_gc(self, tmp_path):
+        root = str(tmp_path)
+        state = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                 "b": {"c": jnp.asarray(np.ones((3,)), jnp.bfloat16)},
+                 "n": jnp.int32(7)}
+        for step in (1, 2, 3, 4, 5):
+            ckpt.save(root, step, state, meta={"step": step}, keep=3)
+        assert ckpt.all_steps(root) == [3, 4, 5]
+        restored, step, meta = ckpt.restore(root, state)
+        assert step == 5 and meta == {"step": 5}
+        for x, y in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                          np.asarray(y, np.float32))
+
+    def test_no_partial_checkpoint_visible(self, tmp_path):
+        """A .tmp directory is never listed as a restorable step."""
+        root = str(tmp_path)
+        os.makedirs(os.path.join(root, ".tmp.step_00000009"))
+        state = {"a": jnp.zeros((2,))}
+        ckpt.save(root, 1, state)
+        assert ckpt.all_steps(root) == [1]
+
+    def test_restore_specific_step(self, tmp_path):
+        root = str(tmp_path)
+        for step in (1, 2):
+            ckpt.save(root, step, {"a": jnp.full((2,), float(step))})
+        restored, step, _ = ckpt.restore(root, {"a": jnp.zeros((2,))}, step=1)
+        assert step == 1
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.ones((2,)))
+
+    def test_train_state_resume_bitexact(self, tmp_path):
+        """Crash/restart: resumed run == uninterrupted run (state + data)."""
+        cfg = ARCHS["granite-3-2b"].reduced()
+        ocfg = opt_lib.AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+        ts = jax.jit(step_lib.make_train_step(cfg, ocfg))
+        pipe = TokenPipeline(TokenPipelineConfig(
+            vocab_size=cfg.vocab_size, seq_len=16, global_batch=4))
+        state = step_lib.init_train_state(cfg, jax.random.PRNGKey(0))
+        for i in range(2):
+            state, _ = ts(state, pipe.global_batch_at(i))
+        ckpt.save(str(tmp_path), 2, state)
+        # continue uninterrupted
+        cont = state
+        for i in range(2, 4):
+            cont, _ = ts(cont, pipe.global_batch_at(i))
+        # resume from disk
+        resumed, step, _ = ckpt.restore(str(tmp_path), state)
+        for i in range(step, 4):
+            resumed, _ = ts(resumed, pipe.global_batch_at(i))
+        for a, b in zip(jax.tree.leaves(cont["opt"]["master"]),
+                        jax.tree.leaves(resumed["opt"]["master"])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6)
+
+
+class TestCompression:
+    @pytest.mark.parametrize("codec", ["bf16", "int8"])
+    def test_error_feedback_unbiased(self, codec):
+        """Accumulated compressed means converge to the true mean."""
+        rng = np.random.default_rng(0)
+        g = rng.normal(size=(64,)).astype(np.float32)
+        e = np.zeros_like(g)
+        acc = np.zeros_like(g)
+        steps = 50
+        for _ in range(steps):
+            q, scale, e = compress.compress_leaf(jnp.asarray(g),
+                                                 jnp.asarray(e), codec)
+            acc += np.asarray(compress._dequantize(q, scale, codec))
+            e = np.asarray(e)
+        np.testing.assert_allclose(acc / steps, g, atol=5e-3)
+
+    def test_compressed_bytes_smaller(self):
+        g = jnp.asarray(np.random.default_rng(1).normal(size=(128,)),
+                        jnp.float32)
+        q8, _, _ = compress.compress_leaf(g, jnp.zeros_like(g), "int8")
+        q16, _, _ = compress.compress_leaf(g, jnp.zeros_like(g), "bf16")
+        assert q8.dtype == jnp.int8 and q16.dtype == jnp.bfloat16
+
+
+class TestTokenPipeline:
+    def test_deterministic_and_resumable(self):
+        cfg = TokenPipelineConfig(vocab_size=100, seq_len=8, global_batch=4,
+                                  num_shards=2, seed=3)
+        p1, p2 = TokenPipeline(cfg), TokenPipeline(cfg)
+        b1 = p1.batch_at(17, 1)
+        b2 = p2.batch_at(17, 1)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+    def test_shards_disjoint(self):
+        cfg = TokenPipelineConfig(vocab_size=1000, seq_len=32,
+                                  global_batch=4, num_shards=2)
+        p = TokenPipeline(cfg)
+        a = p.batch_at(0, 0)["tokens"]
+        b = p.batch_at(0, 1)["tokens"]
+        assert not np.array_equal(a, b)
+
+    def test_labels_shifted(self):
+        cfg = TokenPipelineConfig(vocab_size=50, seq_len=8, global_batch=2)
+        b = TokenPipeline(cfg).batch_at(0, 0)
+        assert b["tokens"].shape == b["labels"].shape == (2, 8)
