@@ -5,16 +5,16 @@ segments on a Tesla C2075; this container is a single CPU core, so every
 benchmark takes a ``scale`` knob (default small) and reports the same
 *quantities* the paper's tables/figures report — absolute times are
 CPU-path times of the same code that the dry-run lowers for TPU.
+
+All drivers go through the :mod:`repro.api` facade (``TrajectoryDB``);
+``scenario_db`` is the one-stop constructor, and batching-algorithm sweeps
+use the facade's ``batching=...`` / ``**batch_params`` shorthand.
 """
 from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from repro.core import batching
-from repro.core.engine import DistanceThresholdEngine
-from repro.data import trajgen
+from repro.api import ExecutionPolicy, TrajectoryDB
 
 
 def timed(fn, *args, repeats: int = 1, **kw):
@@ -27,21 +27,23 @@ def timed(fn, *args, repeats: int = 1, **kw):
     return out, best
 
 
-def scenario_engine(name: str, scale: float, num_bins: int = 1000):
-    db, queries, d = trajgen.make_scenario(name, scale=scale)
-    eng = DistanceThresholdEngine(db, num_bins=num_bins)
-    return eng, queries, d
+def scenario_db(name: str, scale: float, num_bins: int = 1000,
+                **policy_kw) -> TrajectoryDB:
+    """Facade for one of the paper's scenarios: the returned TrajectoryDB
+    carries its query workload as ``db.scenario_queries`` /
+    ``db.scenario_d``."""
+    policy = ExecutionPolicy(num_bins=num_bins, **policy_kw)
+    return TrajectoryDB.from_scenario(name, scale=scale, policy=policy)
 
 
-ALGORITHMS_WITH_PARAMS = {
-    "periodic": lambda idx, q, s: batching.periodic(idx, q, s),
-    "setsplit-fixed": lambda idx, q, s: batching.setsplit_fixed(
-        idx, q, max(len(q) // max(s, 1), 1)),
-    "setsplit-max": lambda idx, q, s: batching.setsplit_max(idx, q, 2 * s),
-    "setsplit-minmax": lambda idx, q, s: batching.setsplit_minmax(
-        idx, q, max(s // 2, 1), 2 * s),
-    "greedysetsplit-min": lambda idx, q, s: batching.greedysetsplit_min(
-        idx, q, s),
-    "greedysetsplit-max": lambda idx, q, s: batching.greedysetsplit_max(
-        idx, q, 2 * s),
+#: algorithm name -> batch_params for a given size anchor ``s`` and query
+#: count ``nq`` (mirrors how the paper parameterizes each algorithm).
+ALGORITHM_PARAMS = {
+    "periodic": lambda s, nq: {"s": s},
+    "setsplit-fixed": lambda s, nq: {"num_batches": max(nq // max(s, 1), 1)},
+    "setsplit-max": lambda s, nq: {"max_size": 2 * s},
+    "setsplit-minmax": lambda s, nq: {"min_size": max(s // 2, 1),
+                                      "max_size": 2 * s},
+    "greedysetsplit-min": lambda s, nq: {"bound": s},
+    "greedysetsplit-max": lambda s, nq: {"bound": 2 * s},
 }

@@ -6,16 +6,18 @@ wasteful candidates).
 """
 from __future__ import annotations
 
-from benchmarks.common import scenario_engine
-from repro.core import batching
+from benchmarks.common import scenario_db
+from repro.api import ExecutionPolicy
 
 
 def run(scale: float = 0.02, scenario: str = "S1",
         sizes=(1, 2, 5, 10, 20, 40, 80, 160)) -> list[dict]:
-    eng, queries, d = scenario_engine(scenario, scale)
+    db = scenario_db(scenario, scale)
+    queries = db.scenario_queries
     rows = []
     for s in sizes:
-        plan = batching.periodic(eng.index, queries, s)
+        plan = db.plan(queries, ExecutionPolicy(
+            batching="periodic", batch_params={"s": s}))
         rows.append({
             "bench": "fig3", "s": s,
             "interactions_per_query": plan.total_interactions / len(queries),

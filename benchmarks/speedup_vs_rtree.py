@@ -3,33 +3,38 @@
 Paper: GPU engine is 15.2× over sequential R-tree and 3.3× over 6-thread
 OpenMP for S2.  Here both run on the same CPU, so the quantity of interest
 is the *relative* ordering and the r (segments/MBB) sweep of Fig. 5.
+
+The engine run and the threaded baseline go through the ``TrajectoryDB``
+facade; the r-sweep builds per-r R-tree backends directly (the facade
+caches one backend per database, and the sweep deliberately varies the
+backend's construction parameter).
 """
 from __future__ import annotations
 
-from benchmarks.common import scenario_engine, timed
-from repro.core import batching
+from benchmarks.common import scenario_db, timed
+from repro.api import RTreeBackend
 from repro.core.rtree import RTreeEngine
 
 
 def run(scale: float = 0.01, scenario: str = "S2",
         r_values=(4, 12, 32), threads: int = 4) -> list[dict]:
-    eng, queries, d = scenario_engine(scenario, scale)
+    db = scenario_db(scenario, scale, rtree_threads=threads)
+    queries, d = db.scenario_queries, db.scenario_d
     rows = []
-    plan = batching.periodic(eng.index, queries, 48)
-    eng.execute(queries, d, plan)                      # warm jit
-    (_, stats), engine_s = timed(eng.execute, queries, d, plan)
+    db.query(queries, d, batching="periodic", s=48)        # warm jit
+    result, _ = timed(db.query, queries, d, batching="periodic", s=48)
     rows.append({"bench": "speedup", "impl": "engine-periodic48",
-                 "seconds": stats.total_seconds, "r": None,
-                 "hits": stats.total_hits})
+                 "seconds": result.stats.total_seconds, "r": None,
+                 "hits": result.stats.total_hits})
     for r in r_values:
-        rt = RTreeEngine(eng.db, r=r)
-        rs, seq_s = timed(rt.query, queries, d)
+        backend = RTreeBackend(RTreeEngine(db.segments, r=r))
+        (rs, _), seq_s = timed(backend.run, queries, d, None)
         rows.append({"bench": "speedup", "impl": "rtree-seq",
                      "seconds": seq_s, "r": r, "hits": len(rs)})
-    rt = RTreeEngine(eng.db, r=12)
-    rs, par_s = timed(rt.query_parallel, queries, d, threads)
+    db.backend("rtree")                  # build the tree outside the timing
+    rt_par, par_s = timed(db.query, queries, d, backend="rtree")
     rows.append({"bench": "speedup", "impl": f"rtree-par{threads}",
-                 "seconds": par_s, "r": 12, "hits": len(rs)})
+                 "seconds": par_s, "r": 12, "hits": len(rt_par)})
     return rows
 
 

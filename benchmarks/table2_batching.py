@@ -2,26 +2,28 @@
 
 Reports, per (scenario × algorithm): execution response time, plan time,
 total (plan+exec — the paper's end-to-end accounting that sinks SETSPLIT),
-and % over the best executor for the scenario.
+and % over the best executor for the scenario.  All runs go through
+``TrajectoryDB.query`` with the facade's per-call batching override.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import ALGORITHMS_WITH_PARAMS, scenario_engine, timed
+from benchmarks.common import ALGORITHM_PARAMS, scenario_db, timed
 
 
 def run(scale: float = 0.01, scenarios=("S1", "S2", "S3", "S9"),
         s: int = 48) -> list[dict]:
     rows = []
     for sc in scenarios:
-        eng, queries, d = scenario_engine(sc, scale)
+        db = scenario_db(sc, scale)
+        queries, d = db.scenario_queries, db.scenario_d
         per_alg = {}
-        for name, make in ALGORITHMS_WITH_PARAMS.items():
-            plan = make(eng.index, queries, s)
+        for name, make_params in ALGORITHM_PARAMS.items():
+            params = make_params(s, len(queries))
             # warm the jit caches so Θ reflects dispatch, not compilation
-            eng.execute(queries, d, plan)
-            (_, stats), exec_s = timed(eng.execute, queries, d, plan)
+            db.query(queries, d, batching=name, **params)
+            result, exec_s = timed(db.query, queries, d,
+                                   batching=name, **params)
+            stats, plan = result.stats, result.plan
             per_alg[name] = {
                 "bench": "table2", "scenario": sc, "algorithm": name,
                 "exec_seconds": stats.total_seconds,

@@ -1,12 +1,12 @@
 """Table 3 + Fig. 16: the §8 response-time model picks a batch size s;
 report the slowdown of the model's pick vs the empirically best s.
+
+Workloads come from the ``TrajectoryDB`` facade; the perf model itself
+still speaks the engine-level interface (``db.engine()``).
 """
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import scenario_engine, timed
-from repro.core import batching
+from benchmarks.common import scenario_db
 from repro.core.perfmodel import (ResponseTimeModel, benchmark_device_curves,
                                   benchmark_host_curves)
 
@@ -17,7 +17,9 @@ def run(scale: float = 0.01, scenarios=("S1", "S3", "S5"),
                                   q_values=(16, 64, 256), repeats=2)
     rows = []
     for sc in scenarios:
-        eng, queries, d = scenario_engine(sc, scale)
+        db = scenario_db(sc, scale)
+        queries, d = db.scenario_queries, db.scenario_d
+        eng = db.engine("jnp")
         host = benchmark_host_curves(eng, queries,
                                      s_values=(16, 48, 128))
         model = ResponseTimeModel(dev, host, num_epochs=20)
@@ -25,13 +27,12 @@ def run(scale: float = 0.01, scenarios=("S1", "S3", "S5"),
                                                candidates=candidates)
         actual = {}
         for s in candidates:
-            plan = batching.periodic(eng.index, queries, s)
-            eng.execute(queries, d, plan)              # warm
+            db.query(queries, d, batching="periodic", s=s)        # warm
             # min-of-3: ms-scale CPU timings are noisy and the paper's
             # Table 3 compares sub-10% differences
             times = []
             for _ in range(3):
-                _, stats = eng.execute(queries, d, plan)
+                stats = db.query(queries, d, batching="periodic", s=s).stats
                 times.append(stats.total_seconds)
             actual[s] = min(times)
         s_best = min(actual, key=actual.get)
@@ -48,7 +49,7 @@ def run(scale: float = 0.01, scenarios=("S1", "S3", "S5"),
 def main():
     for r in run():
         print(f"table3,{r['scenario']},model_s={r['s_model']},"
-              f"best_s={r['s_actual_best']},slowdown_pct={r['slowdown_pct']:.1f}")
+              f"best_s={r['s_actual_best']},slowdown={r['slowdown_pct']:.1f}%")
 
 
 if __name__ == "__main__":

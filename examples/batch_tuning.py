@@ -3,17 +3,21 @@
 Demonstrates the paper's headline workflow: benchmark the platform once
 (T1/T2/T3 device curves + host fits), estimate α per temporal epoch for
 the dataset, then let the model pick a PERIODIC batch size — and compare
-against the measured optimum.
+against the measured optimum.  The dataset/query workload comes through
+the ``repro.api`` facade; the perf model still speaks the engine-level
+interface, obtained via ``db.engine()``.
 
 Run:  PYTHONPATH=src python examples/batch_tuning.py
 """
-from repro.core import DistanceThresholdEngine, periodic
+from repro.api import ExecutionPolicy, TrajectoryDB
 from repro.core.perfmodel import (ResponseTimeModel, benchmark_device_curves,
                                   benchmark_host_curves)
-from repro.data import trajgen
 
-db, queries, d = trajgen.make_scenario("S5", scale=0.01)
-engine = DistanceThresholdEngine(db, num_bins=1000)
+db = TrajectoryDB.from_scenario(
+    "S5", scale=0.01,
+    policy=ExecutionPolicy(batching="periodic", num_bins=1000))
+queries, d = db.scenario_queries, db.scenario_d
+engine = db.engine("jnp")          # perf-model interop surface
 
 print("benchmarking device curves (T1/T2/T3 per interaction class) ...")
 device = benchmark_device_curves(c_values=(256, 1024, 4096),
@@ -36,9 +40,8 @@ for p in preds:
 print("measuring actual response times ...")
 actual = {}
 for s in candidates:
-    plan = periodic(engine.index, queries, s)
-    engine.execute(queries, d, plan)          # warm the jit cache
-    _, stats = engine.execute(queries, d, plan)
+    db.query(queries, d, batching="periodic", s=s)       # warm the jit cache
+    stats = db.query(queries, d, batching="periodic", s=s).stats
     actual[s] = stats.total_seconds
     print(f"  s={s:4d}  measured {actual[s] * 1e3:8.1f} ms")
 s_best = min(actual, key=actual.get)

@@ -1,0 +1,491 @@
+"""Unified query facade for the trajectory database (the stable public API).
+
+The paper's deliverable is a *query service* (§3): given a trajectory
+database ``D``, find every trajectory that comes within distance ``d`` of a
+search trajectory during its temporal extent, for an online stream of such
+queries.  The lower layers of this repo expose the machinery — the
+temporal-bin index (``repro.core.index``), batch-generation algorithms
+(``repro.core.batching``), the accelerator engine (``repro.core.engine``),
+the R-tree CPU baseline (``repro.core.rtree``) and the deadline scheduler
+(``repro.core.scheduler``) — but each with its own calling convention and
+preconditions (pre-sorted queries, manual plan construction, reaching into
+``engine.index``).
+
+:class:`TrajectoryDB` is the single front door over all of them:
+
+* ``TrajectoryDB.from_segments(db)`` / ``TrajectoryDB.from_scenario("S2")``
+  own sorting and index construction — callers never see the sortedness
+  precondition.
+* ``db.query(queries, d, backend=..., batching=...)`` plans, executes and
+  returns a :class:`QueryResult` whose ``query_idx`` refers to the
+  **caller's original query order** (the raw engine indexes the internally
+  sorted array — a silent off-by-permutation trap this facade removes).
+* Execution strategy is pluggable via the :class:`QueryBackend` protocol:
+  ``"pallas"`` (the TPU kernel, interpret mode on CPU), ``"jnp"`` (the XLA
+  oracle — the right default on CPU), ``"rtree"`` (the paper's §7.3
+  search-and-refine CPU baseline) and ``"brute"`` (the all-pairs oracle).
+  All four return identical canonical result sets.
+* Tuning knobs live in one :class:`ExecutionPolicy` value object instead of
+  being scattered across constructors and free functions.
+* ``db.query_stream(...)`` routes execution through the deadline/re-issue
+  scheduler (``repro.core.scheduler``) — the serving layer's
+  trajectory-native entry point.
+
+Quick example::
+
+    from repro.api import TrajectoryDB
+
+    db = TrajectoryDB.from_scenario("S2", scale=0.02)
+    result = db.query(db.scenario_queries, db.scenario_d, backend="jnp")
+    for traj in result.matched_trajectories():
+        ...
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import Callable, Mapping, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.batching import ALGORITHMS, BatchPlan
+from repro.core.engine import (DistanceThresholdEngine, ExecStats, ResultSet,
+                               brute_force)
+from repro.core.index import DEFAULT_NUM_BINS, TemporalBinIndex
+from repro.core.rtree import RTreeEngine
+from repro.core.scheduler import DeadlineScheduler, SchedulerStats
+from repro.core.segments import SegmentArray
+from repro.kernels.distthresh import DEFAULT_CAND_BLK, DEFAULT_QRY_BLK
+
+#: Names accepted by ``TrajectoryDB.query(backend=...)``.
+BACKENDS = ("pallas", "jnp", "rtree", "brute")
+
+#: Default batch size anchor used when an algorithm's parameters are not
+#: given explicitly (the paper's practical PERIODIC recommendation, §7.4).
+DEFAULT_BATCH_SIZE = 64
+
+
+# ----------------------------------------------------------------------
+# Execution policy: every tuning knob in one value object.
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ExecutionPolicy:
+    """How a query should be executed — algorithm, kernel and scheduling
+    parameters.  Replaces the seed's 7-kwarg engine constructor plus the
+    per-call-site batching arguments.
+
+    Only the fields relevant to the chosen backend are consulted (e.g.
+    ``rtree_*`` only for ``backend="rtree"``).  ``num_bins`` is structural —
+    it shapes the database's temporal-bin index and is therefore consulted
+    at ``TrajectoryDB`` *construction* time only; every other field may be
+    overridden per call via ``db.query(..., policy=...)``.
+    """
+
+    # -- batching (engine backends) ------------------------------------
+    batching: str = "greedysetsplit-min"
+    batch_params: Mapping | None = None   # None → per-algorithm defaults
+
+    # -- index ----------------------------------------------------------
+    num_bins: int = DEFAULT_NUM_BINS
+
+    # -- kernel / device ------------------------------------------------
+    cand_blk: int = DEFAULT_CAND_BLK
+    qry_blk: int = DEFAULT_QRY_BLK
+    capacity: int = 4096                  # result-buffer slots per batch
+    interpret: bool = True                # Pallas interpret mode (CPU)
+
+    # -- R-tree baseline ------------------------------------------------
+    rtree_r: int = 12                     # segments per leaf MBB (Fig. 5)
+    rtree_fanout: int = 16
+    rtree_threads: int = 1                # >1 → query_parallel
+
+    # -- brute oracle ---------------------------------------------------
+    brute_chunk: int = 2048
+
+    # -- query_stream scheduling ---------------------------------------
+    stream_workers: int = 2
+    stream_slack: float = 4.0
+    stream_min_deadline: float = 0.05
+
+    def with_(self, **updates) -> "ExecutionPolicy":
+        """Functional update (the policy itself is immutable)."""
+        return dataclasses.replace(self, **updates)
+
+    # ------------------------------------------------------------------
+    def resolved_batch_params(self, num_queries: int) -> dict:
+        """Fill in per-algorithm defaults anchored at DEFAULT_BATCH_SIZE."""
+        if self.batching not in ALGORITHMS:
+            raise ValueError(
+                f"unknown batching algorithm {self.batching!r}; "
+                f"choose from {sorted(ALGORITHMS)}")
+        if self.batch_params:
+            return dict(self.batch_params)
+        s = DEFAULT_BATCH_SIZE
+        return {
+            "periodic": {"s": s},
+            "setsplit-fixed": {"num_batches": max(num_queries // s, 1)},
+            "setsplit-max": {"max_size": 2 * s},
+            "setsplit-minmax": {"min_size": max(s // 2, 1), "max_size": 2 * s},
+            "greedysetsplit-min": {"bound": s},
+            "greedysetsplit-max": {"bound": 2 * s},
+        }[self.batching]
+
+
+# ----------------------------------------------------------------------
+# Results, in the caller's query order.
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class QueryResult:
+    """Flat result arrays, one row per (entry segment, query segment,
+    temporal interval) — like ``ResultSet``, but ``query_idx`` refers to the
+    **caller's** query array, not the internally sorted one, and rows are in
+    canonical (query_idx, entry_idx) order regardless of backend.
+    """
+
+    entry_idx: np.ndarray    # index into the sorted database (db.segments)
+    entry_traj: np.ndarray   # trajectory id of the entry segment
+    entry_seg: np.ndarray    # segment id of the entry segment
+    query_idx: np.ndarray    # index into the CALLER's query array
+    t_enter: np.ndarray
+    t_exit: np.ndarray
+    d: float
+    backend: str
+    stats: ExecStats | None = None       # engine backends only
+    plan: BatchPlan | None = None        # engine backends only
+
+    def __len__(self) -> int:
+        return int(self.entry_idx.shape[0])
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def from_result_set(rs: ResultSet, *, order: np.ndarray | None,
+                        d: float, backend: str,
+                        stats: ExecStats | None = None,
+                        plan: BatchPlan | None = None) -> "QueryResult":
+        """Map a backend ``ResultSet`` (query_idx into the sorted query
+        array) back to caller order and canonicalize row order.
+
+        ``order`` is the sort permutation (sorted position → caller
+        position); ``None`` means the caller's queries were already sorted.
+        """
+        q_caller = (rs.query_idx if order is None
+                    else order[rs.query_idx])
+        rank = np.lexsort((rs.entry_idx, q_caller))
+        return QueryResult(
+            entry_idx=rs.entry_idx[rank],
+            entry_traj=rs.entry_traj[rank],
+            entry_seg=rs.entry_seg[rank],
+            query_idx=q_caller[rank],
+            t_enter=rs.t_enter[rank],
+            t_exit=rs.t_exit[rank],
+            d=d, backend=backend, stats=stats, plan=plan,
+        )
+
+    # ------------------------------------------------------------------
+    def matches_for(self, query_idx: int) -> "QueryResult":
+        """Rows belonging to one caller query segment."""
+        m = self.query_idx == query_idx
+        return QueryResult(
+            self.entry_idx[m], self.entry_traj[m], self.entry_seg[m],
+            self.query_idx[m], self.t_enter[m], self.t_exit[m],
+            d=self.d, backend=self.backend)
+
+    def matched_trajectories(self) -> np.ndarray:
+        """Unique database trajectory ids in the result — the paper's §3
+        deliverable ("finds all trajectories within distance d")."""
+        return np.unique(self.entry_traj)
+
+    def to_result_set(self) -> ResultSet:
+        """Compatibility view for code still speaking ``ResultSet`` —
+        note ``query_idx`` stays in caller order."""
+        return ResultSet(self.entry_idx, self.entry_traj, self.entry_seg,
+                         self.query_idx, self.t_enter, self.t_exit)
+
+
+# ----------------------------------------------------------------------
+# Backend protocol + adapters.
+# ----------------------------------------------------------------------
+@runtime_checkable
+class QueryBackend(Protocol):
+    """One execution strategy.  ``run`` receives queries already sorted by
+    ``t_start`` (the facade guarantees it) and returns results whose
+    ``query_idx`` indexes that sorted array."""
+
+    name: str
+    needs_plan: bool
+
+    def run(self, queries: SegmentArray, d: float,
+            plan: BatchPlan | None) -> tuple[ResultSet, ExecStats | None]:
+        ...
+
+
+class EngineBackend:
+    """Adapter over ``DistanceThresholdEngine`` (Pallas kernel or jnp
+    oracle — same engine, one flag)."""
+
+    needs_plan = True
+
+    def __init__(self, name: str, engine: DistanceThresholdEngine):
+        self.name = name
+        self.engine = engine
+
+    def run(self, queries: SegmentArray, d: float,
+            plan: BatchPlan | None) -> tuple[ResultSet, ExecStats | None]:
+        if plan is None:
+            raise ValueError(f"backend {self.name!r} requires a BatchPlan")
+        rs, stats = self.engine.execute(queries, d, plan)
+        return rs, stats
+
+
+class RTreeBackend:
+    """Adapter over the §7.3 search-and-refine CPU baseline."""
+
+    name = "rtree"
+    needs_plan = False
+
+    def __init__(self, engine: RTreeEngine, *, threads: int = 1):
+        self.engine = engine
+        self.threads = threads
+
+    def run(self, queries: SegmentArray, d: float,
+            plan: BatchPlan | None) -> tuple[ResultSet, ExecStats | None]:
+        if self.threads > 1:
+            return self.engine.query_parallel(queries, d, self.threads), None
+        return self.engine.query(queries, d), None
+
+
+class BruteBackend:
+    """Adapter over the all-pairs oracle (tests / small inputs)."""
+
+    name = "brute"
+    needs_plan = False
+
+    def __init__(self, db: SegmentArray, *, chunk: int = 2048):
+        self.db = db
+        self.chunk = chunk
+
+    def run(self, queries: SegmentArray, d: float,
+            plan: BatchPlan | None) -> tuple[ResultSet, ExecStats | None]:
+        return brute_force(self.db, queries, d, chunk=self.chunk), None
+
+
+# ----------------------------------------------------------------------
+# The facade.
+# ----------------------------------------------------------------------
+class TrajectoryDB:
+    """In-memory spatiotemporal trajectory database with one query surface.
+
+    Construction sorts the entry segments by ``t_start`` and builds the
+    temporal-bin index once; every backend shares them.  Use the
+    classmethods — the bare constructor is an implementation detail.
+    """
+
+    def __init__(self, segments: SegmentArray, *,
+                 policy: ExecutionPolicy | None = None):
+        self.policy = policy or ExecutionPolicy()
+        # The engine owns sorting, the index and the packed device copy;
+        # the facade aliases them so there is exactly one of each.
+        self._base_engine = DistanceThresholdEngine(
+            segments, num_bins=self.policy.num_bins, use_pallas=False,
+            interpret=self.policy.interpret, cand_blk=self.policy.cand_blk,
+            qry_blk=self.policy.qry_blk,
+            default_capacity=self.policy.capacity)
+        self.segments: SegmentArray = self._base_engine.db
+        self.index: TemporalBinIndex = self._base_engine.index
+        self._backends: dict[str, QueryBackend] = {}
+        # Populated by from_scenario for convenience.
+        self.scenario_queries: SegmentArray | None = None
+        self.scenario_d: float | None = None
+
+    # -- construction ---------------------------------------------------
+    @classmethod
+    def from_segments(cls, segments: SegmentArray, *,
+                      policy: ExecutionPolicy | None = None) -> "TrajectoryDB":
+        """Build a database from raw (possibly unsorted) segments."""
+        return cls(segments, policy=policy)
+
+    @classmethod
+    def from_trajectories(cls, points, times, *, traj_ids=None,
+                          policy: ExecutionPolicy | None = None
+                          ) -> "TrajectoryDB":
+        """Build from per-trajectory polylines (see
+        ``SegmentArray.from_trajectories``)."""
+        segs = SegmentArray.from_trajectories(points, times, traj_ids)
+        return cls(segs, policy=policy)
+
+    @classmethod
+    def from_scenario(cls, name: str, *, scale: float = 1.0, seed: int = 0,
+                      policy: ExecutionPolicy | None = None) -> "TrajectoryDB":
+        """Build one of the paper's §7.2 scenarios (S1–S10).
+
+        The scenario's query workload is attached as ``db.scenario_queries``
+        / ``db.scenario_d`` so examples and benchmarks need no second call.
+        """
+        from repro.data import trajgen
+        segments, queries, d = trajgen.make_scenario(name, scale=scale,
+                                                     seed=seed)
+        db = cls(segments, policy=policy)
+        db.scenario_queries = queries
+        db.scenario_d = float(d)
+        return db
+
+    def __len__(self) -> int:
+        return len(self.segments)
+
+    # -- backends --------------------------------------------------------
+    @staticmethod
+    def _backend_key(name: str, pol: ExecutionPolicy) -> tuple:
+        """The policy fields a backend's construction actually depends on —
+        the adapter cache is keyed on these, so per-call policies with
+        different knobs get (and reuse) their own adapters."""
+        if name in ("pallas", "jnp"):
+            return (pol.interpret, pol.cand_blk, pol.qry_blk, pol.capacity)
+        if name == "rtree":
+            return (pol.rtree_r, pol.rtree_fanout, pol.rtree_threads)
+        return (pol.brute_chunk,)
+
+    def backend(self, name: str,
+                policy: ExecutionPolicy | None = None) -> QueryBackend:
+        """The (cached) backend adapter for ``name`` under ``policy``
+        (default: the database's construction policy)."""
+        if name not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {name!r}; choose from {BACKENDS}")
+        pol = policy or self.policy
+        key = (name,) + self._backend_key(name, pol)
+        if key not in self._backends:
+            if name in ("pallas", "jnp"):
+                eng = copy.copy(self._base_engine)   # shares db/index/_packed
+                eng.use_pallas = (name == "pallas")
+                eng.interpret = pol.interpret
+                eng.cand_blk = pol.cand_blk
+                eng.qry_blk = pol.qry_blk
+                eng.default_capacity = pol.capacity
+                self._backends[key] = EngineBackend(name, eng)
+            elif name == "rtree":
+                self._backends[key] = RTreeBackend(
+                    RTreeEngine(self.segments, r=pol.rtree_r,
+                                fanout=pol.rtree_fanout),
+                    threads=pol.rtree_threads)
+            else:  # brute
+                self._backends[key] = BruteBackend(
+                    self.segments, chunk=pol.brute_chunk)
+        return self._backends[key]
+
+    def engine(self, backend: str = "jnp",
+               policy: ExecutionPolicy | None = None) -> DistanceThresholdEngine:
+        """The underlying engine (perf-model interop: ``benchmark_host_curves``
+        and friends still speak ``DistanceThresholdEngine``)."""
+        be = self.backend(backend, policy)
+        if not isinstance(be, EngineBackend):
+            raise ValueError(f"backend {backend!r} has no engine")
+        return be.engine
+
+    # -- planning --------------------------------------------------------
+    def plan(self, queries: SegmentArray,
+             policy: ExecutionPolicy | None = None) -> BatchPlan:
+        """Build a batch plan for *sorted-or-not* queries (sorts a copy if
+        needed; the facade's query path reuses this)."""
+        qs, _ = self._sorted(queries)
+        return self._make_plan(qs, policy or self.policy)
+
+    def _make_plan(self, sorted_queries: SegmentArray,
+                   pol: ExecutionPolicy) -> BatchPlan:
+        params = pol.resolved_batch_params(len(sorted_queries))
+        try:
+            return ALGORITHMS[pol.batching](self.index, sorted_queries,
+                                            **params)
+        except TypeError as e:
+            raise ValueError(
+                f"batch params {params} do not match algorithm "
+                f"{pol.batching!r}: {e} (pass batching=... alongside the "
+                f"algorithm's parameters)") from None
+
+    @staticmethod
+    def _sorted(queries: SegmentArray
+                ) -> tuple[SegmentArray, np.ndarray | None]:
+        """Sort queries by t_start, returning (sorted, permutation) where
+        ``permutation[i]`` is the caller index of sorted position ``i``
+        (None when already sorted)."""
+        if queries.is_sorted():
+            return queries, None
+        order = np.argsort(queries.ts, kind="stable").astype(np.int64)
+        return queries.take(order), order
+
+    def _resolve_policy(self, batching: str | None,
+                        policy: ExecutionPolicy | None,
+                        batch_params: Mapping) -> ExecutionPolicy:
+        pol = policy or self.policy
+        if batching is not None:
+            pol = pol.with_(batching=batching, batch_params=None)
+        if batch_params:
+            pol = pol.with_(batch_params=dict(batch_params))
+        return pol
+
+    # -- the entrypoint --------------------------------------------------
+    def query(self, queries: SegmentArray, d: float, *,
+              backend: str = "jnp", batching: str | None = None,
+              policy: ExecutionPolicy | None = None,
+              **batch_params) -> QueryResult:
+        """Find every (entry segment, query segment) pair within distance
+        ``d`` during their temporal overlap.
+
+        ``queries`` may be in any order — sorting happens internally and
+        the returned ``QueryResult.query_idx`` is mapped back to the
+        caller's order.  ``batching``/``**batch_params`` are shorthand for a
+        one-off policy override (e.g. ``batching="periodic", s=48``).
+        """
+        if len(queries) == 0:
+            return QueryResult.from_result_set(
+                ResultSet.empty(), order=None, d=float(d), backend=backend)
+        pol = self._resolve_policy(batching, policy, batch_params)
+        be = self.backend(backend, pol)
+        qs, order = self._sorted(queries)
+        plan = self._make_plan(qs, pol) if be.needs_plan else None
+        rs, stats = be.run(qs, float(d), plan)
+        return QueryResult.from_result_set(
+            rs, order=order, d=float(d), backend=backend,
+            stats=stats, plan=plan)
+
+    # -- streaming / serving ---------------------------------------------
+    def query_stream(self, queries: SegmentArray, d: float, *,
+                     backend: str = "jnp", batching: str | None = None,
+                     policy: ExecutionPolicy | None = None,
+                     predict_seconds: Callable | None = None,
+                     delay_hook: Callable | None = None,
+                     **batch_params) -> tuple[QueryResult, SchedulerStats]:
+        """Like :meth:`query`, but executes the plan through the
+        deadline/re-issue scheduler (``repro.core.scheduler``) — the mode a
+        serving deployment uses, where a straggling batch is re-issued
+        rather than stalling the response.
+
+        Only engine backends can stream (the scheduler re-executes
+        individual batches, which requires a plan).
+        """
+        if backend not in ("pallas", "jnp"):
+            raise ValueError(
+                f"query_stream requires an engine backend ('pallas'/'jnp'), "
+                f"got {backend!r}")
+        if len(queries) == 0:
+            return (QueryResult.from_result_set(
+                ResultSet.empty(), order=None, d=float(d), backend=backend),
+                SchedulerStats())
+        pol = self._resolve_policy(batching, policy, batch_params)
+        be = self.backend(backend, pol)
+        qs, order = self._sorted(queries)
+        plan = self._make_plan(qs, pol)
+        sched = DeadlineScheduler(
+            be.engine, workers=pol.stream_workers, slack=pol.stream_slack,
+            min_deadline=pol.stream_min_deadline,
+            predict_seconds=predict_seconds, delay_hook=delay_hook)
+        rs, sstats = sched.execute(qs, float(d), plan)
+        result = QueryResult.from_result_set(
+            rs, order=order, d=float(d), backend=backend, plan=plan)
+        return result, sstats
+
+
+__all__ = [
+    "BACKENDS", "DEFAULT_BATCH_SIZE", "ExecutionPolicy", "QueryBackend",
+    "QueryResult", "TrajectoryDB", "EngineBackend", "RTreeBackend",
+    "BruteBackend",
+]

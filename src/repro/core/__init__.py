@@ -1,10 +1,44 @@
 """The paper's primary contribution: in-memory distance-threshold query
 processing with a GPU/TPU-friendly temporal-bin index (no index trees on
-the hot path), batched query execution, and batch-generation algorithms."""
+the hot path), batched query execution, and batch-generation algorithms.
+
+The stable entry point for *querying* is the :mod:`repro.api` facade
+(``TrajectoryDB``); the engine-level names re-exported here
+(``DistanceThresholdEngine``, ``brute_force``, …) remain importable for one
+release but emit a ``DeprecationWarning`` — new code should go through the
+facade, which owns sorting, planning and caller-order result mapping.
+Importing from the defining submodules (``repro.core.engine`` etc.) stays
+supported and warning-free for internal/advanced use.
+"""
+import warnings
+
 from repro.core.segments import SegmentArray, pad_count  # noqa: F401
 from repro.core.index import TemporalBinIndex, DEFAULT_NUM_BINS  # noqa: F401
 from repro.core.batching import (  # noqa: F401
     ALGORITHMS, BatchPlan, QueryBatch, greedysetsplit_max, greedysetsplit_min,
     periodic, setsplit_fixed, setsplit_max, setsplit_minmax)
-from repro.core.engine import (  # noqa: F401
-    DistanceThresholdEngine, ExecStats, ResultSet, brute_force)
+
+# Deprecated engine-level re-exports: resolved lazily so touching them (and
+# only them) warns.  repro.core.engine itself is NOT deprecated.
+_DEPRECATED_ENGINE_NAMES = {
+    "DistanceThresholdEngine": "repro.api.TrajectoryDB",
+    "ResultSet": "repro.api.QueryResult",
+    "ExecStats": "repro.api.QueryResult.stats",
+    "brute_force": "repro.api.TrajectoryDB.query(..., backend='brute')",
+}
+
+
+def __getattr__(name: str):
+    if name in _DEPRECATED_ENGINE_NAMES:
+        warnings.warn(
+            f"repro.core.{name} is deprecated; use "
+            f"{_DEPRECATED_ENGINE_NAMES[name]} (see repro.api). "
+            f"Importing from repro.core.engine directly remains supported.",
+            DeprecationWarning, stacklevel=2)
+        from repro.core import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_DEPRECATED_ENGINE_NAMES))

@@ -28,6 +28,10 @@ are evaluated per iteration with ``candidate_range_batch``), which keeps
 the quadratic algorithms usable at |Q| of a few thousand.  The *semantics*
 are line-for-line the paper's: each iteration merges the adjacent pair with
 the smallest ``numIntsMerged − numIntsUnmerged``.
+
+Public entry point: algorithm selection lives in
+``repro.api.ExecutionPolicy(batching=..., batch_params=...)``; the facade
+calls into :data:`ALGORITHMS` and owns the sortedness precondition.
 """
 from __future__ import annotations
 

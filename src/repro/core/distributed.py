@@ -36,6 +36,12 @@ from jax.sharding import PartitionSpec as P
 from repro.core.segments import SegmentArray
 from repro.kernels import ops, ref
 
+# jax.shard_map graduated from jax.experimental after 0.4.x; support both.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 
 # ----------------------------------------------------------------------
 # temporal pod partition (paper's multi-node suggestion)
@@ -121,7 +127,7 @@ def make_sharded_count_fn(mesh: Mesh, cand_axes: Sequence[str],
         cnt = jnp.sum(hit.astype(jnp.int32))
         return jax.lax.psum(cnt, all_axes) if all_axes else cnt
 
-    shmapped = jax.shard_map(
+    shmapped = _shard_map(
         local, mesh=mesh,
         in_specs=(P(cand_axes if cand_axes else None, None),
                   P(qry_axes if qry_axes else None, None), P()),
@@ -174,7 +180,7 @@ def make_sharded_query_fn(mesh: Mesh, cand_axes: Sequence[str],
         out["count"] = out["count"][None]
         return out
 
-    shmapped = jax.shard_map(
+    shmapped = _shard_map(
         local, mesh=mesh,
         in_specs=(P(cand_axes, None),
                   P(qry_axes if qry_axes else None, None), P()),

@@ -140,7 +140,12 @@ class DistanceThresholdEngine:
                 plan: BatchPlan) -> tuple[ResultSet, ExecStats]:
         """Run every batch in ``plan`` against the database."""
         if not queries.is_sorted():
-            raise ValueError("queries must be sorted by t_start")
+            # Unreachable from the public facade: repro.api.TrajectoryDB
+            # sorts queries before planning/execution.  Kept as a guard for
+            # direct engine users, who own the sortedness precondition.
+            raise ValueError(
+                "queries must be sorted by t_start; use "
+                "repro.api.TrajectoryDB.query, which sorts automatically")
         q_packed = queries.packed()
         t_begin = time.perf_counter()
         parts: list[ResultSet] = []

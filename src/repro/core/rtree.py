@@ -20,6 +20,9 @@ Implementation notes:
 * ``query_parallel`` dispatches independent query segments across a thread
   pool (the paper's OpenMP analogue; numpy releases the GIL in the refine
   kernels).
+
+Public entry point: ``repro.api.TrajectoryDB.query(..., backend="rtree")``
+(``ExecutionPolicy.rtree_r/rtree_fanout/rtree_threads`` carry the knobs).
 """
 from __future__ import annotations
 

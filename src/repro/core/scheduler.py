@@ -20,6 +20,10 @@ so the engine's batch queue needs the standard production treatments:
 
 Execution here uses a thread pool (the CPU stand-in for per-pod executors);
 ``delay_hook`` lets tests inject artificial stragglers.
+
+Public entry point: ``repro.api.TrajectoryDB.query_stream`` (and the
+``repro.serve.TrajectoryQueryService`` shell on top) — callers rarely build
+a ``DeadlineScheduler`` directly.
 """
 from __future__ import annotations
 

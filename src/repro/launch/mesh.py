@@ -16,19 +16,26 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh_compat(shape, axes):
+    """``jax.make_mesh`` with explicit Auto axis types where the installed
+    jax supports them (``jax.sharding.AxisType`` appeared after 0.4.x; on
+    older versions plain axes already behave as Auto)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh over however many (forced) host devices exist — tests."""
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def data_axes(mesh) -> tuple[str, ...]:

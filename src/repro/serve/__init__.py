@@ -1,1 +1,3 @@
-from repro.serve import batcher, engine  # noqa: F401
+from repro.serve import batcher, engine, trajectory  # noqa: F401
+from repro.serve.trajectory import (  # noqa: F401
+    QueryRequest, QueryResponse, TrajectoryQueryService)

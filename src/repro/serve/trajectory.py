@@ -1,0 +1,102 @@
+"""Trajectory-native serving front door.
+
+The serving layer previously only spoke LLM requests (``serve.engine`` /
+``serve.batcher``); this module gives it the paper's actual workload — an
+online stream of distance-threshold queries (§3) — on top of the
+:mod:`repro.api` facade.
+
+:class:`TrajectoryQueryService` is a minimal request/response shell around
+``TrajectoryDB.query_stream``: callers ``submit()`` query sets as they
+arrive and ``drain()`` executes everything pending through the
+deadline/re-issue scheduler, so one straggling batch cannot stall the
+stream.  It is intentionally synchronous — the async transport (HTTP,
+queues, sharding across pods) layers on *top* of this API without touching
+query semantics, which is exactly the seam the ROADMAP's serving work
+needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+from repro.api import ExecutionPolicy, QueryResult, TrajectoryDB
+from repro.core.scheduler import SchedulerStats
+from repro.core.segments import SegmentArray
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryRequest:
+    """One submitted unit of work: a query segment set + threshold."""
+
+    uid: int
+    queries: SegmentArray
+    d: float
+    submitted_at: float
+
+
+@dataclasses.dataclass
+class QueryResponse:
+    uid: int
+    result: QueryResult
+    scheduler: SchedulerStats
+    latency_seconds: float   # submit → completion (includes queueing)
+
+
+class TrajectoryQueryService:
+    """Online distance-threshold query service over one ``TrajectoryDB``.
+
+    Example::
+
+        db = TrajectoryDB.from_scenario("S2", scale=0.02)
+        svc = TrajectoryQueryService(db, backend="jnp")
+        uid = svc.submit(db.scenario_queries, db.scenario_d)
+        responses = svc.drain()           # {uid: QueryResponse}
+    """
+
+    def __init__(self, db: TrajectoryDB, *, backend: str = "jnp",
+                 policy: ExecutionPolicy | None = None,
+                 predict_seconds: Callable | None = None):
+        if backend not in ("pallas", "jnp"):
+            raise ValueError(
+                "TrajectoryQueryService streams through the scheduler and "
+                f"therefore needs an engine backend, got {backend!r}")
+        self.db = db
+        self.backend = backend
+        self.policy = policy or db.policy
+        self.predict_seconds = predict_seconds
+        self._next_uid = 0
+        self._pending: list[QueryRequest] = []
+        self.completed = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, queries: SegmentArray, d: float) -> int:
+        """Enqueue a query set (any order — the facade sorts); returns a
+        request id to correlate with :meth:`drain`'s responses."""
+        uid = self._next_uid
+        self._next_uid += 1
+        self._pending.append(QueryRequest(uid, queries, float(d),
+                                          time.perf_counter()))
+        return uid
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    # ------------------------------------------------------------------
+    def drain(self) -> dict[int, QueryResponse]:
+        """Execute every pending request through ``query_stream`` and
+        return responses keyed by request id."""
+        out: dict[int, QueryResponse] = {}
+        # Pop one at a time so a request that raises only loses itself —
+        # the rest of the queue stays pending for the next drain().
+        while self._pending:
+            req = self._pending.pop(0)
+            result, sstats = self.db.query_stream(
+                req.queries, req.d, backend=self.backend, policy=self.policy,
+                predict_seconds=self.predict_seconds)
+            out[req.uid] = QueryResponse(
+                uid=req.uid, result=result, scheduler=sstats,
+                latency_seconds=time.perf_counter() - req.submitted_at)
+            self.completed += 1
+        return out

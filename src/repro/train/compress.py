@@ -28,6 +28,12 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+# jax.shard_map graduated from jax.experimental after 0.4.x; support both.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 
 def init_error_state(grads):
     return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
@@ -86,7 +92,7 @@ def make_compressed_allreduce(mesh: Mesh, axes: Sequence[str],
         e_new = jax.tree.unflatten(treedef, [o[1] for o in out])
         return mean, e_new
 
-    shmapped = jax.shard_map(
+    shmapped = _shard_map(
         local, mesh=mesh,
         in_specs=(P(axes), P(axes)),
         out_specs=(P(), P(axes)),

@@ -1,0 +1,94 @@
+"""Optional-``hypothesis`` shim for the test suite.
+
+``hypothesis`` is an *optional* test dependency (``pip install -e
+.[test]``).  When it is installed, this module re-exports the real
+``given`` / ``settings`` / ``strategies`` untouched.  When it is not, a
+minimal deterministic stand-in takes over: ``@given`` draws a fixed number
+of pseudo-random examples per strategy (seeded from the test's qualified
+name, so runs are reproducible) and calls the test once per example.
+
+The stand-in intentionally implements only what this suite uses —
+``integers``, ``floats``, ``sampled_from``, ``booleans`` — and none of
+hypothesis's shrinking, replay database, or health checks.  It keeps the
+randomized coverage of the property tests without making CI depend on an
+extra package.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised when hypothesis is absent
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import types
+    import zlib
+
+    import numpy as np
+
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    class _Strategy:
+        """A strategy is just a draw function over a numpy Generator."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: np.random.Generator):
+            return self._draw(rng)
+
+    def _integers(min_value=0, max_value=2**31 - 1) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                      max_value + 1)))
+
+    def _floats(min_value=0.0, max_value=1.0, **_kw) -> _Strategy:
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    def _sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+    def _booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    strategies = types.SimpleNamespace(
+        integers=_integers, floats=_floats, sampled_from=_sampled_from,
+        booleans=_booleans)
+
+    def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+        """Record max_examples; every other hypothesis knob is a no-op."""
+
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        """Call the wrapped test once per drawn example (keyword style only,
+        which is the only style this suite uses)."""
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_compat_max_examples",
+                            _DEFAULT_MAX_EXAMPLES)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for _ in range(n):
+                    drawn = {k: s.example(rng) for k, s in strats.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            # Hide the drawn parameters from pytest's fixture resolution:
+            # expose only the non-strategy parameters (i.e. ``self``).
+            sig = inspect.signature(fn)
+            remaining = [p for name, p in sig.parameters.items()
+                         if name not in strats]
+            wrapper.__signature__ = sig.replace(parameters=remaining)
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco

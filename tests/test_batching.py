@@ -1,8 +1,8 @@
 """Batch-generation algorithms: Fig. 2 arithmetic + partition invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings
+from _hypothesis_compat import strategies as st
 
 from conftest import random_segments
 from repro.core import batching

@@ -47,12 +47,12 @@ _SUBPROCESS_SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import numpy as np, jax
     import jax.numpy as jnp
-    from repro.core import brute_force
+    from repro.core.engine import brute_force
     from repro.core.distributed import DistributedEngine, make_sharded_count_fn
     from repro.data import trajgen
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((4, 2), ("data", "model"))
     db, queries, d = trajgen.make_scenario("S3", scale=0.005)
     bf = brute_force(db, queries, d)
     eng = DistributedEngine(mesh, db, cand_axes=("data",), num_bins=200,
@@ -92,10 +92,10 @@ _ELASTIC_SCRIPT = textwrap.dedent("""
     from repro.train import step as step_lib
 
     cfg = ARCHS["granite-3-2b"].reduced()
-    auto = (jax.sharding.AxisType.Auto,) * 2
+    from repro.launch.mesh import make_mesh_compat
 
     # train state born on an 8-chip (4 data × 2 model) mesh
-    mesh_a = jax.make_mesh((4, 2), ("data", "model"), axis_types=auto)
+    mesh_a = make_mesh_compat((4, 2), ("data", "model"))
     state = step_lib.init_train_state(cfg, jax.random.PRNGKey(0))
     specs = step_lib.train_state_specs(cfg)
     sh_a = shd.train_state_shardings(cfg, mesh_a, specs)
@@ -104,7 +104,7 @@ _ELASTIC_SCRIPT = textwrap.dedent("""
     with tempfile.TemporaryDirectory() as root:
         ckpt.save(root, 7, state)
         # restore onto a RESHAPED mesh (2 data × 4 model) — elastic reshard
-        mesh_b = jax.make_mesh((2, 4), ("data", "model"), axis_types=auto)
+        mesh_b = make_mesh_compat((2, 4), ("data", "model"))
         sh_b = shd.train_state_shardings(cfg, mesh_b, specs)
         restored, step, _ = ckpt.restore(root, state, shardings=sh_b)
         assert step == 7

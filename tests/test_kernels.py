@@ -1,8 +1,8 @@
 """Per-kernel allclose sweeps: Pallas kernels vs pure-jnp oracles."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings
+from _hypothesis_compat import strategies as st
 
 from conftest import random_segments
 from repro.kernels import ops, ref

@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 
 from conftest import random_segments
-from repro.core import brute_force
+from repro.core.engine import brute_force
 from repro.core.engine import DistanceThresholdEngine
 from repro.core.perfmodel import (ResponseTimeModel, benchmark_device_curves,
                                   benchmark_host_curves, estimate_alpha_by_epoch,

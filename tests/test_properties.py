@@ -1,11 +1,12 @@
 """System-level property tests (hypothesis): invariants of the full
 pipeline under randomized databases, query sets and parameters."""
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings
+from _hypothesis_compat import strategies as st
 
 from conftest import random_segments
-from repro.core import batching, brute_force
+from repro.core import batching
+from repro.core.engine import brute_force
 from repro.core.engine import DistanceThresholdEngine
 
 

@@ -6,7 +6,8 @@ import numpy as np
 import pytest
 
 from conftest import random_segments
-from repro.core import batching, brute_force
+from repro.core import batching
+from repro.core.engine import brute_force
 from repro.core.engine import DistanceThresholdEngine
 from repro.core.scheduler import DeadlineScheduler
 

@@ -4,7 +4,8 @@ R-tree CPU baseline and brute force, on scaled paper scenarios."""
 import numpy as np
 import pytest
 
-from repro.core import batching, brute_force
+from repro.core import batching
+from repro.core.engine import brute_force
 from repro.core.engine import DistanceThresholdEngine
 from repro.core.rtree import RTreeEngine
 from repro.data import trajgen
