@@ -1,10 +1,32 @@
-"""§5 kernel microbenchmark: interaction-tile throughput vs tile shape.
+"""§5 kernel microbenchmark + compaction/executor comparison.
 
-Sweeps (candidates × queries) shapes through the jnp path (CPU-executable)
-and the Pallas kernel in interpret mode (semantics check at speed-
-irrelevant scale); reports interactions/second and µs/call.
+Three sections:
+
+* ``run``            — interaction-tile throughput vs tile shape (jnp path
+                       plus a Pallas interpret-mode parity point).
+* ``run_compaction`` — ``ops.query_block`` with ``compaction="dense"`` (two
+                       XLA phases: mask materialization + cumsum/scatter +
+                       interval recompute) vs ``compaction="fused"`` (this
+                       PR's in-kernel compaction), both through the Pallas
+                       kernel so the comparison isolates the compaction
+                       strategy.
+* ``run_executor``   — end-to-end S2 scenario through the facade: the
+                       per-batch-sync loop vs the async pipelined executor,
+                       for both compaction strategies (engine backends).
+
+``canonical_report`` bundles all three into the BENCH_PR2 dict that
+``benchmarks/run.py`` (and CI) writes as ``BENCH_PR2.json`` — the first
+entry of the perf trajectory future PRs regress against.
+
+Run directly::
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench [--quick] [--json PATH]
 """
 from __future__ import annotations
+
+import argparse
+import json
+import sys
 
 import numpy as np
 
@@ -51,12 +73,121 @@ def run(shapes=((1024, 64), (4096, 64), (4096, 256), (16384, 128)),
     return rows
 
 
-def main():
-    for r in run():
+def run_compaction(shapes=((512, 64), (1024, 128)), repeats: int = 3,
+                   capacity: int = 4096) -> list[dict]:
+    """Dense two-phase vs fused in-kernel compaction (Pallas path)."""
+    import jax
+    rng = np.random.default_rng(1)
+    rows = []
+    for c, q in shapes:
+        e = _random_packed(rng, c)
+        qq = _random_packed(rng, q)
+        d = np.float32(3.0)
+        for compaction in ("dense", "fused"):
+            def call(compaction=compaction):
+                return jax.block_until_ready(ops.query_block(
+                    e, qq, d, capacity=capacity, use_pallas=True,
+                    cand_blk=128, qry_blk=64, compaction=compaction))
+            out = call()                                   # warm jit
+            _, sec = timed(call, repeats=repeats)
+            rows.append({"bench": "compaction", "impl": compaction,
+                         "c": c, "q": q, "hits": int(out["count"]),
+                         "us_per_call": sec * 1e6,
+                         "interactions_per_s": c * q / sec})
+    return rows
+
+
+def run_executor(scale: float = 0.01, s: int = 32,
+                 repeats: int = 2) -> list[dict]:
+    """End-to-end S2: sync vs pipelined executor × dense vs fused."""
+    from repro.api import ExecutionPolicy, TrajectoryDB
+    policy = ExecutionPolicy(batching="periodic", batch_params={"s": s},
+                             num_bins=500)
+    db = TrajectoryDB.from_scenario("S2", scale=scale, policy=policy)
+    queries, d = db.scenario_queries, db.scenario_d
+    combos = [("jnp", "dense", False), ("jnp", "dense", True),
+              ("pallas", "dense", False), ("pallas", "dense", True),
+              ("pallas", "fused", False), ("pallas", "fused", True)]
+    rows = []
+    for backend, compaction, pipeline in combos:
+        def call(backend=backend, compaction=compaction, pipeline=pipeline):
+            return db.query(queries, d, backend=backend,
+                            compaction=compaction, pipeline=pipeline)
+        call()                                              # warm jit
+        # Keep wall time and stats from the SAME (best) run, so the
+        # kernel/host split in the canonical report is self-consistent.
+        runs = [timed(call, repeats=1) for _ in range(repeats)]
+        res, sec = min(runs, key=lambda r: r[1])
+        st = res.stats
+        rows.append({
+            "bench": "executor", "scenario": "S2", "scale": scale,
+            "backend": backend, "compaction": compaction,
+            "pipeline": pipeline, "total_seconds": sec,
+            "kernel_seconds": st.kernel_seconds,
+            "host_seconds": max(sec - st.kernel_seconds, 0.0),
+            "interactions_per_s": st.total_interactions / sec,
+            "num_invocations": st.num_invocations,
+            "num_syncs": st.num_syncs, "total_hits": st.total_hits,
+        })
+    return rows
+
+
+def canonical_report(*, quick: bool = False) -> dict:
+    """The BENCH_PR2 payload: one dict, JSON-serializable, regressable."""
+    scale = 0.005 if quick else 0.01
+    kernel = run(shapes=(((1024, 64), (4096, 64)) if quick else
+                         ((1024, 64), (4096, 64), (4096, 256), (16384, 128))),
+                 repeats=1 if quick else 3)
+    compaction = run_compaction(
+        shapes=((512, 64),) if quick else ((512, 64), (1024, 128)),
+        repeats=1 if quick else 3)
+    executor = run_executor(scale=scale, repeats=1 if quick else 2)
+    return {"bench": "BENCH_PR2", "scenario": "S2", "scale": scale,
+            "quick": quick, "kernel": kernel, "compaction": compaction,
+            "executor": executor}
+
+
+def print_kernel_rows(rows: list[dict]) -> None:
+    for r in rows:
         print(f"kernel,{r['impl']},c={r['c']},q={r['q']},"
               f"us_per_call={r['us_per_call']:.0f},"
               f"Minter_per_s={r['interactions_per_s'] / 1e6:.1f}")
 
 
+def print_compaction_rows(rows: list[dict]) -> None:
+    for r in rows:
+        print(f"compaction,{r['impl']},c={r['c']},q={r['q']},"
+              f"hits={r['hits']},us_per_call={r['us_per_call']:.0f},"
+              f"Minter_per_s={r['interactions_per_s'] / 1e6:.1f}")
+
+
+def print_executor_rows(rows: list[dict]) -> None:
+    for r in rows:
+        print(f"executor,{r['backend']},compaction={r['compaction']},"
+              f"pipeline={r['pipeline']},total_s={r['total_seconds']:.3f},"
+              f"kernel_s={r['kernel_seconds']:.3f},"
+              f"syncs={r['num_syncs']}/{r['num_invocations']},"
+              f"Minter_per_s={r['interactions_per_s'] / 1e6:.1f}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizes (seconds, not minutes)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the canonical BENCH_PR2 report to PATH")
+    args = ap.parse_args(argv)
+
+    report = canonical_report(quick=args.quick)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# wrote {args.json}")
+    print_kernel_rows(report["kernel"])
+    print_compaction_rows(report["compaction"])
+    print_executor_rows(report["executor"])
+    return 0
+
+
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -6,10 +6,18 @@ Prints one CSV block per benchmark.  Run as::
 
 ``--full`` uses larger dataset scales (minutes on CPU); the default keeps
 each benchmark to seconds so CI can execute the whole harness.
+
+The ``bench_pr2`` entry additionally writes the canonical
+``BENCH_PR2.json`` (see ``benchmarks.kernel_bench.canonical_report``) —
+the first point of the perf trajectory: interactions/sec, kernel vs host
+seconds, dense vs fused compaction and sync vs pipelined execution on the
+S2 scenario.  Future PRs regress against it (``--bench-out`` moves the
+file; CI uploads it as a workflow artifact).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -19,17 +27,31 @@ def main(argv=None) -> int:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
+    ap.add_argument("--bench-out", default="BENCH_PR2.json",
+                    help="path for the canonical bench_pr2 JSON report")
     args = ap.parse_args(argv)
 
     from benchmarks import (fig3_interactions, kernel_bench, roofline_report,
                             speedup_vs_rtree, table2_batching,
                             table3_perfmodel)
+
+    def bench_pr2():
+        report = kernel_bench.canonical_report(quick=not args.full)
+        with open(args.bench_out, "w") as f:
+            json.dump(report, f, indent=2)
+        kernel_bench.print_compaction_rows(report["compaction"])
+        kernel_bench.print_executor_rows(report["executor"])
+        print(f"# bench_pr2 report -> {args.bench_out}")
+
     benches = {
         "fig3": lambda: fig3_interactions.main(),
         "table2": lambda: table2_batching.main(),
         "speedup": lambda: speedup_vs_rtree.main(),
         "table3": lambda: table3_perfmodel.main(),
-        "kernel": lambda: kernel_bench.main(),
+        # classic tile sweep only — compaction/executor live in bench_pr2
+        "kernel": lambda: kernel_bench.print_kernel_rows(
+            kernel_bench.run(repeats=3 if args.full else 1)),
+        "bench_pr2": bench_pr2,
         "roofline": lambda: roofline_report.main(),
     }
     only = set(args.only.split(",")) if args.only else None

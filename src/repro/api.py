@@ -93,6 +93,8 @@ class ExecutionPolicy:
     qry_blk: int = DEFAULT_QRY_BLK
     capacity: int = 4096                  # result-buffer slots per batch
     interpret: bool = True                # Pallas interpret mode (CPU)
+    compaction: str = "fused"             # "fused" in-kernel | "dense" 2-phase
+    pipeline: bool = True                 # async 2-phase executor (O(1) syncs)
 
     # -- R-tree baseline ------------------------------------------------
     rtree_r: int = 12                     # segments per leaf MBB (Fig. 5)
@@ -289,7 +291,8 @@ class TrajectoryDB:
             segments, num_bins=self.policy.num_bins, use_pallas=False,
             interpret=self.policy.interpret, cand_blk=self.policy.cand_blk,
             qry_blk=self.policy.qry_blk,
-            default_capacity=self.policy.capacity)
+            default_capacity=self.policy.capacity,
+            compaction=self.policy.compaction, pipeline=self.policy.pipeline)
         self.segments: SegmentArray = self._base_engine.db
         self.index: TemporalBinIndex = self._base_engine.index
         self._backends: dict[str, QueryBackend] = {}
@@ -339,7 +342,8 @@ class TrajectoryDB:
         the adapter cache is keyed on these, so per-call policies with
         different knobs get (and reuse) their own adapters."""
         if name in ("pallas", "jnp"):
-            return (pol.interpret, pol.cand_blk, pol.qry_blk, pol.capacity)
+            return (pol.interpret, pol.cand_blk, pol.qry_blk, pol.capacity,
+                    pol.compaction, pol.pipeline)
         if name == "rtree":
             return (pol.rtree_r, pol.rtree_fanout, pol.rtree_threads)
         return (pol.brute_chunk,)
@@ -361,6 +365,8 @@ class TrajectoryDB:
                 eng.cand_blk = pol.cand_blk
                 eng.qry_blk = pol.qry_blk
                 eng.default_capacity = pol.capacity
+                eng.compaction = pol.compaction
+                eng.pipeline = pol.pipeline
                 self._backends[key] = EngineBackend(name, eng)
             elif name == "rtree":
                 self._backends[key] = RTreeBackend(
@@ -414,18 +420,25 @@ class TrajectoryDB:
 
     def _resolve_policy(self, batching: str | None,
                         policy: ExecutionPolicy | None,
-                        batch_params: Mapping) -> ExecutionPolicy:
+                        batch_params: Mapping,
+                        compaction: str | None = None,
+                        pipeline: bool | None = None) -> ExecutionPolicy:
         pol = policy or self.policy
         if batching is not None:
             pol = pol.with_(batching=batching, batch_params=None)
         if batch_params:
             pol = pol.with_(batch_params=dict(batch_params))
+        if compaction is not None:
+            pol = pol.with_(compaction=compaction)
+        if pipeline is not None:
+            pol = pol.with_(pipeline=pipeline)
         return pol
 
     # -- the entrypoint --------------------------------------------------
     def query(self, queries: SegmentArray, d: float, *,
               backend: str = "jnp", batching: str | None = None,
               policy: ExecutionPolicy | None = None,
+              compaction: str | None = None, pipeline: bool | None = None,
               **batch_params) -> QueryResult:
         """Find every (entry segment, query segment) pair within distance
         ``d`` during their temporal overlap.
@@ -433,12 +446,16 @@ class TrajectoryDB:
         ``queries`` may be in any order — sorting happens internally and
         the returned ``QueryResult.query_idx`` is mapped back to the
         caller's order.  ``batching``/``**batch_params`` are shorthand for a
-        one-off policy override (e.g. ``batching="periodic", s=48``).
+        one-off policy override (e.g. ``batching="periodic", s=48``), as are
+        ``compaction=`` ("fused" in-kernel vs "dense" two-phase result
+        compaction) and ``pipeline=`` (async O(1)-sync executor vs per-batch
+        sync loop) for the engine backends.
         """
         if len(queries) == 0:
             return QueryResult.from_result_set(
                 ResultSet.empty(), order=None, d=float(d), backend=backend)
-        pol = self._resolve_policy(batching, policy, batch_params)
+        pol = self._resolve_policy(batching, policy, batch_params,
+                                   compaction, pipeline)
         be = self.backend(backend, pol)
         qs, order = self._sorted(queries)
         plan = self._make_plan(qs, pol) if be.needs_plan else None
@@ -451,6 +468,8 @@ class TrajectoryDB:
     def query_stream(self, queries: SegmentArray, d: float, *,
                      backend: str = "jnp", batching: str | None = None,
                      policy: ExecutionPolicy | None = None,
+                     compaction: str | None = None,
+                     pipeline: bool | None = None,
                      predict_seconds: Callable | None = None,
                      delay_hook: Callable | None = None,
                      **batch_params) -> tuple[QueryResult, SchedulerStats]:
@@ -470,7 +489,8 @@ class TrajectoryDB:
             return (QueryResult.from_result_set(
                 ResultSet.empty(), order=None, d=float(d), backend=backend),
                 SchedulerStats())
-        pol = self._resolve_policy(batching, policy, batch_params)
+        pol = self._resolve_policy(batching, policy, batch_params,
+                                   compaction, pipeline)
         be = self.backend(backend, pol)
         qs, order = self._sorted(queries)
         plan = self._make_plan(qs, pol)

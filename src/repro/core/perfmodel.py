@@ -229,12 +229,17 @@ def benchmark_host_curves(engine: DistanceThresholdEngine,
     We execute the engine with d≈0 (nothing within threshold ⇒ empty result
     sets) and attribute the measured host time to invocation overhead; then
     measure marshalling bandwidth with one large compaction.
+
+    Always runs the engine's *sync* executor (``pipeline=False``): the model
+    is per-invocation, and ``BatchStats.kernel_seconds`` is only measured
+    per batch when every batch is individually synced (the pipelined
+    executor deliberately has no per-batch timings to read).
     """
     totals = []
     for s in s_values:
         plan = periodic(engine.index, queries, s)
-        _, stats = engine.execute(queries, 0.0, plan)        # α ≈ 0
-        _, stats = engine.execute(queries, 0.0, plan)        # warm jit
+        _, stats = engine.execute(queries, 0.0, plan, pipeline=False)  # α ≈ 0
+        _, stats = engine.execute(queries, 0.0, plan, pipeline=False)  # warm jit
         totals.append(max(stats.host_seconds, 1e-6))
     # log-log least squares: log T = log A + B log s
     ls = np.log(np.asarray(s_values, float))

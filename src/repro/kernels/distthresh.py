@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for the distance-threshold interaction tile.
+"""Pallas TPU kernels for the distance-threshold interaction tile.
 
 TPU adaptation of the paper's ``GPUTRAJDISTSEARCH`` (Algorithm 1).  The GPU
 version assigns one hardware thread per candidate entry segment, loops that
@@ -21,8 +21,28 @@ Layout choices (the important part):
   same reuse the GPU kernel gets from its thread-private candidate copy
   (paper §8.1.3's observation about Mixed-execution reuse).
 
+Two kernels share the interval math (:func:`_tile_intervals`):
+
+* :func:`distthresh_pallas` — the dense kernel: materializes the full
+  (C, Q) ``(t_enter, t_exit, hit)`` tile set in HBM; a host-side XLA pass
+  compacts it (``ops.query_block(compaction="dense")``).
+* :func:`distthresh_compact_pallas` — the **fused in-kernel compaction**
+  kernel (this PR's tentpole): the TPU grid runs its tiles *sequentially*
+  on one core, so a running hit counter carried in the revisited ``count``
+  output block is the deterministic analogue of the paper's §5
+  ``atomic_inc`` result append.  Each tile computes its hit mask, locates
+  every hit with a masked prefix sum + rank-selection (row-major over the
+  tile), recomputes the hit pairs' intervals on small VMEM gathers, and
+  appends them at the running counter's offset into capacity-bounded flat
+  result buffers.  Non-hits never touch HBM — neither the dense interval
+  tiles nor the hit mask leave the core — and the exact total hit count
+  comes back with the results, so overflow detection needs no dense pass
+  and no host-side recompute phase.
+
 The interval math matches ``ref.interaction_tile`` bit-for-bit in float32;
-tests sweep shapes/dtypes and assert allclose against the oracle.
+tests sweep shapes/dtypes and assert allclose against the oracle, and the
+fused kernel's compacted rows are asserted equal to the dense kernel's
+nonzero set (tests/test_kernels.py).
 """
 from __future__ import annotations
 
@@ -37,31 +57,65 @@ from jax.experimental import pallas as pl
 DEFAULT_CAND_BLK = 256
 DEFAULT_QRY_BLK = 256
 
+# Fused-compaction append granularity: hits are appended to the result
+# buffers in chunks of this many slots, so per-tile compaction work scales
+# with the hit count, not the tile size.
+APPEND_BLK = 256
+
 _A_EPS = 1e-12
 _B_EPS = 1e-12
 
 
-def _distthresh_kernel(d_ref, entries_ref, queries_t_ref,
-                       enter_ref, exit_ref, hit_ref):
-    e = entries_ref[...]          # (C_BLK, 8)
-    q = queries_t_ref[...]        # (8, Q_BLK)
-    d = d_ref[0, 0]
+def _tile_intervals(e, q, d):
+    """Interval math for one (C_BLK, Q_BLK) tile.
 
-    # Entry components as (C, 1); query components as (1, Q).
-    ex0, ey0, ez0 = e[:, 0:1], e[:, 1:2], e[:, 2:3]
-    ex1, ey1, ez1 = e[:, 3:4], e[:, 4:5], e[:, 5:6]
-    ets, ete = e[:, 6:7], e[:, 7:8]
-    qx0, qy0, qz0 = q[0:1, :], q[1:2, :], q[2:3, :]
-    qx1, qy1, qz1 = q[3:4, :], q[4:5, :], q[5:6, :]
-    qts, qte = q[6:7, :], q[7:8, :]
+    Args:
+      e: (C_BLK, 8) entry block.
+      q: (8, Q_BLK) transposed query block.
+      d: scalar threshold.
+
+    Returns (t_enter, t_exit, hit) of shape (C_BLK, Q_BLK); hit is bool and
+    the interval endpoints are zeroed where it is False.
+    """
+    # Entry components as (C, 1); query components as (1, Q) — every
+    # per-pair quantity is a rank-2 outer broadcast.
+    return _interval_math(tuple(e[:, k:k + 1] for k in range(8)),
+                          tuple(q[k:k + 1, :] for k in range(8)),
+                          d, e.dtype)
+
+
+def _pair_intervals(e_rows, q_cols, d):
+    """Interval math for N explicit (entry, query) pairs.
+
+    Args:
+      e_rows: (N, 8) gathered entry segments.
+      q_cols: (8, N) gathered (transposed) query segments.
+      d: scalar threshold.
+
+    Returns (t_enter, t_exit, hit) of shape (N,).
+    """
+    return _interval_math(tuple(e_rows[:, k] for k in range(8)),
+                          tuple(q_cols[k, :] for k in range(8)),
+                          d, e_rows.dtype)
+
+
+def _interval_math(e8, q8, d, dtype):
+    """Shared branchless interval solve over broadcastable components.
+
+    ``e8`` / ``q8`` are the 8 packed-segment components (x0, y0, z0, x1,
+    y1, z1, ts, te) of the entries and queries, in mutually broadcastable
+    shapes; all outputs take the broadcast shape.
+    """
+    ex0, ey0, ez0, ex1, ey1, ez1, ets, ete = e8
+    qx0, qy0, qz0, qx1, qy1, qz1, qts, qte = q8
 
     # Velocities; zero-length temporal extents are static points.
     edt = ete - ets
     qdt = qte - qts
     e_safe = jnp.where(edt > 0, edt, 1.0)
     q_safe = jnp.where(qdt > 0, qdt, 1.0)
-    e_live = (edt > 0).astype(e.dtype)
-    q_live = (qdt > 0).astype(e.dtype)
+    e_live = (edt > 0).astype(dtype)
+    q_live = (qdt > 0).astype(dtype)
     evx = (ex1 - ex0) / e_safe * e_live
     evy = (ey1 - ey0) / e_safe * e_live
     evz = (ez1 - ez0) / e_safe * e_live
@@ -86,7 +140,7 @@ def _distthresh_kernel(d_ref, entries_ref, queries_t_ref,
     b = 2.0 * (drx * dvx + dry * dvy + drz * dvz)
     c = drx * drx + dry * dry + drz * drz - d * d
 
-    inf = jnp.asarray(jnp.inf, e.dtype)
+    inf = jnp.asarray(jnp.inf, dtype)
 
     # calcTimeInterval: {t : a t^2 + b t + c <= 0} as [rlo, rhi].
     disc = b * b - 4.0 * a * c
@@ -112,9 +166,16 @@ def _distthresh_kernel(d_ref, entries_ref, queries_t_ref,
     t_exit = jnp.minimum(rhi, hi)
     hit = t_overlap & nonempty & (t_enter <= t_exit)
 
-    zero = jnp.zeros((), e.dtype)
-    enter_ref[...] = jnp.where(hit, t_enter, zero)
-    exit_ref[...] = jnp.where(hit, t_exit, zero)
+    zero = jnp.zeros((), dtype)
+    return (jnp.where(hit, t_enter, zero), jnp.where(hit, t_exit, zero), hit)
+
+
+def _distthresh_kernel(d_ref, entries_ref, queries_t_ref,
+                       enter_ref, exit_ref, hit_ref):
+    t_enter, t_exit, hit = _tile_intervals(entries_ref[...],
+                                           queries_t_ref[...], d_ref[0, 0])
+    enter_ref[...] = t_enter
+    exit_ref[...] = t_exit
     hit_ref[...] = hit.astype(jnp.int8)
 
 
@@ -123,7 +184,7 @@ def distthresh_pallas(entries: jnp.ndarray, queries_t: jnp.ndarray, d,
                       *, cand_blk: int = DEFAULT_CAND_BLK,
                       qry_blk: int = DEFAULT_QRY_BLK,
                       interpret: bool = True) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Raw pallas_call over pre-padded inputs.
+    """Raw pallas_call over pre-padded inputs (dense outputs).
 
     Args:
       entries: (C, 8) with C a multiple of ``cand_blk``.
@@ -159,3 +220,170 @@ def distthresh_pallas(entries: jnp.ndarray, queries_t: jnp.ndarray, d,
         out_shape=out_shapes,
         interpret=interpret,
     )(d_arr, entries, queries_t)
+
+
+# ----------------------------------------------------------------------
+# Fused in-kernel compaction (the §5 atomic_inc analogue, sequential grid)
+# ----------------------------------------------------------------------
+def _distthresh_compact_kernel(d_ref, entries_ref, queries_t_ref,
+                               e_idx_ref, q_idx_ref, enter_ref, exit_ref,
+                               count_ref, *, cand_blk: int, qry_blk: int,
+                               capacity: int, valid_c: int, valid_q: int):
+    """One grid step: evaluate a tile, append its hits at the running offset.
+
+    The four flat result buffers and the (1, 1) ``count`` block use constant
+    index maps, so they stay resident across the sequential grid — ``count``
+    doubles as the running hit counter (SMEM-resident scalar on hardware).
+    Appends use the *overwritten-tail* scheme: a tile writes
+    ``ceil(tile_hits / APPEND_BLK)`` fixed-width windows whose rows are the
+    compacted hits, the last window's tail being pad rows; the next tile's
+    first window starts at ``offset + tile_hits``, overwriting the tail.
+    Buffers carry one window of slack beyond ``capacity`` so a window
+    starting at any offset ``<= capacity`` fits; once the counter passes
+    ``capacity`` appends are skipped (the caller sees ``count > capacity``
+    and retries larger — the counter itself keeps accumulating, so ``count``
+    is always exact).
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    tile = cand_blk * qry_blk
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        e_idx_ref[...] = jnp.full(e_idx_ref.shape, -1, jnp.int32)
+        q_idx_ref[...] = jnp.full(q_idx_ref.shape, -1, jnp.int32)
+        enter_ref[...] = jnp.zeros(enter_ref.shape, enter_ref.dtype)
+        exit_ref[...] = jnp.zeros(exit_ref.shape, exit_ref.dtype)
+        count_ref[0, 0] = 0
+
+    e_blk = entries_ref[...]                     # (cand_blk, 8), VMEM
+    q_blk = queries_t_ref[...]                   # (8, qry_blk), VMEM
+    d = d_ref[0, 0]
+    # Only the hit mask is live here — the dense (C, Q) interval tiles are
+    # dead code and never materialize; intervals are recomputed per hit in
+    # the append loop below (≈ 70 FLOPs each, on ≤ tile_hits pairs).
+    _, _, hit = _tile_intervals(e_blk, q_blk, d)
+
+    # Mask padding rows/cols (broadcast vectors, no full index tiles) so
+    # pad×pad pairs (identical zero segments at the pad time) never append.
+    row_ok = (jax.lax.broadcasted_iota(jnp.int32, (cand_blk, 1), 0)
+              + i * cand_blk) < valid_c
+    col_ok = (jax.lax.broadcasted_iota(jnp.int32, (1, qry_blk), 1)
+              + j * qry_blk) < valid_q
+    hit = hit & row_ok & col_ok
+
+    # Masked prefix sum over the row-major flattened tile: cum[f] is the
+    # number of hits at flat index <= f, so the k-th hit (k = 1..tile_hits)
+    # sits at the first f with cum[f] == k — a rank-selection gather moves
+    # the hits to the tile prefix in row-major order without any scatter:
+    # slot s reads flat index searchsorted(cum, s + 1).
+    cum = jnp.cumsum(hit.astype(jnp.int32).reshape(tile))
+    tile_hits = cum[-1]
+    offset = count_ref[0, 0]
+
+    # Append in APPEND_BLK-slot chunks, looping only ceil(tile_hits / blk)
+    # times: the work is O(hits · log tile), not O(tile) — in sparse
+    # workloads (the common case: α is small, paper §8.1.2) a tile pays the
+    # hit-mask math, one cumsum and at most one small chunk; zero-hit tiles
+    # skip the loop entirely.
+    blk = min(tile, APPEND_BLK)
+    zero = jnp.zeros((), enter_ref.dtype)
+
+    def _append_chunk(k, carry):
+        base = k * blk
+        slot = base + jax.lax.broadcasted_iota(jnp.int32, (blk, 1), 0)[:, 0]
+        src = jnp.minimum(
+            jnp.searchsorted(cum, slot + 1, method="scan_unrolled"), tile - 1)
+        valid = slot < tile_hits                 # slots past the hit count
+        dst = offset + base
+        # local/global (entry row, query col) indices from the flat src
+        e_loc = src // qry_blk
+        q_loc = src % qry_blk
+        e_idx = jnp.where(valid, i * cand_blk + e_loc, -1)
+        q_idx = jnp.where(valid, j * qry_blk + q_loc, -1)
+        # per-pair interval recompute on small (blk, 8)/(8, blk) gathers —
+        # keeps the dense interval tiles out of the live set entirely
+        t_enter, t_exit, _ = _pair_intervals(e_blk[e_loc, :],
+                                             q_blk[:, q_loc], d)
+
+        @pl.when(dst <= capacity)                # overflow: drop, keep count
+        def _():
+            e_idx_ref[pl.ds(dst, blk)] = e_idx
+            q_idx_ref[pl.ds(dst, blk)] = q_idx
+            enter_ref[pl.ds(dst, blk)] = jnp.where(valid, t_enter, zero)
+            exit_ref[pl.ds(dst, blk)] = jnp.where(valid, t_exit, zero)
+
+        return carry
+
+    jax.lax.fori_loop(0, (tile_hits + blk - 1) // blk, _append_chunk, 0)
+    count_ref[0, 0] = offset + tile_hits
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "capacity", "cand_blk", "qry_blk", "valid_c", "valid_q", "interpret"))
+def distthresh_compact_pallas(entries: jnp.ndarray, queries_t: jnp.ndarray, d,
+                              *, capacity: int,
+                              cand_blk: int = DEFAULT_CAND_BLK,
+                              qry_blk: int = DEFAULT_QRY_BLK,
+                              valid_c: int | None = None,
+                              valid_q: int | None = None,
+                              interpret: bool = True):
+    """Fused distance-threshold kernel with in-kernel result compaction.
+
+    Args:
+      entries: (C, 8) with C a multiple of ``cand_blk``.
+      queries_t: (8, Q) with Q a multiple of ``qry_blk`` (transposed packing).
+      d: scalar threshold.
+      capacity: result-buffer slots; hits beyond it are dropped (``count``
+        still reports the exact total, so callers detect overflow exactly).
+      valid_c / valid_q: number of *real* (non-padding) rows/cols; pairs at
+        or beyond them are masked out of the result.  Default: all.
+
+    Returns ``(entry_idx, query_idx, t_enter, t_exit, count)``: four
+    (capacity,) buffers — int32 indices (-1 pad) and interval endpoints
+    (0 pad) — plus the exact scalar int32 hit count.  Output order is
+    deterministic: tiles in grid order (query tiles innermost), row-major
+    within each tile.
+    """
+    cc, eight = entries.shape
+    assert eight == 8, entries.shape
+    eight2, qq = queries_t.shape
+    assert eight2 == 8, queries_t.shape
+    assert cc % cand_blk == 0 and qq % qry_blk == 0, (cc, qq, cand_blk, qry_blk)
+    valid_c = cc if valid_c is None else valid_c
+    valid_q = qq if valid_q is None else valid_q
+    grid = (cc // cand_blk, qq // qry_blk)
+    dtype = entries.dtype
+    d_arr = jnp.asarray(d, dtype).reshape(1, 1)
+
+    # One append window of slack: a window starting at any offset
+    # <= capacity stays in bounds, so no clamping can slide it over valid
+    # rows.
+    tile = cand_blk * qry_blk
+    cap_pad = capacity + min(tile, APPEND_BLK)
+    flat_spec = pl.BlockSpec((cap_pad,), lambda i, j: (0,))
+    out_shapes = (
+        jax.ShapeDtypeStruct((cap_pad,), jnp.int32),
+        jax.ShapeDtypeStruct((cap_pad,), jnp.int32),
+        jax.ShapeDtypeStruct((cap_pad,), dtype),
+        jax.ShapeDtypeStruct((cap_pad,), dtype),
+        jax.ShapeDtypeStruct((1, 1), jnp.int32),
+    )
+    kernel = functools.partial(
+        _distthresh_compact_kernel, cand_blk=cand_blk, qry_blk=qry_blk,
+        capacity=capacity, valid_c=valid_c, valid_q=valid_q)
+    e_idx, q_idx, t_enter, t_exit, count = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),          # d (scalar)
+            pl.BlockSpec((cand_blk, 8), lambda i, j: (i, 0)),   # entries
+            pl.BlockSpec((8, qry_blk), lambda i, j: (0, j)),    # queries
+        ],
+        out_specs=(flat_spec, flat_spec, flat_spec, flat_spec,
+                   pl.BlockSpec((1, 1), lambda i, j: (0, 0))),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(d_arr, entries, queries_t)
+    return (e_idx[:capacity], q_idx[:capacity],
+            t_enter[:capacity], t_exit[:capacity], count[0, 0])

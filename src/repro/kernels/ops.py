@@ -5,10 +5,30 @@ Two layers:
 * :func:`interaction_tiles` — pad → ``pallas_call`` (or the jnp oracle) →
   crop.  Dense (C, Q) outputs.
 * :func:`query_block` — the full per-batch device computation: interaction
-  tiles + deterministic result compaction (the TPU replacement for the
+  evaluation + deterministic result compaction (the TPU replacement for the
   paper's ``atomic_inc`` append, §5).  Returns fixed-capacity result
   buffers plus the true hit count, so the caller can detect overflow and
   retry with a larger capacity (mirroring the paper's §5 re-attempt note).
+
+``query_block`` has two compaction strategies (``compaction=``):
+
+* ``"fused"`` (default on the Pallas path) — the hits are compacted *inside*
+  the kernel (``distthresh_compact_pallas``): a running counter carried
+  across the sequential TPU grid plays the role of the paper's atomic
+  counter, and each tile appends its masked-prefix-sum-compacted hits
+  directly into the flat result buffers.  Per-interaction HBM traffic is
+  zero for non-hits, and the exact count comes back with the results.
+* ``"dense"`` — the two-phase fallback (and the only strategy for the jnp
+  oracle path): phase 1 materializes the dense int8 hit mask, phase 2
+  compacts it with an XLA cumsum + scatter and recomputes the interval for
+  the ≤ capacity compacted hits.  Kept as the validation baseline: tests
+  assert the two strategies produce identical hit sets.
+
+The two strategies emit different (both deterministic) row orders —
+``"dense"`` is row-major over the full (C, Q) block, ``"fused"`` is
+row-major within each kernel tile, tiles in grid order — so consumers that
+need a canonical order sort downstream (``ResultSet.sorted_canonical``,
+``QueryResult.from_result_set``).
 
 Shape discipline: callers pass *bucketed* (padded) shapes so that the jit
 cache stays small — see ``repro.core.engine``.  Padded entries/queries are
@@ -25,7 +45,11 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.distthresh import (DEFAULT_CAND_BLK, DEFAULT_QRY_BLK,
+                                      distthresh_compact_pallas,
                                       distthresh_pallas)
+
+#: compaction strategies accepted by :func:`query_block`.
+COMPACTIONS = ("fused", "dense")
 
 
 def _pad_rows(x: jnp.ndarray, multiple: int, pad_t: jnp.ndarray) -> jnp.ndarray:
@@ -37,6 +61,15 @@ def _pad_rows(x: jnp.ndarray, multiple: int, pad_t: jnp.ndarray) -> jnp.ndarray:
     pad = jnp.zeros((target - n, 8), x.dtype)
     pad = pad.at[:, 6].set(pad_t).at[:, 7].set(pad_t)
     return jnp.concatenate([x, pad], axis=0)
+
+
+def _pad_time(entries: jnp.ndarray, queries: jnp.ndarray) -> jnp.ndarray:
+    """A time strictly greater than every real t — padding rows never hit.
+
+    Callers must guard against zero-row inputs (``jnp.max`` of an empty
+    array is an error); see the empty-input short-circuits below.
+    """
+    return jnp.maximum(jnp.max(entries[:, 7]), jnp.max(queries[:, 7])) + 1.0
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret",
@@ -56,11 +89,17 @@ def interaction_tiles(entries: jnp.ndarray, queries: jnp.ndarray, d,
 
     Returns (t_enter, t_exit, hit) of shape (C, Q), hit bool.
     """
+    c, q = entries.shape[0], queries.shape[0]
+    if c == 0 or q == 0:
+        # Zero-row guard: the pad-time computation below takes jnp.max over
+        # the temporal extents, which errors on empty inputs (reachable by
+        # direct kernel users; the engine never dispatches empty batches).
+        dtype = jnp.promote_types(entries.dtype, jnp.float32)
+        empty = jnp.zeros((c, q), dtype)
+        return empty, empty, jnp.zeros((c, q), bool)
     if not use_pallas:
         return ref.interaction_tile(entries, queries, d)
-    c, q = entries.shape[0], queries.shape[0]
-    # Padding time: strictly greater than every real t (never hits).
-    pad_t = jnp.maximum(jnp.max(entries[:, 7]), jnp.max(queries[:, 7])) + 1.0
+    pad_t = _pad_time(entries, queries)
     ep = _pad_rows(entries, cand_blk, pad_t)
     qp = _pad_rows(queries, qry_blk, pad_t)
     t_enter, t_exit, hit = distthresh_pallas(
@@ -68,12 +107,22 @@ def interaction_tiles(entries: jnp.ndarray, queries: jnp.ndarray, d,
     return (t_enter[:c, :q], t_exit[:c, :q], hit[:c, :q].astype(bool))
 
 
+def _empty_block(capacity: int, dtype) -> dict:
+    return {"entry_idx": jnp.full((capacity,), -1, jnp.int32),
+            "query_idx": jnp.full((capacity,), -1, jnp.int32),
+            "t_enter": jnp.zeros((capacity,), dtype),
+            "t_exit": jnp.zeros((capacity,), dtype),
+            "count": jnp.zeros((), jnp.int32)}
+
+
 @functools.partial(jax.jit, static_argnames=("capacity", "use_pallas",
-                                             "interpret", "cand_blk", "qry_blk"))
+                                             "interpret", "cand_blk",
+                                             "qry_blk", "compaction"))
 def query_block(entries: jnp.ndarray, queries: jnp.ndarray, d, *,
                 capacity: int, use_pallas: bool = True, interpret: bool = True,
-                cand_blk: int = DEFAULT_CAND_BLK, qry_blk: int = DEFAULT_QRY_BLK):
-    """Interaction tiles + deterministic compaction into flat result buffers.
+                cand_blk: int = DEFAULT_CAND_BLK, qry_blk: int = DEFAULT_QRY_BLK,
+                compaction: str = "fused"):
+    """Interaction evaluation + deterministic compaction into flat buffers.
 
     Returns a dict with:
       ``entry_idx``  (capacity,) int32 — row index into ``entries`` (-1 pad)
@@ -83,19 +132,39 @@ def query_block(entries: jnp.ndarray, queries: jnp.ndarray, d, *,
       ``count``      () int32 — true number of hits (may exceed capacity ⇒
                      caller retries with larger capacity)
 
-    Output order is row-major (entry-major) — deterministic, unlike the
-    paper's atomic append.
+    ``compaction="fused"`` routes through the in-kernel compaction kernel
+    when ``use_pallas`` is set (the jnp oracle has no kernel to fuse into,
+    so it always uses the dense two-phase pass); ``"dense"`` forces the
+    two-phase fallback.  Both orders are deterministic; see the module
+    docstring for how they differ.
     """
-    # Lean two-phase compaction (beyond-paper; EXPERIMENTS §Perf galaxy-db):
-    # phase 1 materializes ONLY the dense int8 hit mask — XLA dead-code-
-    # eliminates the interval arithmetic for the dense tile, so the per-
-    # interaction HBM traffic drops from (2·f32 intervals + mask + i32
-    # positions) to (mask + i32 positions).  Phase 2 recomputes the interval
-    # for the ≤ capacity compacted hits only (70 FLOPs each — free).
+    if compaction not in COMPACTIONS:
+        raise ValueError(f"unknown compaction {compaction!r}; "
+                         f"choose from {COMPACTIONS}")
+    c, q = entries.shape[0], queries.shape[0]
+    compute_dtype = jnp.promote_types(entries.dtype, jnp.float32)
+    if c == 0 or q == 0:
+        return _empty_block(capacity, compute_dtype)
+
+    if compaction == "fused" and use_pallas:
+        pad_t = _pad_time(entries, queries)
+        ep = _pad_rows(entries, cand_blk, pad_t)
+        qp = _pad_rows(queries, qry_blk, pad_t)
+        e_idx, q_idx, t_enter, t_exit, count = distthresh_compact_pallas(
+            ep, qp.T, d, capacity=capacity, cand_blk=cand_blk,
+            qry_blk=qry_blk, valid_c=c, valid_q=q, interpret=interpret)
+        return {"entry_idx": e_idx, "query_idx": q_idx,
+                "t_enter": t_enter, "t_exit": t_exit, "count": count}
+
+    # Dense two-phase compaction (the pre-fusion path; EXPERIMENTS §Perf
+    # galaxy-db): phase 1 materializes ONLY the dense int8 hit mask — XLA
+    # dead-code-eliminates the interval arithmetic for the dense tile, so
+    # the per-interaction HBM traffic drops from (2·f32 intervals + mask +
+    # i32 positions) to (mask + i32 positions).  Phase 2 recomputes the
+    # interval for the ≤ capacity compacted hits only (70 FLOPs each).
     _, _, hit = interaction_tiles(
         entries, queries, d, use_pallas=use_pallas, interpret=interpret,
         cand_blk=cand_blk, qry_blk=qry_blk)
-    c, q = hit.shape
     flat_hit = hit.reshape(-1)
     # Prefix-sum compaction (the atomic_inc replacement).
     pos = jnp.cumsum(flat_hit.astype(jnp.int32)) - 1

@@ -30,24 +30,41 @@ def _rows(result: QueryResult):
 # Backend equivalence: the acceptance criterion.
 # ----------------------------------------------------------------------
 def test_backend_equivalence_on_scenario(scenario_db):
-    """All four backends produce identical canonical result sets, with
-    query_idx in caller order, on a trajgen scenario."""
+    """All four backends — and, for each, both compaction strategies and
+    both executors — produce identical canonical result sets, with
+    query_idx in caller order, on a trajgen scenario.  (compaction= only
+    changes the device path for "pallas"; pipeline= only the engine
+    backends; both are accepted no-ops elsewhere.)"""
     db = scenario_db
     queries, d = db.scenario_queries, db.scenario_d
-    results = {name: db.query(queries, d, backend=name) for name in BACKENDS}
-    base = results["jnp"]
+    results = {}
+    for name in BACKENDS:
+        for compaction in ("fused", "dense"):
+            for pipeline in (True, False):
+                if name in ("rtree", "brute") and (compaction == "dense"
+                                                   or not pipeline):
+                    continue     # knobs don't reach the CPU baselines
+                res = db.query(queries, d, backend=name,
+                               compaction=compaction, pipeline=pipeline)
+                results[(name, compaction, pipeline)] = res
+    base = results[("jnp", "fused", True)]
     assert len(base) > 0, "scenario produced no hits — adjust scale/d"
-    for name, res in results.items():
+    for (name, compaction, pipeline), res in results.items():
+        label = (name, compaction, pipeline)
         assert res.backend == name
-        assert len(res) == len(base), (name, len(res), len(base))
+        assert len(res) == len(base), (label, len(res), len(base))
         for a, b in zip(_rows(res), _rows(base)):
-            np.testing.assert_array_equal(a, b)
+            np.testing.assert_array_equal(a, b, err_msg=str(label))
         # interval endpoints may differ at f32 fusion-order level between
         # differently-shaped XLA programs; hits must match exactly.
         np.testing.assert_allclose(res.t_enter, base.t_enter,
-                                   rtol=1e-4, atol=1e-3)
+                                   rtol=1e-4, atol=1e-3, err_msg=str(label))
         np.testing.assert_allclose(res.t_exit, base.t_exit,
-                                   rtol=1e-4, atol=1e-3)
+                                   rtol=1e-4, atol=1e-3, err_msg=str(label))
+    # the engine backends report the O(1)-sync property through the facade
+    st = results[("pallas", "fused", True)].stats
+    assert st.pipelined and st.num_syncs <= 2
+    assert results[("jnp", "fused", False)].stats.num_syncs >= 1
 
 
 def test_backend_protocol_and_cache(scenario_db):

@@ -88,6 +88,104 @@ class TestEngineCorrectness:
         assert len(rs.sorted_canonical()) == len(bf0)
 
 
+class TestPipelinedExecutor:
+    """The async two-phase executor: O(1) syncs, same results."""
+
+    def test_pipelined_equals_sync_equals_brute(self, world):
+        db, queries, d, bf = world
+        eng = DistanceThresholdEngine(db, num_bins=128)
+        plan = batching.periodic(eng.index, queries, 16)
+        rs_pipe, st_pipe = eng.execute(queries, d, plan, pipeline=True)
+        rs_sync, st_sync = eng.execute(queries, d, plan, pipeline=False)
+        _check_equal(rs_pipe, bf)
+        _check_equal(rs_sync, bf)
+        assert st_pipe.pipelined and not st_sync.pipelined
+        assert st_pipe.total_hits == st_sync.total_hits == len(bf)
+
+    def test_sync_ratio_is_o1_per_query_set(self, world):
+        """The acceptance criterion: pipelined execution performs O(1) host
+        syncs per query set, vs one (or more) per invocation in sync mode."""
+        db, queries, d, _ = world
+        eng = DistanceThresholdEngine(db, num_bins=128)
+        plan = batching.periodic(eng.index, queries, 8)   # many batches
+        _, st_pipe = eng.execute(queries, d, plan, pipeline=True)
+        _, st_sync = eng.execute(queries, d, plan, pipeline=False)
+        assert st_pipe.num_invocations == plan.num_batches > 2
+        assert st_pipe.num_syncs <= 2                     # O(1) per query set
+        nonempty = sum(1 for b in plan.batches if b.num_candidates > 0)
+        assert st_sync.num_syncs >= nonempty              # O(batches)
+        assert st_pipe.num_syncs < st_sync.num_syncs
+
+    def test_pipelined_overflow_retry_converges(self, world):
+        """A batch whose hit count exceeds default_capacity: the exact count
+        sizes a doubled (power-of-two bucketed) retry that converges in one
+        re-dispatch, results still match brute force, retries recorded."""
+        db, queries, _, _ = world
+        d_all = 60.0                                   # ~everything hits
+        bf = brute_force(db, queries, d_all)
+        eng = DistanceThresholdEngine(db, num_bins=128, default_capacity=256)
+        plan = batching.periodic(eng.index, queries, 64)
+        assert any(b.num_ints > 256 for b in plan.batches)
+        rs, stats = eng.execute(queries, d_all, plan, pipeline=True)
+        _check_equal(rs, bf)
+        retried = [b for b in stats.batches if b.retries]
+        assert retried, "no batch overflowed — fixture needs adjusting"
+        assert all(b.retries == 1 for b in retried)    # one retry suffices
+        assert stats.total_retries == len(retried)
+        assert stats.num_syncs == 2                    # still O(1)
+        # retry capacity doubled at least once: the count that forced the
+        # retry exceeded the 256-slot bucket
+        assert all(b.num_hits > 256 for b in retried)
+
+    def test_sync_mode_retry_stats_separated(self, world):
+        """Satellite: kernel_seconds is first-dispatch device time only;
+        retry wall-time lands in retry_seconds."""
+        db, queries, _, _ = world
+        eng = DistanceThresholdEngine(db, num_bins=128, default_capacity=256)
+        plan = batching.periodic(eng.index, queries, 64)
+        rs, stats = eng.execute(queries, 60.0, plan, pipeline=False)
+        retried = [b for b in stats.batches if b.retries]
+        assert retried
+        assert all(b.retry_seconds > 0 for b in retried)
+        assert all(b.retry_seconds == 0 for b in stats.batches
+                   if not b.retries)
+        assert stats.retry_seconds == sum(b.retry_seconds for b in retried)
+        assert stats.num_syncs == (
+            sum(1 for b in stats.batches if b.num_candidates > 0)
+            + stats.total_retries)
+
+    @pytest.mark.parametrize("compaction", ["fused", "dense"])
+    def test_pallas_compaction_paths_match_brute(self, world, compaction):
+        db, queries, d, bf = world
+        eng = DistanceThresholdEngine(db, num_bins=128, use_pallas=True,
+                                      cand_blk=128, qry_blk=64,
+                                      compaction=compaction)
+        plan = batching.periodic(eng.index, queries, 64)
+        rs, _ = eng.execute(queries, d, plan, pipeline=True)
+        _check_equal(rs, bf)
+
+    def test_empty_plan_and_empty_batches(self, world):
+        db, queries, d, _ = world
+        eng = DistanceThresholdEngine(db, num_bins=128)
+        plan = batching.BatchPlan("periodic", {"s": 1}, [], 0.0)
+        rs, stats = eng.execute(queries, d, plan, pipeline=True)
+        assert len(rs) == 0 and stats.num_invocations == 0
+
+
+class TestBucket:
+    def test_bucket_edge_cases(self):
+        from repro.core.engine import _bucket
+        assert _bucket(0, 256) == 256          # n=0 still allocates a block
+        assert _bucket(1, 256) == 256
+        assert _bucket(255, 256) == 256
+        assert _bucket(256, 256) == 256        # exact multiple: no growth
+        assert _bucket(257, 256) == 512
+        assert _bucket(512, 256) == 512
+        assert _bucket(513, 256) == 1024
+        assert _bucket(1, 1) == 1
+        assert _bucket(7, 1) == 8              # power-of-two ladder from blk
+
+
 class TestRTreeBaseline:
     def test_rtree_equals_brute_force(self, world):
         db, queries, d, bf = world
