@@ -13,6 +13,12 @@ the first point of the perf trajectory: interactions/sec, kernel vs host
 seconds, dense vs fused compaction and sync vs pipelined execution on the
 S2 scenario.  Future PRs regress against it (``--bench-out`` moves the
 file; CI uploads it as a workflow artifact).
+
+The ``bench_pr3`` entry writes ``BENCH_PR3.json``: the same S2 executor
+rows re-run on this tree plus the PR 3 sharded-executor section
+(``backend="shard"`` sync / pipelined / grouped dispatch), and prints the
+per-combo interactions/sec ratio against the ``BENCH_PR2.json`` baseline
+when that file is present.
 """
 from __future__ import annotations
 
@@ -29,6 +35,10 @@ def main(argv=None) -> int:
                     help="comma-separated benchmark names")
     ap.add_argument("--bench-out", default="BENCH_PR2.json",
                     help="path for the canonical bench_pr2 JSON report")
+    ap.add_argument("--bench-out3", default="BENCH_PR3.json",
+                    help="path for the bench_pr3 JSON report")
+    ap.add_argument("--baseline", default="BENCH_PR2.json",
+                    help="baseline report bench_pr3 compares against")
     args = ap.parse_args(argv)
 
     from benchmarks import (fig3_interactions, kernel_bench, roofline_report,
@@ -43,6 +53,23 @@ def main(argv=None) -> int:
         kernel_bench.print_executor_rows(report["executor"])
         print(f"# bench_pr2 report -> {args.bench_out}")
 
+    def bench_pr3():
+        import os
+        report = kernel_bench.canonical_report_pr3(quick=not args.full)
+        with open(args.bench_out3, "w") as f:
+            json.dump(report, f, indent=2)
+        kernel_bench.print_executor_rows(report["executor"])
+        kernel_bench.print_sharded_rows(report["sharded_executor"])
+        if os.path.exists(args.baseline):
+            with open(args.baseline) as f:
+                baseline = json.load(f)
+            for line in kernel_bench.compare_executor_sections(report,
+                                                               baseline):
+                print(line)
+        else:
+            print(f"# baseline {args.baseline} not found — no comparison")
+        print(f"# bench_pr3 report -> {args.bench_out3}")
+
     benches = {
         "fig3": lambda: fig3_interactions.main(),
         "table2": lambda: table2_batching.main(),
@@ -52,6 +79,7 @@ def main(argv=None) -> int:
         "kernel": lambda: kernel_bench.print_kernel_rows(
             kernel_bench.run(repeats=3 if args.full else 1)),
         "bench_pr2": bench_pr2,
+        "bench_pr3": bench_pr3,
         "roofline": lambda: roofline_report.main(),
     }
     only = set(args.only.split(",")) if args.only else None

@@ -23,8 +23,16 @@ preconditions (pre-sorted queries, manual plan construction, reaching into
 * Execution strategy is pluggable via the :class:`QueryBackend` protocol:
   ``"pallas"`` (the TPU kernel, interpret mode on CPU), ``"jnp"`` (the XLA
   oracle — the right default on CPU), ``"rtree"`` (the paper's §7.3
-  search-and-refine CPU baseline) and ``"brute"`` (the all-pairs oracle).
-  All four return identical canonical result sets.
+  search-and-refine CPU baseline), ``"brute"`` (the all-pairs oracle) and
+  ``"shard"`` (the temporal-pod mesh backend from ``repro.core.
+  distributed`` — the paper's §1 multi-node partitioning, with the same
+  ≤ 2-host-syncs-per-query-set pipelined dispatch as the single-device
+  engine).  All five return identical canonical result sets.
+* Planning and execution are split (PR 3): the facade's
+  :class:`~repro.core.planner.QueryPlanner` turns a policy + query set into
+  a ``QueryPlan`` (batches, capacities, dispatch groups) that every
+  backend's executor consumes — see ``repro.core.planner`` /
+  ``repro.core.executor``.
 * Tuning knobs live in one :class:`ExecutionPolicy` value object instead of
   being scattered across constructors and free functions.
 * ``db.query_stream(...)`` routes execution through the deadline/re-issue
@@ -52,13 +60,18 @@ from repro.core.batching import ALGORITHMS, BatchPlan
 from repro.core.engine import (DistanceThresholdEngine, ExecStats, ResultSet,
                                brute_force)
 from repro.core.index import DEFAULT_NUM_BINS, TemporalBinIndex
+from repro.core.planner import QueryPlan, QueryPlanner
 from repro.core.rtree import RTreeEngine
 from repro.core.scheduler import DeadlineScheduler, SchedulerStats
 from repro.core.segments import SegmentArray
 from repro.kernels.distthresh import DEFAULT_CAND_BLK, DEFAULT_QRY_BLK
 
 #: Names accepted by ``TrajectoryDB.query(backend=...)``.
-BACKENDS = ("pallas", "jnp", "rtree", "brute")
+BACKENDS = ("pallas", "jnp", "rtree", "brute", "shard")
+
+#: Backends that execute through a ``repro.core.executor`` driver (and
+#: therefore consume a ``QueryPlan`` and report ``ExecStats``).
+ENGINE_BACKENDS = ("pallas", "jnp", "shard")
 
 #: Default batch size anchor used when an algorithm's parameters are not
 #: given explicitly (the paper's practical PERIODIC recommendation, §7.4).
@@ -93,8 +106,17 @@ class ExecutionPolicy:
     qry_blk: int = DEFAULT_QRY_BLK
     capacity: int = 4096                  # result-buffer slots per batch
     interpret: bool = True                # Pallas interpret mode (CPU)
-    compaction: str = "fused"             # "fused" in-kernel | "dense" 2-phase
+    compaction: str = "fused"             # "fused" in-kernel | "fused_rowloop"
+    #                                       gather-free hatch | "dense" 2-phase
     pipeline: bool = True                 # async 2-phase executor (O(1) syncs)
+    #: executor dispatch groups per query set (None → one group = classic
+    #: O(1)-sync shape; k → marshalling of group i overlaps compute of i+1)
+    group_size: int | None = None
+
+    # -- sharded mesh backend (backend="shard") -------------------------
+    shard_pods: int | None = None         # None → every local device
+    shard_capacity: int = 4096            # result slots per pod per batch
+    shard_use_pallas: bool = False        # Pallas kernels inside shard_map
 
     # -- R-tree baseline ------------------------------------------------
     rtree_r: int = 12                     # segments per leaf MBB (Fig. 5)
@@ -108,6 +130,9 @@ class ExecutionPolicy:
     stream_workers: int = 2
     stream_slack: float = 4.0
     stream_min_deadline: float = 0.05
+    #: batches per scheduler worker call (None → auto, ≥ 2 when possible —
+    #: each call is one pipelined dispatch over the whole group)
+    stream_group_size: int | None = None
 
     def with_(self, **updates) -> "ExecutionPolicy":
         """Functional update (the policy itself is immutable)."""
@@ -152,8 +177,8 @@ class QueryResult:
     t_exit: np.ndarray
     d: float
     backend: str
-    stats: ExecStats | None = None       # engine backends only
-    plan: BatchPlan | None = None        # engine backends only
+    stats: ExecStats | None = None            # engine backends only
+    plan: BatchPlan | QueryPlan | None = None  # engine backends only
 
     def __len__(self) -> int:
         return int(self.entry_idx.shape[0])
@@ -163,7 +188,8 @@ class QueryResult:
     def from_result_set(rs: ResultSet, *, order: np.ndarray | None,
                         d: float, backend: str,
                         stats: ExecStats | None = None,
-                        plan: BatchPlan | None = None) -> "QueryResult":
+                        plan: BatchPlan | QueryPlan | None = None
+                        ) -> "QueryResult":
         """Map a backend ``ResultSet`` (query_idx into the sorted query
         array) back to caller order and canonicalize row order.
 
@@ -271,6 +297,27 @@ class BruteBackend:
         return brute_force(self.db, queries, d, chunk=self.chunk), None
 
 
+class ShardBackend:
+    """Adapter over the temporal-pod mesh engine
+    (``repro.core.distributed.ShardedEngine``) — the paper's §1 multi-node
+    partitioning as a first-class ``backend="shard"``.  Shares the
+    facade's sorted segments; runs through the same pipelined executor as
+    the single-device engine (≤ 2 host syncs per query set)."""
+
+    name = "shard"
+    needs_plan = True
+
+    def __init__(self, engine):
+        self.engine = engine
+
+    def run(self, queries: SegmentArray, d: float,
+            plan: BatchPlan | QueryPlan | None
+            ) -> tuple[ResultSet, ExecStats | None]:
+        if plan is None:
+            raise ValueError("backend 'shard' requires a plan")
+        return self.engine.execute(queries, d, plan)
+
+
 # ----------------------------------------------------------------------
 # The facade.
 # ----------------------------------------------------------------------
@@ -344,6 +391,14 @@ class TrajectoryDB:
         if name in ("pallas", "jnp"):
             return (pol.interpret, pol.cand_blk, pol.qry_blk, pol.capacity,
                     pol.compaction, pol.pipeline)
+        if name == "shard":
+            # compaction only matters on the Pallas path — key on the
+            # effective value so policies differing in an irrelevant knob
+            # share one (expensively constructed) mesh engine.
+            compaction = pol.compaction if pol.shard_use_pallas else "dense"
+            return (pol.shard_pods, pol.shard_capacity, pol.shard_use_pallas,
+                    pol.interpret, pol.cand_blk, pol.qry_blk, compaction,
+                    pol.pipeline)
         if name == "rtree":
             return (pol.rtree_r, pol.rtree_fanout, pol.rtree_threads)
         return (pol.brute_chunk,)
@@ -368,6 +423,16 @@ class TrajectoryDB:
                 eng.compaction = pol.compaction
                 eng.pipeline = pol.pipeline
                 self._backends[key] = EngineBackend(name, eng)
+            elif name == "shard":
+                from repro.core.distributed import ShardedEngine
+                compaction = (pol.compaction if pol.shard_use_pallas
+                              else "dense")
+                self._backends[key] = ShardBackend(ShardedEngine(
+                    self.segments, pods=pol.shard_pods,
+                    capacity_per_shard=pol.shard_capacity,
+                    use_pallas=pol.shard_use_pallas, interpret=pol.interpret,
+                    cand_blk=pol.cand_blk, qry_blk=pol.qry_blk,
+                    compaction=compaction, pipeline=pol.pipeline))
             elif name == "rtree":
                 self._backends[key] = RTreeBackend(
                     RTreeEngine(self.segments, r=pol.rtree_r,
@@ -388,24 +453,30 @@ class TrajectoryDB:
         return be.engine
 
     # -- planning --------------------------------------------------------
-    def plan(self, queries: SegmentArray,
-             policy: ExecutionPolicy | None = None) -> BatchPlan:
-        """Build a batch plan for *sorted-or-not* queries (sorts a copy if
-        needed; the facade's query path reuses this)."""
-        qs, _ = self._sorted(queries)
-        return self._make_plan(qs, policy or self.policy)
+    def planner(self, pol: ExecutionPolicy | None = None, *,
+                num_queries: int = 0, backend: str = "jnp") -> QueryPlanner:
+        """The :class:`~repro.core.planner.QueryPlanner` a policy resolves
+        to — batching algorithm + params, capacity sizing (per-shard for
+        ``backend="shard"``) and executor dispatch grouping."""
+        pol = pol or self.policy
+        capacity = pol.shard_capacity if backend == "shard" else pol.capacity
+        return QueryPlanner(
+            self.index, algorithm=pol.batching,
+            params=pol.resolved_batch_params(num_queries),
+            default_capacity=capacity, group_size=pol.group_size)
 
-    def _make_plan(self, sorted_queries: SegmentArray,
-                   pol: ExecutionPolicy) -> BatchPlan:
-        params = pol.resolved_batch_params(len(sorted_queries))
-        try:
-            return ALGORITHMS[pol.batching](self.index, sorted_queries,
-                                            **params)
-        except TypeError as e:
-            raise ValueError(
-                f"batch params {params} do not match algorithm "
-                f"{pol.batching!r}: {e} (pass batching=... alongside the "
-                f"algorithm's parameters)") from None
+    def plan(self, queries: SegmentArray,
+             policy: ExecutionPolicy | None = None, *,
+             backend: str = "jnp") -> QueryPlan:
+        """Build a refined query plan for *sorted-or-not* queries (sorts a
+        copy if needed; the facade's query path reuses this)."""
+        qs, _ = self._sorted(queries)
+        return self._make_plan(qs, policy or self.policy, backend)
+
+    def _make_plan(self, sorted_queries: SegmentArray, pol: ExecutionPolicy,
+                   backend: str = "jnp") -> QueryPlan:
+        return self.planner(pol, num_queries=len(sorted_queries),
+                            backend=backend).plan(sorted_queries)
 
     @staticmethod
     def _sorted(queries: SegmentArray
@@ -447,9 +518,10 @@ class TrajectoryDB:
         the returned ``QueryResult.query_idx`` is mapped back to the
         caller's order.  ``batching``/``**batch_params`` are shorthand for a
         one-off policy override (e.g. ``batching="periodic", s=48``), as are
-        ``compaction=`` ("fused" in-kernel vs "dense" two-phase result
-        compaction) and ``pipeline=`` (async O(1)-sync executor vs per-batch
-        sync loop) for the engine backends.
+        ``compaction=`` ("fused" in-kernel vs "fused_rowloop" gather-free vs
+        "dense" two-phase result compaction) and ``pipeline=`` (async
+        O(1)-sync executor vs per-batch sync loop) for the engine backends
+        (``"pallas"``/``"jnp"``/``"shard"``).
         """
         if len(queries) == 0:
             return QueryResult.from_result_set(
@@ -458,7 +530,7 @@ class TrajectoryDB:
                                    compaction, pipeline)
         be = self.backend(backend, pol)
         qs, order = self._sorted(queries)
-        plan = self._make_plan(qs, pol) if be.needs_plan else None
+        plan = self._make_plan(qs, pol, backend) if be.needs_plan else None
         rs, stats = be.run(qs, float(d), plan)
         return QueryResult.from_result_set(
             rs, order=order, d=float(d), backend=backend,
@@ -475,16 +547,27 @@ class TrajectoryDB:
                      **batch_params) -> tuple[QueryResult, SchedulerStats]:
         """Like :meth:`query`, but executes the plan through the
         deadline/re-issue scheduler (``repro.core.scheduler``) — the mode a
-        serving deployment uses, where a straggling batch is re-issued
-        rather than stalling the response.
+        serving deployment uses, where a straggling batch *group* is
+        re-issued rather than stalling the response.
 
-        Only engine backends can stream (the scheduler re-executes
-        individual batches, which requires a plan).
+        Pipelined-stream semantics: the scheduler hands every worker call a
+        *group* of consecutive batches (≥ 2 by default;
+        ``ExecutionPolicy.stream_group_size`` overrides) and each call runs
+        as one pipelined two-phase dispatch — ≤ 2 host syncs per group —
+        so the O(1)-sync property amortizes inside the stream instead of
+        collapsing to one sync per batch.  Re-issue, deduplication and
+        deadlines (§8-model-derived, summed over the group) all operate on
+        groups; see ``repro.core.scheduler``.
+
+        Only single-device engine backends can stream (``'pallas'`` /
+        ``'jnp'`` — the scheduler's worker pool re-executes sub-plans on
+        one engine; a per-pod scheduler over ``'shard'`` is the next
+        serving layer up).
         """
         if backend not in ("pallas", "jnp"):
             raise ValueError(
-                f"query_stream requires an engine backend ('pallas'/'jnp'), "
-                f"got {backend!r}")
+                f"query_stream requires a single-device engine backend "
+                f"('pallas'/'jnp'), got {backend!r}")
         if len(queries) == 0:
             return (QueryResult.from_result_set(
                 ResultSet.empty(), order=None, d=float(d), backend=backend),
@@ -493,11 +576,12 @@ class TrajectoryDB:
                                    compaction, pipeline)
         be = self.backend(backend, pol)
         qs, order = self._sorted(queries)
-        plan = self._make_plan(qs, pol)
+        plan = self._make_plan(qs, pol, backend)
         sched = DeadlineScheduler(
             be.engine, workers=pol.stream_workers, slack=pol.stream_slack,
             min_deadline=pol.stream_min_deadline,
-            predict_seconds=predict_seconds, delay_hook=delay_hook)
+            predict_seconds=predict_seconds, delay_hook=delay_hook,
+            group_size=pol.stream_group_size)
         rs, sstats = sched.execute(qs, float(d), plan)
         result = QueryResult.from_result_set(
             rs, order=order, d=float(d), backend=backend, plan=plan)
@@ -505,7 +589,7 @@ class TrajectoryDB:
 
 
 __all__ = [
-    "BACKENDS", "DEFAULT_BATCH_SIZE", "ExecutionPolicy", "QueryBackend",
-    "QueryResult", "TrajectoryDB", "EngineBackend", "RTreeBackend",
-    "BruteBackend",
+    "BACKENDS", "DEFAULT_BATCH_SIZE", "ENGINE_BACKENDS", "ExecutionPolicy",
+    "QueryBackend", "QueryResult", "TrajectoryDB", "EngineBackend",
+    "RTreeBackend", "BruteBackend", "ShardBackend",
 ]

@@ -7,169 +7,101 @@ and the sorted query set; queries are partitioned into batches (see
 candidate index range from the bins and dispatches one device computation
 comparing the batch's query segments against that candidate slice.
 
-TPU adaptations on top of the paper:
+PR 3 split this module's former responsibilities three ways:
+
+* **planning** (batching algorithm, capacity sizing, dispatch grouping)
+  lives in ``repro.core.planner`` — the engine consumes a ``QueryPlan``
+  (legacy ``BatchPlan`` arguments are coerced via ``as_query_plan``);
+* **execution** (the per-batch sync loop and the two-phase pipelined
+  dispatch with its overflow-retry protocol) lives in
+  ``repro.core.executor`` — shared with the sharded mesh backend
+  (``repro.core.distributed.ShardedEngine``);
+* this module keeps the **single-device dispatcher**: slicing the packed
+  segment arrays, the async ``ops.query_block`` dispatch, and host-side
+  result marshalling — plus the public ``DistanceThresholdEngine`` shell.
+
+TPU adaptations on top of the paper (see the executor/planner modules for
+the mechanics):
 
 * **Shape bucketing.**  The GPU pays a per-invocation overhead Θ; the XLA
-  analogue is *compilation* of every new (C, Q) shape.  We round candidate
-  and query counts up to power-of-two buckets (multiples of the kernel tile)
-  so the jit cache stays O(log²) instead of O(batches).  Padded rows have
-  temporal extents outside the data range and can never hit.
+  analogue is *compilation* of every new shape.  Result capacities round up
+  to power-of-two buckets (``planner.bucket_capacity``) so the jit cache
+  stays O(log²) instead of O(batches).
 * **Overflow-retry result buffers.**  The paper statically allocates |D|
   result slots (§5).  We allocate ``capacity`` slots per batch and retry
-  with doubled (power-of-two bucketed) capacity on overflow — the paper's
-  own suggested refinement.  The kernel always reports the *exact* hit
-  count, so a retry sizes its buffer in one jump and converges after a
-  single re-dispatch.
-* **Async pipelined execution** (``pipeline=True``, the default).  The
-  paper's host blocks on every kernel invocation; the XLA analogue of that
-  serialization is a host sync (device read) per batch.  The pipelined
-  executor instead runs two phases: phase A dispatches *every* batch's
-  ``query_block`` back-to-back — JAX async dispatch queues them on the
-  device while the host keeps planning/slicing — and phase B performs one
-  ``block_until_ready`` over all outputs, reads every count, re-dispatches
-  only the overflowed batches at enlarged capacity, and syncs once more.
-  Host round-trips per query set drop from O(num_batches) to O(1)
-  (``ExecStats.num_syncs`` ≤ 2), and device work overlaps host batch
-  bookkeeping.  ``pipeline=False`` keeps the classic per-batch sync loop
-  (used by the §8 perf-model fits, which need per-invocation timings).
+  with doubled (bucketed) capacity on overflow — the kernel always reports
+  the *exact* hit count, so a retry converges after a single re-dispatch.
+* **Async pipelined execution** (``pipeline=True``, the default): ≤ 2 host
+  syncs per dispatch group (one group per query set by default) instead of
+  one per batch, with host marshalling of group k overlapped with device
+  compute of group k+1.  ``pipeline=False`` keeps the classic per-batch
+  sync loop (used by the §8 perf-model fits, which need per-invocation
+  timings — see ``BatchStats``).
 * **Deterministic output.**  Results are emitted in a deterministic
   per-batch order (row-major for dense compaction; tile-then-row-major for
   fused — see ``repro.kernels.ops``), concatenated in batch order.
-
-Timing discipline (feeds ``repro.core.perfmodel``): in sync mode
-``BatchStats.kernel_seconds`` measures dispatch + device time of the first
-invocation only, via ``jax.block_until_ready``; overflow re-dispatch wall
-time is recorded separately in ``BatchStats.retry_seconds``.  Host-side
-result marshalling is never charged to kernel time.  In pipelined mode
-per-batch device time is unobservable without per-batch syncs (the point is
-not to have them), so batches carry zero kernel time and the aggregate
-device wait is in ``ExecStats.sync_seconds``.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-
-import jax
 import numpy as np
 
 from repro.core.batching import BatchPlan
+from repro.core.executor import (BatchStats, Dispatch,  # noqa: F401 (stable re-exports)
+                                 ExecStats, ResultSet, make_executor)
 from repro.core.index import DEFAULT_NUM_BINS, TemporalBinIndex
+from repro.core.planner import (QueryPlan, as_query_plan,
+                                bucket_capacity as _bucket)
 from repro.core.segments import SegmentArray
 from repro.kernels import ops
 from repro.kernels.distthresh import DEFAULT_CAND_BLK, DEFAULT_QRY_BLK
 
 
-@dataclasses.dataclass
-class ResultSet:
-    """Flat result arrays: one row per (entry segment, query segment, interval)."""
+class _QueryBlockDispatcher:
+    """Single-device dispatcher: contiguous host slices → ``query_block``.
 
-    entry_idx: np.ndarray    # global index into the sorted database
-    entry_traj: np.ndarray   # trajectory id of the entry segment
-    entry_seg: np.ndarray    # segment id of the entry segment
-    query_idx: np.ndarray    # global index into the sorted query array
-    t_enter: np.ndarray
-    t_exit: np.ndarray
-
-    def __len__(self) -> int:
-        return int(self.entry_idx.shape[0])
-
-    @staticmethod
-    def empty() -> "ResultSet":
-        zi = np.zeros(0, np.int64)
-        zf = np.zeros(0, np.float32)
-        return ResultSet(zi, zi.copy(), zi.copy(), zi.copy(), zf, zf.copy())
-
-    @staticmethod
-    def concatenate(parts: list["ResultSet"]) -> "ResultSet":
-        if not parts:
-            return ResultSet.empty()
-        return ResultSet(*[np.concatenate([getattr(p, f.name) for p in parts])
-                           for f in dataclasses.fields(ResultSet)])
-
-    def sorted_canonical(self) -> "ResultSet":
-        """Canonical (entry_idx, query_idx) order — for set comparisons."""
-        order = np.lexsort((self.query_idx, self.entry_idx))
-        return ResultSet(*[getattr(self, f.name)[order]
-                           for f in dataclasses.fields(ResultSet)])
-
-
-@dataclasses.dataclass
-class BatchStats:
-    """Per-invocation record (feeds the §8 performance model).
-
-    ``kernel_seconds`` is dispatch + device time of the batch's first
-    invocation (timed with ``block_until_ready``); ``retry_seconds`` is the
-    wall time of overflow re-dispatches, kept separate so perf-model fits
-    see clean per-invocation numbers.  Pipelined execution reports both as
-    zero per batch (see ``ExecStats.sync_seconds``).
+    Implements the ``repro.core.executor.BatchDispatcher`` protocol for one
+    (engine, query set, threshold) binding.
     """
 
-    batch_size: int
-    num_candidates: int
-    num_interactions: int
-    num_hits: int
-    kernel_seconds: float
-    retries: int
-    retry_seconds: float = 0.0
+    def __init__(self, engine: "DistanceThresholdEngine",
+                 q_packed: np.ndarray, d: float):
+        self.engine = engine
+        self.q_packed = q_packed
+        self.d = d
 
+    def dispatch(self, batch, capacity: int) -> Dispatch:
+        eng = self.engine
+        e_slice = eng._packed[batch.cand_first:batch.cand_last + 1]
+        q_slice = self.q_packed[batch.q_first:batch.q_last + 1]
+        out = ops.query_block(
+            e_slice, q_slice, np.float32(self.d), capacity=capacity,
+            use_pallas=eng.use_pallas, interpret=eng.interpret,
+            cand_blk=eng.cand_blk, qry_blk=eng.qry_blk,
+            compaction=eng.compaction)
+        return Dispatch(batch, capacity, out)
 
-@dataclasses.dataclass
-class ExecStats:
-    plan_seconds: float
-    total_seconds: float
-    batches: list[BatchStats]
-    #: host↔device synchronization points (count reads / block_until_ready):
-    #: one per invocation (+retries) in sync mode; ≤ 2 per query set in
-    #: pipelined mode — the headline O(1)-sync property.
-    num_syncs: int = 0
-    #: pipelined mode only: wall time of phase A (async dispatch of every
-    #: batch) and of the phase B device waits.
-    dispatch_seconds: float = 0.0
-    sync_seconds: float = 0.0
-    pipelined: bool = False
+    def count(self, dp: Dispatch) -> int:
+        return int(dp.out["count"])
 
-    @property
-    def kernel_seconds(self) -> float:
-        """First-dispatch device time (+ the pipelined device wait) — retry
-        re-dispatch time is deliberately excluded so perf-model fits see
-        per-invocation numbers; it is accounted in :attr:`retry_seconds`."""
-        return sum(b.kernel_seconds for b in self.batches) + self.sync_seconds
+    def retry_capacity(self, dp: Dispatch) -> int | None:
+        count = self.count(dp)
+        return _bucket(count) if count > dp.capacity else None
 
-    @property
-    def retry_seconds(self) -> float:
-        return sum(b.retry_seconds for b in self.batches)
-
-    @property
-    def host_seconds(self) -> float:
-        """Wall time not spent on device work: retries are device time too,
-        so they are subtracted alongside kernel_seconds."""
-        return self.total_seconds - self.kernel_seconds - self.retry_seconds
-
-    @property
-    def total_interactions(self) -> int:
-        return sum(b.num_interactions for b in self.batches)
-
-    @property
-    def total_hits(self) -> int:
-        return sum(b.num_hits for b in self.batches)
-
-    @property
-    def num_invocations(self) -> int:
-        return len(self.batches)
-
-    @property
-    def total_retries(self) -> int:
-        return sum(b.retries for b in self.batches)
-
-
-def _bucket(n: int, blk: int) -> int:
-    """Round up to blk, then to blk·2^k — bounds the jit-cache size."""
-    n = max(n, 1)
-    b = blk
-    while b < n:
-        b *= 2
-    return b
+    def marshal(self, dp: Dispatch, count: int) -> ResultSet | None:
+        if count == 0:
+            return None
+        batch, out, db = dp.batch, dp.out, self.engine.db
+        e_local = np.asarray(out["entry_idx"][:count])
+        q_local = np.asarray(out["query_idx"][:count])
+        e_global = batch.cand_first + e_local.astype(np.int64)
+        return ResultSet(
+            entry_idx=e_global,
+            entry_traj=db.traj_id[e_global].astype(np.int64),
+            entry_seg=db.seg_id[e_global].astype(np.int64),
+            query_idx=batch.q_first + q_local.astype(np.int64),
+            t_enter=np.asarray(out["t_enter"][:count]),
+            t_exit=np.asarray(out["t_exit"][:count]),
+        )
 
 
 class DistanceThresholdEngine:
@@ -185,10 +117,12 @@ class DistanceThresholdEngine:
         paths share identical semantics (tests assert equality).
 
         ``compaction`` selects the result-compaction strategy ("fused" uses
-        the in-kernel compaction kernel on the Pallas path; "dense" forces
-        the two-phase fallback; the jnp oracle is always dense).
-        ``pipeline`` selects the async two-phase executor (see the module
-        docstring); both can be overridden per call on :meth:`execute`.
+        the in-kernel compaction kernel on the Pallas path, falling back to
+        "fused_rowloop" if the gather path fails to lower — see
+        ``repro.kernels.ops``; "dense" forces the two-phase fallback; the
+        jnp oracle is always dense).  ``pipeline`` selects the async
+        two-phase executor (see the module docstring); both can be
+        overridden per call on :meth:`execute`.
         """
         if compaction not in ops.COMPACTIONS:
             raise ValueError(f"unknown compaction {compaction!r}; "
@@ -205,44 +139,23 @@ class DistanceThresholdEngine:
         self.pipeline = pipeline
 
     # ------------------------------------------------------------------
-    def _dispatch(self, e_slice, q_slice, d, capacity: int):
-        """One async ``query_block`` dispatch (no host sync)."""
-        return ops.query_block(
-            e_slice, q_slice, np.float32(d), capacity=capacity,
-            use_pallas=self.use_pallas, interpret=self.interpret,
-            cand_blk=self.cand_blk, qry_blk=self.qry_blk,
-            compaction=self.compaction)
-
-    def _slices(self, batch, q_packed):
-        e_slice = self._packed[batch.cand_first:batch.cand_last + 1]
-        q_slice = q_packed[batch.q_first:batch.q_last + 1]
-        capacity = _bucket(min(self.default_capacity,
-                               batch.num_candidates * batch.size), 256)
-        return e_slice, q_slice, capacity
-
-    def _batch_part(self, batch, out, count: int) -> ResultSet | None:
-        """Marshal one batch's device buffers into a host ResultSet part."""
-        if count == 0:
-            return None
-        e_local = np.asarray(out["entry_idx"][:count])
-        q_local = np.asarray(out["query_idx"][:count])
-        e_global = batch.cand_first + e_local.astype(np.int64)
-        return ResultSet(
-            entry_idx=e_global,
-            entry_traj=self.db.traj_id[e_global].astype(np.int64),
-            entry_seg=self.db.seg_id[e_global].astype(np.int64),
-            query_idx=batch.q_first + q_local.astype(np.int64),
-            t_enter=np.asarray(out["t_enter"][:count]),
-            t_exit=np.asarray(out["t_exit"][:count]),
-        )
+    def dispatcher(self, queries_packed: np.ndarray,
+                   d: float) -> _QueryBlockDispatcher:
+        """The engine's ``BatchDispatcher`` for one query set (executor
+        protocol interop — the scheduler and tests drive it directly)."""
+        return _QueryBlockDispatcher(self, queries_packed, float(d))
 
     # ------------------------------------------------------------------
-    def execute(self, queries: SegmentArray, d: float, plan: BatchPlan,
+    def execute(self, queries: SegmentArray, d: float,
+                plan: BatchPlan | QueryPlan,
                 *, pipeline: bool | None = None) -> tuple[ResultSet, ExecStats]:
         """Run every batch in ``plan`` against the database.
 
-        ``pipeline`` overrides the engine-level default for this call
-        (``None`` → use ``self.pipeline``).
+        ``plan`` may be a refined ``QueryPlan`` (the facade's planner
+        output, carrying capacities + dispatch groups) or a legacy
+        ``BatchPlan`` (coerced to a single-group plan sized by the engine's
+        ``default_capacity``).  ``pipeline`` overrides the engine-level
+        default for this call (``None`` → use ``self.pipeline``).
         """
         if not queries.is_sorted():
             # Unreachable from the public facade: repro.api.TrajectoryDB
@@ -251,124 +164,11 @@ class DistanceThresholdEngine:
             raise ValueError(
                 "queries must be sorted by t_start; use "
                 "repro.api.TrajectoryDB.query, which sorts automatically")
-        q_packed = queries.packed()
+        qplan = as_query_plan(plan, default_capacity=self.default_capacity)
         use_pipeline = self.pipeline if pipeline is None else pipeline
-        if use_pipeline:
-            return self._execute_pipelined(q_packed, d, plan)
-        return self._execute_sync(q_packed, d, plan)
-
-    # ------------------------------------------------------------------
-    def _execute_sync(self, q_packed, d: float,
-                      plan: BatchPlan) -> tuple[ResultSet, ExecStats]:
-        """Classic per-batch loop: dispatch → sync → (maybe retry) → next."""
-        t_begin = time.perf_counter()
-        parts: list[ResultSet] = []
-        stats: list[BatchStats] = []
-        num_syncs = 0
-        for batch in plan.batches:
-            n_cand = batch.num_candidates
-            bs = batch.size
-            if n_cand == 0:
-                stats.append(BatchStats(bs, 0, 0, 0, 0.0, 0))
-                continue
-            e_slice, q_slice, capacity = self._slices(batch, q_packed)
-            t0 = time.perf_counter()
-            out = self._dispatch(e_slice, q_slice, d, capacity)
-            jax.block_until_ready(out)
-            kernel_s = time.perf_counter() - t0
-            num_syncs += 1
-            count = int(out["count"])
-            retries = 0
-            retry_s = 0.0
-            while count > capacity:                    # §5 re-attempt path
-                capacity = _bucket(count, 256)
-                t0r = time.perf_counter()
-                out = self._dispatch(e_slice, q_slice, d, capacity)
-                jax.block_until_ready(out)
-                retry_s += time.perf_counter() - t0r
-                num_syncs += 1
-                count = int(out["count"])
-                retries += 1
-            part = self._batch_part(batch, out, count)
-            if part is not None:
-                parts.append(part)
-            stats.append(BatchStats(bs, n_cand, bs * n_cand, count,
-                                    kernel_s, retries, retry_s))
-        total = time.perf_counter() - t_begin
-        return (ResultSet.concatenate(parts),
-                ExecStats(plan.plan_seconds, total, stats,
-                          num_syncs=num_syncs, pipelined=False))
-
-    # ------------------------------------------------------------------
-    def _execute_pipelined(self, q_packed, d: float,
-                           plan: BatchPlan) -> tuple[ResultSet, ExecStats]:
-        """Two-phase executor: dispatch everything, then sync once.
-
-        Phase A queues every batch's kernel via JAX async dispatch — no
-        device reads, so the host never stalls between batches.  Phase B
-        blocks once on all outputs, reads every exact count, re-dispatches
-        only the overflowed batches at enlarged (≥ doubled) capacity, and
-        syncs those once more: ≤ 2 host syncs per query set total.
-        """
-        t_begin = time.perf_counter()
-        # Phase A: async dispatch of every non-empty batch.
-        inflight: list[tuple[int, object, object, object]] = []
-        order: list[tuple[object, int, int]] = []   # (batch, n_cand, slot)
-        for batch in plan.batches:
-            n_cand = batch.num_candidates
-            if n_cand == 0:
-                order.append((batch, 0, -1))
-                continue
-            e_slice, q_slice, capacity = self._slices(batch, q_packed)
-            out = self._dispatch(e_slice, q_slice, d, capacity)
-            order.append((batch, n_cand, len(inflight)))
-            inflight.append((capacity, e_slice, q_slice, out))
-        dispatch_seconds = time.perf_counter() - t_begin
-
-        # Phase B: one sync for the whole query set, then exact counts.
-        t_sync = time.perf_counter()
-        jax.block_until_ready([slot[3] for slot in inflight])
-        num_syncs = 1
-        counts = [int(slot[3]["count"]) for slot in inflight]
-
-        # Re-dispatch only overflowed batches at bucketed (≥ 2×) capacity;
-        # the exact count makes one retry always sufficient.
-        retried: list[int] = []
-        results: list[object] = [slot[3] for slot in inflight]
-        t_retry = time.perf_counter()
-        for k, (capacity, e_slice, q_slice, _) in enumerate(inflight):
-            if counts[k] > capacity:
-                results[k] = self._dispatch(e_slice, q_slice, d,
-                                            _bucket(counts[k], 256))
-                retried.append(k)
-        if retried:
-            jax.block_until_ready([results[k] for k in retried])
-            num_syncs += 1
-        retry_seconds = time.perf_counter() - t_retry if retried else 0.0
-        sync_seconds = time.perf_counter() - t_sync - retry_seconds
-
-        # Assembly (host-side marshalling; never charged to kernel time).
-        parts: list[ResultSet] = []
-        stats: list[BatchStats] = []
-        for batch, n_cand, slot in order:
-            bs = batch.size
-            if slot < 0:
-                stats.append(BatchStats(bs, 0, 0, 0, 0.0, 0))
-                continue
-            count = counts[slot]
-            part = self._batch_part(batch, results[slot], count)
-            if part is not None:
-                parts.append(part)
-            n_retries = 1 if slot in retried else 0
-            stats.append(BatchStats(
-                bs, n_cand, bs * n_cand, count, 0.0, n_retries,
-                retry_seconds / len(retried) if n_retries else 0.0))
-        total = time.perf_counter() - t_begin
-        return (ResultSet.concatenate(parts),
-                ExecStats(plan.plan_seconds, total, stats,
-                          num_syncs=num_syncs,
-                          dispatch_seconds=dispatch_seconds,
-                          sync_seconds=sync_seconds, pipelined=True))
+        executor = make_executor(self.dispatcher(queries.packed(), d),
+                                 pipeline=use_pipeline)
+        return executor.run(qplan)
 
 
 # ----------------------------------------------------------------------

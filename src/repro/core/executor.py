@@ -1,0 +1,378 @@
+"""Execution layer: dispatcher protocol + the sync / pipelined executors.
+
+The counterpart of ``repro.core.planner``: a :class:`~repro.core.planner.
+QueryPlan` says *what* to run; this module runs it.  The PR 2 two-phase
+pipelined dispatch (phase A: async-dispatch every batch with no host reads;
+phase B: one ``block_until_ready``, exact counts, re-dispatch only
+overflowed batches, sync once more) is generalized into an executor that
+drives any :class:`BatchDispatcher` — the seam that lets the single-device
+engine (``repro.core.engine``) and the sharded mesh backend
+(``repro.core.distributed.ShardedEngine``) share the ≤ 2-host-syncs-per-
+query-set property instead of each reimplementing the loop.
+
+A dispatcher answers four questions, all device-strategy-specific:
+
+* ``dispatch(batch, capacity)`` — queue the batch's device computation
+  asynchronously (slicing, padding, sharding — whatever the strategy
+  needs) and return a :class:`Dispatch` handle whose ``out`` is blockable.
+* ``count(dp)`` — the exact global hit count, read *after* a sync (for the
+  sharded dispatcher this is the ``psum``-reduced total).
+* ``retry_capacity(dp)`` — ``None`` if the dispatch's buffers held every
+  hit, else the (bucketed, ≥ doubled) capacity a re-dispatch needs.  The
+  kernels always report exact counts, so one retry always converges.
+* ``marshal(dp, count)`` — host-side assembly of the device buffers into a
+  ``ResultSet`` part.
+
+Two executors drive a dispatcher over a plan:
+
+* :class:`SyncExecutor` — the classic per-batch loop (dispatch → sync →
+  maybe retry → marshal).  One host sync per invocation; per-batch device
+  timings are observable, which the §8 perf-model fits need.
+* :class:`PipelinedExecutor` — the two-phase dispatch, *per dispatch
+  group*: group k+1 is dispatched before group k is synced and marshalled,
+  so host-side result assembly of group k overlaps device compute of group
+  k+1.  With the default single-group plan this is exactly PR 2's O(1)-sync
+  executor (``ExecStats.num_syncs ≤ 2``); with G groups it is ≤ 2·G syncs
+  and marshalling never leaves the device idle between groups.
+
+``ResultSet`` / ``BatchStats`` / ``ExecStats`` moved here from
+``repro.core.engine`` (which re-exports them — import paths are stable).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Protocol, runtime_checkable
+
+import jax
+import numpy as np
+
+from repro.core.batching import QueryBatch
+from repro.core.planner import QueryPlan
+
+
+# ----------------------------------------------------------------------
+# Results + stats (moved from repro.core.engine; engine re-exports).
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class ResultSet:
+    """Flat result arrays: one row per (entry segment, query segment, interval)."""
+
+    entry_idx: np.ndarray    # global index into the sorted database
+    entry_traj: np.ndarray   # trajectory id of the entry segment
+    entry_seg: np.ndarray    # segment id of the entry segment
+    query_idx: np.ndarray    # global index into the sorted query array
+    t_enter: np.ndarray
+    t_exit: np.ndarray
+
+    def __len__(self) -> int:
+        return int(self.entry_idx.shape[0])
+
+    @staticmethod
+    def empty() -> "ResultSet":
+        zi = np.zeros(0, np.int64)
+        zf = np.zeros(0, np.float32)
+        return ResultSet(zi, zi.copy(), zi.copy(), zi.copy(), zf, zf.copy())
+
+    @staticmethod
+    def concatenate(parts: list["ResultSet"]) -> "ResultSet":
+        if not parts:
+            return ResultSet.empty()
+        return ResultSet(*[np.concatenate([getattr(p, f.name) for p in parts])
+                           for f in dataclasses.fields(ResultSet)])
+
+    def sorted_canonical(self) -> "ResultSet":
+        """Canonical (entry_idx, query_idx) order — for set comparisons."""
+        order = np.lexsort((self.query_idx, self.entry_idx))
+        return ResultSet(*[getattr(self, f.name)[order]
+                           for f in dataclasses.fields(ResultSet)])
+
+
+@dataclasses.dataclass
+class BatchStats:
+    """Per-invocation record (feeds the §8 performance model).
+
+    ``kernel_seconds`` is dispatch + device time of the batch's first
+    invocation (timed with ``block_until_ready``); ``retry_seconds`` is the
+    wall time of overflow re-dispatches, kept separate so perf-model fits
+    see clean per-invocation numbers.  Pipelined execution reports both as
+    zero per batch (see ``ExecStats.sync_seconds``).
+    """
+
+    batch_size: int
+    num_candidates: int
+    num_interactions: int
+    num_hits: int
+    kernel_seconds: float
+    retries: int
+    retry_seconds: float = 0.0
+
+
+@dataclasses.dataclass
+class ExecStats:
+    plan_seconds: float
+    total_seconds: float
+    batches: list[BatchStats]
+    #: host↔device synchronization points (count reads / block_until_ready):
+    #: one per invocation (+retries) in sync mode; ≤ 2 per dispatch group in
+    #: pipelined mode — ≤ 2 per query set with the default single group.
+    num_syncs: int = 0
+    #: pipelined mode only: wall time of the phase A async dispatches and of
+    #: the phase B device waits (summed over dispatch groups).
+    dispatch_seconds: float = 0.0
+    sync_seconds: float = 0.0
+    pipelined: bool = False
+    #: dispatch groups the executor processed (1 = classic whole-plan phase).
+    num_groups: int = 1
+
+    @property
+    def kernel_seconds(self) -> float:
+        """First-dispatch device time (+ the pipelined device wait) — retry
+        re-dispatch time is deliberately excluded so perf-model fits see
+        per-invocation numbers; it is accounted in :attr:`retry_seconds`."""
+        return sum(b.kernel_seconds for b in self.batches) + self.sync_seconds
+
+    @property
+    def retry_seconds(self) -> float:
+        return sum(b.retry_seconds for b in self.batches)
+
+    @property
+    def host_seconds(self) -> float:
+        """Wall time not spent on device work: retries are device time too,
+        so they are subtracted alongside kernel_seconds."""
+        return self.total_seconds - self.kernel_seconds - self.retry_seconds
+
+    @property
+    def total_interactions(self) -> int:
+        return sum(b.num_interactions for b in self.batches)
+
+    @property
+    def total_hits(self) -> int:
+        return sum(b.num_hits for b in self.batches)
+
+    @property
+    def num_invocations(self) -> int:
+        return len(self.batches)
+
+    @property
+    def total_retries(self) -> int:
+        return sum(b.retries for b in self.batches)
+
+
+# ----------------------------------------------------------------------
+# Dispatcher protocol.
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class Dispatch:
+    """One in-flight batch dispatch: the batch, its result capacity, the
+    blockable device outputs, and optional dispatcher-private context
+    (e.g. the sharded dispatcher's per-pod layout)."""
+
+    batch: QueryBatch
+    capacity: int
+    out: object
+    ctx: object = None
+
+
+@runtime_checkable
+class BatchDispatcher(Protocol):
+    """One device-execution strategy, bound to a query set + threshold.
+
+    ``dispatch`` must be asynchronous (no host reads); ``count`` /
+    ``retry_capacity`` / ``marshal`` are only called after the executor has
+    blocked on ``Dispatch.out``.
+
+    A dispatcher may additionally expose ``redispatch(dp, capacity)`` — an
+    overflow re-dispatch of the same batch at a larger capacity that can
+    reuse ``dp.ctx`` (prepared host inputs) instead of rebuilding them;
+    executors fall back to ``dispatch(dp.batch, capacity)`` when absent.
+    """
+
+    def dispatch(self, batch: QueryBatch, capacity: int) -> Dispatch: ...
+
+    def count(self, dp: Dispatch) -> int: ...
+
+    def retry_capacity(self, dp: Dispatch) -> int | None: ...
+
+    def marshal(self, dp: Dispatch, count: int) -> ResultSet | None: ...
+
+
+def _redispatch(dispatcher: BatchDispatcher, dp: Dispatch,
+                capacity: int) -> Dispatch:
+    """Overflow re-dispatch, reusing prepared inputs when the dispatcher
+    supports it."""
+    redo = getattr(dispatcher, "redispatch", None)
+    if redo is not None:
+        return redo(dp, capacity)
+    return dispatcher.dispatch(dp.batch, capacity)
+
+
+def _empty_stats(batch: QueryBatch) -> BatchStats:
+    return BatchStats(batch.size, 0, 0, 0, 0.0, 0)
+
+
+# ----------------------------------------------------------------------
+# Executors.
+# ----------------------------------------------------------------------
+class SyncExecutor:
+    """Classic per-batch loop: dispatch → sync → (maybe retry) → next.
+
+    Used for §8 perf-model fits, which need per-invocation device timings —
+    the pipelined executor deliberately makes those unobservable.
+    """
+
+    pipelined = False
+
+    def __init__(self, dispatcher: BatchDispatcher):
+        self.dispatcher = dispatcher
+
+    def run(self, plan: QueryPlan) -> tuple[ResultSet, ExecStats]:
+        t_begin = time.perf_counter()
+        disp = self.dispatcher
+        parts: list[ResultSet] = []
+        stats: list[BatchStats] = []
+        num_syncs = 0
+        for batch, capacity in zip(plan.batches, plan.capacities):
+            if batch.num_candidates == 0:
+                stats.append(_empty_stats(batch))
+                continue
+            t0 = time.perf_counter()
+            dp = disp.dispatch(batch, capacity)
+            jax.block_until_ready(dp.out)
+            kernel_s = time.perf_counter() - t0
+            num_syncs += 1
+            count = disp.count(dp)
+            retries = 0
+            retry_s = 0.0
+            while (cap2 := disp.retry_capacity(dp)) is not None:
+                t0r = time.perf_counter()
+                dp = _redispatch(disp, dp, cap2)
+                jax.block_until_ready(dp.out)
+                retry_s += time.perf_counter() - t0r
+                num_syncs += 1
+                count = disp.count(dp)
+                retries += 1
+            part = disp.marshal(dp, count)
+            if part is not None:
+                parts.append(part)
+            stats.append(BatchStats(batch.size, batch.num_candidates,
+                                    batch.size * batch.num_candidates, count,
+                                    kernel_s, retries, retry_s))
+        total = time.perf_counter() - t_begin
+        return (ResultSet.concatenate(parts),
+                ExecStats(plan.plan_seconds, total, stats,
+                          num_syncs=num_syncs, pipelined=False,
+                          num_groups=max(plan.num_groups, 1)))
+
+
+class PipelinedExecutor:
+    """Two-phase group-wise executor: dispatch everything in a group, sync
+    once, retry only overflows, and marshal while the *next* group computes.
+
+    Per group: phase A queues every batch's device computation via JAX
+    async dispatch (no host reads, so the host never stalls between
+    batches); phase B performs one ``block_until_ready`` over the group,
+    reads every exact count, re-dispatches only the overflowed batches at
+    enlarged (≥ doubled, bucketed) capacity, and syncs those once more —
+    ≤ 2 host syncs per group, ≤ 2 per query set with the default
+    single-group plan.  Group k's phase B (including host-side result
+    marshalling) runs *after* group k+1's phase A, so assembly of group k
+    overlaps device compute of group k+1.
+    """
+
+    pipelined = True
+
+    def __init__(self, dispatcher: BatchDispatcher):
+        self.dispatcher = dispatcher
+
+    def run(self, plan: QueryPlan) -> tuple[ResultSet, ExecStats]:
+        t_begin = time.perf_counter()
+        disp = self.dispatcher
+        nb = plan.num_batches
+        groups = plan.groups if plan.groups else (
+            [list(range(nb))] if nb else [])
+        slots: dict[int, Dispatch] = {}
+        counts: dict[int, int] = {}
+        retried: dict[int, float] = {}     # batch idx -> retry wall share
+        parts: dict[int, ResultSet] = {}
+        timing = {"dispatch": 0.0, "sync": 0.0, "syncs": 0}
+
+        def dispatch_group(g: list[int]) -> None:
+            t0 = time.perf_counter()
+            for i in g:
+                batch = plan.batches[i]
+                if batch.num_candidates == 0:
+                    continue
+                slots[i] = disp.dispatch(batch, plan.capacities[i])
+            timing["dispatch"] += time.perf_counter() - t0
+
+        def finish_group(g: list[int]) -> None:
+            live = [i for i in g if i in slots]
+            if not live:
+                return
+            t0 = time.perf_counter()
+            jax.block_until_ready([slots[i].out for i in live])
+            timing["syncs"] += 1
+            for i in live:
+                counts[i] = disp.count(slots[i])
+            # Re-dispatch only overflowed batches; exact counts make one
+            # retry always sufficient.
+            t_retry = time.perf_counter()
+            redo = []
+            for i in live:
+                cap2 = disp.retry_capacity(slots[i])
+                if cap2 is not None:
+                    slots[i] = _redispatch(disp, slots[i], cap2)
+                    redo.append(i)
+            if redo:
+                jax.block_until_ready([slots[i].out for i in redo])
+                timing["syncs"] += 1
+                for i in redo:
+                    counts[i] = disp.count(slots[i])
+            retry_s = time.perf_counter() - t_retry if redo else 0.0
+            timing["sync"] += (time.perf_counter() - t0) - retry_s
+            for i in redo:
+                retried[i] = retry_s / len(redo)
+            # Host-side marshalling — by now the next group's phase A has
+            # already queued its device work, so this overlaps compute.
+            for i in live:
+                part = disp.marshal(slots[i], counts[i])
+                if part is not None:
+                    parts[i] = part
+
+        for gi, g in enumerate(groups):
+            dispatch_group(g)
+            if gi > 0:
+                finish_group(groups[gi - 1])
+        if groups:
+            finish_group(groups[-1])
+
+        stats = []
+        for i, batch in enumerate(plan.batches):
+            if batch.num_candidates == 0:
+                stats.append(_empty_stats(batch))
+                continue
+            stats.append(BatchStats(
+                batch.size, batch.num_candidates,
+                batch.size * batch.num_candidates, counts.get(i, 0), 0.0,
+                1 if i in retried else 0, retried.get(i, 0.0)))
+        total = time.perf_counter() - t_begin
+        ordered = [parts[i] for i in sorted(parts)]
+        return (ResultSet.concatenate(ordered),
+                ExecStats(plan.plan_seconds, total, stats,
+                          num_syncs=timing["syncs"],
+                          dispatch_seconds=timing["dispatch"],
+                          sync_seconds=timing["sync"], pipelined=True,
+                          num_groups=max(len(groups), 1)))
+
+
+def make_executor(dispatcher: BatchDispatcher, *, pipeline: bool):
+    """The executor for ``pipeline=True`` (two-phase, O(1) syncs per group)
+    or ``pipeline=False`` (per-batch sync loop with observable timings)."""
+    return (PipelinedExecutor if pipeline else SyncExecutor)(dispatcher)
+
+
+__all__ = [
+    "BatchDispatcher", "BatchStats", "Dispatch", "ExecStats",
+    "PipelinedExecutor", "ResultSet", "SyncExecutor", "make_executor",
+]

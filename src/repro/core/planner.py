@@ -1,0 +1,215 @@
+"""Query planning layer: what to run, at what size, in which order.
+
+PR 3 splits the execution stack into an explicit **planner / executor**
+architecture.  Before it, planning knowledge was smeared across layers:
+the batching algorithm lived in ``repro.api`` (policy resolution), the
+result-buffer capacity formula in ``repro.core.engine._slices``, and batch
+grouping did not exist (the scheduler dispatched one batch per worker
+call).  This module owns all of it:
+
+* :func:`bucket_capacity` — the power-of-two capacity ladder that bounds
+  the jit-cache size (moved here from ``engine._bucket``; the engine keeps
+  an alias).
+* :class:`QueryPlan` — the full executable description of one query set:
+  the :class:`~repro.core.batching.BatchPlan` (which contiguous query runs
+  hit which contiguous candidate ranges), a sized result capacity per
+  batch, and *dispatch groups* — contiguous runs of batches that one
+  executor phase dispatches together.
+* :class:`QueryPlanner` — builds a ``QueryPlan`` from sorted queries: runs
+  the batching algorithm, sizes capacities, forms groups.
+
+Every executor consumes a ``QueryPlan`` — the single-device engine
+(``repro.core.engine``), the sharded mesh backend
+(``repro.core.distributed.ShardedEngine``) and the deadline scheduler
+(``repro.core.scheduler``, which re-plans each *group* as a sub-plan).
+That shared seam is what makes a new execution strategy a dispatcher
+implementation instead of a fork of the engine loop — see
+``repro.core.executor``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.core.batching import ALGORITHMS, BatchPlan, QueryBatch
+from repro.core.index import TemporalBinIndex
+from repro.core.segments import SegmentArray
+
+#: Result-capacity bucket granularity (slots).  Capacities are rounded up
+#: to ``CAPACITY_GRANULARITY * 2**k`` so retries and differently-sized
+#: batches share jit cache entries.
+CAPACITY_GRANULARITY = 256
+
+#: Default result-buffer slots per batch (the paper statically allocates
+#: |D| slots, §5; we allocate small and retry on exact-count overflow).
+DEFAULT_CAPACITY = 4096
+
+
+def bucket_capacity(n: int, blk: int = CAPACITY_GRANULARITY) -> int:
+    """Round up to blk, then to blk·2^k — bounds the jit-cache size."""
+    n = max(n, 1)
+    b = blk
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass
+class QueryPlan:
+    """Executable plan for one query set: batches + capacities + groups.
+
+    ``groups`` partitions ``range(num_batches)`` into contiguous runs; each
+    run is one *dispatch group* — the pipelined executor dispatches a whole
+    group asynchronously, then overlaps marshalling it with the next
+    group's device compute, and the deadline scheduler hands one group per
+    worker call.  A single group (the default) gives the PR 2 behavior:
+    every batch dispatched before the first sync, ≤ 2 host syncs per query
+    set.
+
+    The ``BatchPlan`` surface (``algorithm``, ``params``, ``batches``,
+    ``num_batches``, ``total_interactions``, ``sizes``) is re-exposed so
+    existing consumers of ``QueryResult.plan`` keep working.
+    """
+
+    batch_plan: BatchPlan
+    capacities: list[int]          # result-buffer slots per batch (bucketed)
+    groups: list[list[int]]        # dispatch groups: contiguous batch index runs
+    plan_seconds: float            # batching + refinement time
+
+    # -- BatchPlan passthrough (stable consumer surface) -----------------
+    @property
+    def algorithm(self) -> str:
+        return self.batch_plan.algorithm
+
+    @property
+    def params(self) -> dict:
+        return self.batch_plan.params
+
+    @property
+    def batches(self) -> list[QueryBatch]:
+        return self.batch_plan.batches
+
+    @property
+    def num_batches(self) -> int:
+        return self.batch_plan.num_batches
+
+    @property
+    def num_groups(self) -> int:
+        return len(self.groups)
+
+    @property
+    def total_interactions(self) -> int:
+        return self.batch_plan.total_interactions
+
+    def sizes(self) -> np.ndarray:
+        return self.batch_plan.sizes()
+
+    # ------------------------------------------------------------------
+    def subplan(self, batch_indices: Sequence[int]) -> "QueryPlan":
+        """A single-group plan over a subset of this plan's batches —
+        what the scheduler hands one worker call (re-execution of the same
+        sub-plan is idempotent: batches are stateless and deterministic)."""
+        idx = list(batch_indices)
+        bp = BatchPlan(self.algorithm, self.params,
+                       [self.batches[i] for i in idx], 0.0)
+        return QueryPlan(bp, [self.capacities[i] for i in idx],
+                         make_groups(len(idx), None), 0.0)
+
+
+def size_capacity(batch: QueryBatch, default_capacity: int,
+                  granularity: int = CAPACITY_GRANULARITY) -> int:
+    """Result slots for one batch: never more than the interaction count
+    (a batch cannot produce more hits than interactions), bucketed."""
+    return bucket_capacity(min(default_capacity,
+                               batch.num_candidates * batch.size),
+                           granularity)
+
+
+def make_groups(num_batches: int, group_size: int | None) -> list[list[int]]:
+    """Partition batch indices into contiguous dispatch groups.
+
+    ``group_size=None`` (the default) puts every batch in one group — the
+    O(1)-syncs-per-query-set shape.  A positive ``group_size`` chunks the
+    plan so the executor can overlap marshalling of group k with device
+    compute of group k+1 (and so the scheduler has re-issuable units).
+    """
+    if num_batches <= 0:
+        return []
+    if group_size is None or group_size >= num_batches:
+        return [list(range(num_batches))]
+    group_size = max(int(group_size), 1)
+    return [list(range(k, min(k + group_size, num_batches)))
+            for k in range(0, num_batches, group_size)]
+
+
+class QueryPlanner:
+    """Builds :class:`QueryPlan`\\ s: batching algorithm + capacity sizing +
+    dispatch grouping, against one temporal-bin index.
+
+    The planner is pure host-side bookkeeping — it never touches a device —
+    so one planner serves every backend (single-device engine, sharded
+    mesh, scheduler stream) and tests can assert planning decisions without
+    executing anything.
+    """
+
+    def __init__(self, index: TemporalBinIndex, *,
+                 algorithm: str = "greedysetsplit-min",
+                 params: Mapping | None = None,
+                 default_capacity: int = DEFAULT_CAPACITY,
+                 granularity: int = CAPACITY_GRANULARITY,
+                 group_size: int | None = None):
+        if algorithm not in ALGORITHMS:
+            raise ValueError(f"unknown batching algorithm {algorithm!r}; "
+                             f"choose from {sorted(ALGORITHMS)}")
+        self.index = index
+        self.algorithm = algorithm
+        self.params = dict(params or {})
+        self.default_capacity = default_capacity
+        self.granularity = granularity
+        self.group_size = group_size
+
+    # ------------------------------------------------------------------
+    def plan(self, sorted_queries: SegmentArray) -> QueryPlan:
+        """Run the batching algorithm and refine the result.  Queries must
+        already be sorted by ``t_start`` (the facade guarantees it)."""
+        try:
+            bp = ALGORITHMS[self.algorithm](self.index, sorted_queries,
+                                            **self.params)
+        except TypeError as e:
+            raise ValueError(
+                f"batch params {self.params} do not match algorithm "
+                f"{self.algorithm!r}: {e} (pass batching=... alongside the "
+                f"algorithm's parameters)") from None
+        return self.refine(bp)
+
+    def refine(self, batch_plan: BatchPlan) -> QueryPlan:
+        """Attach capacities and dispatch groups to an existing
+        ``BatchPlan`` (also the adapter engines use to accept legacy
+        ``BatchPlan`` arguments)."""
+        t0 = time.perf_counter()
+        caps = [size_capacity(b, self.default_capacity, self.granularity)
+                for b in batch_plan.batches]
+        groups = make_groups(len(batch_plan.batches), self.group_size)
+        return QueryPlan(batch_plan, caps, groups,
+                         batch_plan.plan_seconds + time.perf_counter() - t0)
+
+
+def as_query_plan(plan: "BatchPlan | QueryPlan", *,
+                  default_capacity: int = DEFAULT_CAPACITY,
+                  group_size: int | None = None) -> QueryPlan:
+    """Coerce a legacy ``BatchPlan`` into a single-group ``QueryPlan``
+    (no-op for plans that already are one)."""
+    if isinstance(plan, QueryPlan):
+        return plan
+    caps = [size_capacity(b, default_capacity) for b in plan.batches]
+    return QueryPlan(plan, caps, make_groups(len(plan.batches), group_size),
+                     plan.plan_seconds)
+
+
+__all__ = [
+    "CAPACITY_GRANULARITY", "DEFAULT_CAPACITY", "QueryPlan", "QueryPlanner",
+    "as_query_plan", "bucket_capacity", "make_groups", "size_capacity",
+]

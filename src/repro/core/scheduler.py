@@ -1,33 +1,43 @@
 """Fault-tolerant batch scheduler: deadlines, re-issue, straggler
-mitigation.
+mitigation — over *batch groups*.
 
 At thousand-node scale a query batch (or a data-parallel step) can stall on
 one slow/failed worker.  The paper's online objective (minimize response
 time for an arbitrary query stream, §3) makes stalls directly user-visible,
 so the engine's batch queue needs the standard production treatments:
 
-* **deadline + re-issue**: every batch gets a deadline derived from the §8
-  performance model's predicted time × a slack factor; a batch that misses
-  its deadline is re-issued (to the same pool here; to another pod in a
-  real deployment).  Because the engine is deterministic and stateless per
-  batch, re-execution is always safe (idempotent).
-* **at-least-once with deduplication**: results carry the batch id; the
-  collector keeps the first completed copy of each batch, so a straggler
+* **batch groups**: the scheduler's unit of work is a *group* of
+  consecutive batches, not a single batch.  Each worker call executes its
+  group as one sub-plan through the engine's pipelined executor — one
+  two-phase dispatch (≤ 2 host syncs) per group — so the O(1)-sync
+  property amortizes inside a stream too, instead of degrading back to one
+  sync per batch the moment the scheduler is involved.  Group size
+  defaults to ≥ 2 batches per call (see :meth:`DeadlineScheduler.groups`).
+* **deadline + re-issue**: every group gets a deadline derived from the §8
+  performance model's predicted time *summed over the group's batches* × a
+  slack factor; a group that misses its deadline is re-issued (to the same
+  pool here; to another pod in a real deployment).  Because the engine is
+  deterministic and stateless per batch, re-executing a whole group is
+  always safe (idempotent).
+* **at-least-once with deduplication**: results carry the group id; the
+  collector keeps the first completed copy of each group, so a straggler
   finishing after its re-issue is discarded.
-* **epoch-stamped state**: the scheduler's queue state (pending/done batch
+* **epoch-stamped state**: the scheduler's queue state (pending/done group
   ids) is trivially checkpointable alongside the engine, so a restarted
-  coordinator resumes the remaining batches only.
+  coordinator resumes the remaining groups only.
 
 Execution here uses a thread pool (the CPU stand-in for per-pod executors);
-``delay_hook`` lets tests inject artificial stragglers.
+``delay_hook(group_idx, attempt)`` lets tests inject artificial stragglers.
 
 Public entry point: ``repro.api.TrajectoryDB.query_stream`` (and the
 ``repro.serve.TrajectoryQueryService`` shell on top) — callers rarely build
-a ``DeadlineScheduler`` directly.
+a ``DeadlineScheduler`` directly.  ``ExecutionPolicy.stream_group_size``
+sets the group size through the facade.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
 import time
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
@@ -35,88 +45,136 @@ from typing import Callable
 
 from repro.core.batching import BatchPlan
 from repro.core.engine import DistanceThresholdEngine, ResultSet
+from repro.core.planner import QueryPlan, as_query_plan, make_groups
 from repro.core.segments import SegmentArray
 
 
 @dataclasses.dataclass
 class SchedulerStats:
-    completed: int = 0
-    reissued: int = 0
-    duplicates_dropped: int = 0
+    completed: int = 0             #: batches completed (first copy)
+    groups: int = 0                #: batch groups formed (worker-call units)
+    reissued: int = 0              #: groups re-issued past their deadline
+    duplicates_dropped: int = 0    #: late duplicate group completions dropped
     wall_seconds: float = 0.0
+    group_sizes: list = dataclasses.field(default_factory=list)
+
+    @property
+    def batches_per_call(self) -> float:
+        """Mean batches dispatched per worker call — ≥ 2 by default when
+        the plan has ≥ 2 batches (the pipelined-stream property)."""
+        return (sum(self.group_sizes) / len(self.group_sizes)
+                if self.group_sizes else 0.0)
 
 
 class DeadlineScheduler:
-    """Run a BatchPlan with per-batch deadlines and straggler re-issue."""
+    """Run a plan as deadline-tracked batch *groups* with straggler
+    re-issue; each group is one pipelined engine dispatch."""
 
     def __init__(self, engine: DistanceThresholdEngine, *,
                  workers: int = 2, slack: float = 4.0,
                  min_deadline: float = 0.05,
                  predict_seconds: Callable | None = None,
-                 delay_hook: Callable | None = None):
+                 delay_hook: Callable | None = None,
+                 group_size: int | None = None):
         self.engine = engine
         self.workers = workers
         self.slack = slack
         self.min_deadline = min_deadline
         self.predict_seconds = predict_seconds
-        self.delay_hook = delay_hook          # (batch_idx, attempt) -> None
+        self.delay_hook = delay_hook          # (group_idx, attempt) -> None
+        self.group_size = group_size          # None -> auto (>= 2 per call)
         self._lock = threading.Lock()
 
-    def _deadline_for(self, batch) -> float:
+    # ------------------------------------------------------------------
+    def groups(self, num_batches: int) -> list[list[int]]:
+        """Partition batch indices into worker-call groups.
+
+        ``group_size=None`` auto-sizes so every call carries ≥ 2 batches
+        (a lone trailing remainder is folded into the previous group)
+        while keeping at least ~2 groups per worker in flight (re-issue
+        granularity): ``max(2, ceil(n / (2·workers)))``.  An explicit
+        ``group_size`` is honored as given, remainder group included.
+        """
+        if num_batches <= 0:
+            return []
+        gs = self.group_size
+        auto = gs is None
+        if auto:
+            gs = max(2, math.ceil(num_batches / (2 * self.workers)))
+        gs = max(1, min(int(gs), num_batches))
+        out = make_groups(num_batches, gs)
+        if auto and len(out) >= 2 and len(out[-1]) == 1:
+            out[-2].extend(out.pop())
+        return out
+
+    def _deadline_for(self, batches) -> float:
+        """§8 model-derived deadline for a whole group: the predictions sum
+        over the group's batches (one pipelined dispatch executes them
+        back-to-back), scaled by the slack factor.  Without a predictor
+        the floor scales with the group size — a call doing k batches of
+        work gets k batches of deadline."""
         if self.predict_seconds is not None:
-            return max(self.slack * self.predict_seconds(batch),
-                       self.min_deadline)
-        return self.min_deadline
+            predicted = sum(self.predict_seconds(b) for b in batches)
+            return max(self.slack * predicted, self.min_deadline)
+        return self.min_deadline * max(len(batches), 1)
 
-    def _run_one(self, queries: SegmentArray, d: float, plan: BatchPlan,
-                 idx: int, attempt: int):
+    def _run_one(self, queries: SegmentArray, d: float, plan: QueryPlan,
+                 group_idx: int, group: list[int], attempt: int):
         if self.delay_hook is not None:
-            self.delay_hook(idx, attempt)
-        sub = BatchPlan(plan.algorithm, plan.params, [plan.batches[idx]], 0.0)
+            self.delay_hook(group_idx, attempt)
+        sub = plan.subplan(group)
         rs, _ = self.engine.execute(queries, d, sub)
-        return idx, attempt, rs
+        return group_idx, attempt, rs
 
-    def execute(self, queries: SegmentArray, d: float, plan: BatchPlan
+    # ------------------------------------------------------------------
+    def execute(self, queries: SegmentArray, d: float,
+                plan: BatchPlan | QueryPlan
                 ) -> tuple[ResultSet, SchedulerStats]:
         t0 = time.perf_counter()
-        stats = SchedulerStats()
+        qplan = as_query_plan(plan,
+                              default_capacity=self.engine.default_capacity)
+        groups = self.groups(qplan.num_batches)
+        stats = SchedulerStats(groups=len(groups),
+                               group_sizes=[len(g) for g in groups])
         results: dict[int, ResultSet] = {}
         pool = ThreadPoolExecutor(self.workers)
         futures = {}
         deadlines = {}
-        attempts = {i: 0 for i in range(plan.num_batches)}
+        attempts = {g: 0 for g in range(len(groups))}
         try:
-            for i in range(plan.num_batches):
-                fut = pool.submit(self._run_one, queries, d, plan, i, 0)
-                futures[fut] = i
-                deadlines[i] = time.perf_counter() + self._deadline_for(
-                    plan.batches[i])
-            while len(results) < plan.num_batches:
+            for g, group in enumerate(groups):
+                fut = pool.submit(self._run_one, queries, d, qplan, g,
+                                  group, 0)
+                futures[fut] = g
+                deadlines[g] = time.perf_counter() + self._deadline_for(
+                    [qplan.batches[i] for i in group])
+            while len(results) < len(groups):
                 done, _ = wait(list(futures), timeout=0.01,
                                return_when=FIRST_COMPLETED)
                 now = time.perf_counter()
                 for fut in done:
-                    i = futures.pop(fut)
-                    idx, attempt, rs = fut.result()
+                    futures.pop(fut)
+                    g, attempt, rs = fut.result()
                     with self._lock:
-                        if idx in results:
+                        if g in results:
                             stats.duplicates_dropped += 1
                         else:
-                            results[idx] = rs
-                            stats.completed += 1
-                # re-issue batches past deadline that are still incomplete
-                pending = {i for i in futures.values()}
-                for i in list(pending):
-                    if i in results or now <= deadlines.get(i, now + 1):
+                            results[g] = rs
+                            stats.completed += len(groups[g])
+                # re-issue groups past deadline that are still incomplete
+                pending = {g for g in futures.values()}
+                for g in list(pending):
+                    if g in results or now <= deadlines.get(g, now + 1):
                         continue
-                    attempts[i] += 1
+                    attempts[g] += 1
                     stats.reissued += 1
-                    deadlines[i] = now + self._deadline_for(plan.batches[i])
-                    fut = pool.submit(self._run_one, queries, d, plan, i,
-                                      attempts[i])
-                    futures[fut] = i
+                    deadlines[g] = now + self._deadline_for(
+                        [qplan.batches[i] for i in groups[g]])
+                    fut = pool.submit(self._run_one, queries, d, qplan, g,
+                                      groups[g], attempts[g])
+                    futures[fut] = g
         finally:
             pool.shutdown(wait=False, cancel_futures=True)
-        ordered = [results[i] for i in range(plan.num_batches)]
+        ordered = [results[g] for g in range(len(groups))]
         stats.wall_seconds = time.perf_counter() - t0
         return ResultSet.concatenate(ordered), stats

@@ -39,6 +39,14 @@ Two kernels share the interval math (:func:`_tile_intervals`):
   comes back with the results, so overflow detection needs no dense pass
   and no host-side recompute phase.
 
+The fused kernel has two append strategies (``append=``): ``"chunk"`` — the
+masked-prefix-sum rank-selection path described above (in-kernel gathers) —
+and ``"rowloop"`` — a gather-free per-row ``pl.ds`` append loop kept as the
+Mosaic-lowering escape hatch (``ops.query_block(compaction=
+"fused_rowloop")``; also the automatic fallback if the gather path fails to
+lower outside interpret mode).  Both emit the identical deterministic
+order.
+
 The interval math matches ``ref.interaction_tile`` bit-for-bit in float32;
 tests sweep shapes/dtypes and assert allclose against the oracle, and the
 fused kernel's compacted rows are asserted equal to the dense kernel's
@@ -319,15 +327,103 @@ def _distthresh_compact_kernel(d_ref, entries_ref, queries_t_ref,
     count_ref[0, 0] = offset + tile_hits
 
 
+def _distthresh_compact_rowloop_kernel(d_ref, entries_ref, queries_t_ref,
+                                       e_idx_ref, q_idx_ref, enter_ref,
+                                       exit_ref, count_ref, *, cand_blk: int,
+                                       qry_blk: int, capacity: int,
+                                       valid_c: int, valid_q: int):
+    """Gather-free fallback append: one ``pl.ds`` window per *entry row*.
+
+    The chunked kernel above compacts each tile with rank-selection
+    (``searchsorted``) plus dynamic row/column **gathers** of the hit pairs
+    — the one construct the ROADMAP flags as needing a Mosaic-lowering
+    check on real hardware.  This variant trades arithmetic for lowering
+    safety: it materializes the dense per-tile intervals (the pre-fusion
+    cost), then walks the tile's rows with ``fori_loop``, compacting each
+    row's hits to its prefix with a **selection matmul** — ``sel[s, c] = 1``
+    iff column ``c`` holds the row's (s+1)-th hit, so compacted values are
+    plain ``sum(sel * row)`` reductions (VPU/MXU-friendly; no gather, no
+    scatter, no searchsorted) — and appending the row's window with a
+    single dynamic-slice store.  Row windows use the same overwritten-tail
+    scheme as the chunked kernel, with ``qry_blk`` slots of slack.
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        e_idx_ref[...] = jnp.full(e_idx_ref.shape, -1, jnp.int32)
+        q_idx_ref[...] = jnp.full(q_idx_ref.shape, -1, jnp.int32)
+        enter_ref[...] = jnp.zeros(enter_ref.shape, enter_ref.dtype)
+        exit_ref[...] = jnp.zeros(exit_ref.shape, exit_ref.dtype)
+        count_ref[0, 0] = 0
+
+    e_blk = entries_ref[...]
+    q_blk = queries_t_ref[...]
+    d = d_ref[0, 0]
+    t_enter, t_exit, hit = _tile_intervals(e_blk, q_blk, d)
+
+    row_ok = (jax.lax.broadcasted_iota(jnp.int32, (cand_blk, 1), 0)
+              + i * cand_blk) < valid_c
+    col_ok = (jax.lax.broadcasted_iota(jnp.int32, (1, qry_blk), 1)
+              + j * qry_blk) < valid_q
+    hit = hit & row_ok & col_ok
+
+    hit_i = hit.astype(jnp.int32)
+    row_cum = jnp.cumsum(hit_i, axis=1)          # (cand_blk, qry_blk)
+    offset = count_ref[0, 0]
+
+    # Per-slot and per-column index planes shared by every row iteration.
+    slot_plane = jax.lax.broadcasted_iota(jnp.int32, (qry_blk, qry_blk), 0)
+    col_plane = jax.lax.broadcasted_iota(jnp.int32, (qry_blk, qry_blk), 1)
+    slot_vec = jax.lax.broadcasted_iota(jnp.int32, (qry_blk, 1), 0)[:, 0]
+    zero = jnp.zeros((), enter_ref.dtype)
+
+    def _row_body(r, dst):
+        rh = jax.lax.dynamic_slice(hit_i, (r, 0), (1, qry_blk))
+        rcum = jax.lax.dynamic_slice(row_cum, (r, 0), (1, qry_blk))
+        rent = jax.lax.dynamic_slice(t_enter, (r, 0), (1, qry_blk))
+        rext = jax.lax.dynamic_slice(t_exit, (r, 0), (1, qry_blk))
+        n_r = rcum[0, qry_blk - 1]
+        # sel[s, c] = 1 iff column c is the row's (s+1)-th hit: compaction
+        # becomes a masked reduction over columns — no gathers anywhere.
+        sel = (rcum == slot_plane + 1) & (rh > 0)
+        sel_f = sel.astype(rent.dtype)
+        comp_col = jnp.sum(jnp.where(sel, col_plane, 0), axis=1)
+        comp_ent = jnp.sum(sel_f * rent, axis=1)
+        comp_ext = jnp.sum(sel_f * rext, axis=1)
+        valid = slot_vec < n_r
+        e_val = jnp.where(valid, i * cand_blk + r, -1).astype(jnp.int32)
+        q_val = jnp.where(valid, j * qry_blk + comp_col, -1).astype(jnp.int32)
+
+        @pl.when((n_r > 0) & (dst <= capacity))  # overflow: drop, keep count
+        def _():
+            e_idx_ref[pl.ds(dst, qry_blk)] = e_val
+            q_idx_ref[pl.ds(dst, qry_blk)] = q_val
+            enter_ref[pl.ds(dst, qry_blk)] = jnp.where(valid, comp_ent, zero)
+            exit_ref[pl.ds(dst, qry_blk)] = jnp.where(valid, comp_ext, zero)
+
+        return dst + n_r
+
+    end = jax.lax.fori_loop(0, cand_blk, _row_body, offset)
+    count_ref[0, 0] = end
+
+
+#: append strategies accepted by :func:`distthresh_compact_pallas`.
+APPEND_MODES = ("chunk", "rowloop")
+
+
 @functools.partial(jax.jit, static_argnames=(
-    "capacity", "cand_blk", "qry_blk", "valid_c", "valid_q", "interpret"))
+    "capacity", "cand_blk", "qry_blk", "valid_c", "valid_q", "interpret",
+    "append"))
 def distthresh_compact_pallas(entries: jnp.ndarray, queries_t: jnp.ndarray, d,
                               *, capacity: int,
                               cand_blk: int = DEFAULT_CAND_BLK,
                               qry_blk: int = DEFAULT_QRY_BLK,
                               valid_c: int | None = None,
                               valid_q: int | None = None,
-                              interpret: bool = True):
+                              interpret: bool = True,
+                              append: str = "chunk"):
     """Fused distance-threshold kernel with in-kernel result compaction.
 
     Args:
@@ -338,13 +434,20 @@ def distthresh_compact_pallas(entries: jnp.ndarray, queries_t: jnp.ndarray, d,
         still reports the exact total, so callers detect overflow exactly).
       valid_c / valid_q: number of *real* (non-padding) rows/cols; pairs at
         or beyond them are masked out of the result.  Default: all.
+      append: ``"chunk"`` — masked-prefix-sum rank-selection appends in
+        APPEND_BLK windows (the fast path; uses in-kernel gathers).
+        ``"rowloop"`` — the gather-free per-row ``pl.ds`` append loop (the
+        Mosaic-lowering escape hatch; same results, same determinism).
 
     Returns ``(entry_idx, query_idx, t_enter, t_exit, count)``: four
     (capacity,) buffers — int32 indices (-1 pad) and interval endpoints
     (0 pad) — plus the exact scalar int32 hit count.  Output order is
-    deterministic: tiles in grid order (query tiles innermost), row-major
-    within each tile.
+    deterministic (and identical across append modes): tiles in grid order
+    (query tiles innermost), row-major within each tile.
     """
+    if append not in APPEND_MODES:
+        raise ValueError(f"unknown append mode {append!r}; "
+                         f"choose from {APPEND_MODES}")
     cc, eight = entries.shape
     assert eight == 8, entries.shape
     eight2, qq = queries_t.shape
@@ -358,9 +461,10 @@ def distthresh_compact_pallas(entries: jnp.ndarray, queries_t: jnp.ndarray, d,
 
     # One append window of slack: a window starting at any offset
     # <= capacity stays in bounds, so no clamping can slide it over valid
-    # rows.
+    # rows.  Rowloop windows are qry_blk wide; chunked ones APPEND_BLK.
     tile = cand_blk * qry_blk
-    cap_pad = capacity + min(tile, APPEND_BLK)
+    window = qry_blk if append == "rowloop" else min(tile, APPEND_BLK)
+    cap_pad = capacity + window
     flat_spec = pl.BlockSpec((cap_pad,), lambda i, j: (0,))
     out_shapes = (
         jax.ShapeDtypeStruct((cap_pad,), jnp.int32),
@@ -369,8 +473,10 @@ def distthresh_compact_pallas(entries: jnp.ndarray, queries_t: jnp.ndarray, d,
         jax.ShapeDtypeStruct((cap_pad,), dtype),
         jax.ShapeDtypeStruct((1, 1), jnp.int32),
     )
+    kernel_fn = (_distthresh_compact_rowloop_kernel if append == "rowloop"
+                 else _distthresh_compact_kernel)
     kernel = functools.partial(
-        _distthresh_compact_kernel, cand_blk=cand_blk, qry_blk=qry_blk,
+        kernel_fn, cand_blk=cand_blk, qry_blk=qry_blk,
         capacity=capacity, valid_c=valid_c, valid_q=valid_q)
     e_idx, q_idx, t_enter, t_exit, count = pl.pallas_call(
         kernel,

@@ -10,7 +10,7 @@ Two layers:
   buffers plus the true hit count, so the caller can detect overflow and
   retry with a larger capacity (mirroring the paper's §5 re-attempt note).
 
-``query_block`` has two compaction strategies (``compaction=``):
+``query_block`` has three compaction strategies (``compaction=``):
 
 * ``"fused"`` (default on the Pallas path) — the hits are compacted *inside*
   the kernel (``distthresh_compact_pallas``): a running counter carried
@@ -18,11 +18,24 @@ Two layers:
   counter, and each tile appends its masked-prefix-sum-compacted hits
   directly into the flat result buffers.  Per-interaction HBM traffic is
   zero for non-hits, and the exact count comes back with the results.
+* ``"fused_rowloop"`` — the gather-free escape hatch: the same fused kernel
+  with the per-row ``pl.ds`` append loop (``append="rowloop"``).  Identical
+  results and output order; slower (it pays the dense-tile interval cost)
+  but free of the in-kernel gathers whose Mosaic lowering the ROADMAP
+  flags.  ``compaction="fused"`` *automatically* falls back to it — with a
+  one-time warning — if the gather path fails to lower outside interpret
+  mode.  The fallback fires where the compile happens: a *direct*
+  ``query_block`` call (the single-device engine path).  When
+  ``query_block`` is traced inside an outer jit (e.g. a ``shard_map``
+  closure), the lowering failure surfaces at the outer compile, beyond the
+  try/except — such callers must resolve the strategy up front, as
+  ``repro.core.distributed.ShardedEngine`` does with a tiny direct probe
+  compile at construction.
 * ``"dense"`` — the two-phase fallback (and the only strategy for the jnp
   oracle path): phase 1 materializes the dense int8 hit mask, phase 2
   compacts it with an XLA cumsum + scatter and recomputes the interval for
   the ≤ capacity compacted hits.  Kept as the validation baseline: tests
-  assert the two strategies produce identical hit sets.
+  assert the strategies produce identical hit sets.
 
 The two strategies emit different (both deterministic) row orders —
 ``"dense"`` is row-major over the full (C, Q) block, ``"fused"`` is
@@ -39,17 +52,25 @@ depend on cropping.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import distthresh as _dt
 from repro.kernels import ref
 from repro.kernels.distthresh import (DEFAULT_CAND_BLK, DEFAULT_QRY_BLK,
-                                      distthresh_compact_pallas,
                                       distthresh_pallas)
 
 #: compaction strategies accepted by :func:`query_block`.
-COMPACTIONS = ("fused", "dense")
+COMPACTIONS = ("fused", "fused_rowloop", "dense")
+
+#: One-time fused→rowloop fallback state: ``tripped`` flips when the fused
+#: (gather) compaction path fails to lower/compile; every later
+#: ``compaction="fused"`` call silently routes through the rowloop kernel.
+#: Module-level on purpose — a lowering capability is a property of the
+#: process's backend, not of one call site.  Tests reset it.
+_fused_fallback = {"tripped": False}
 
 
 def _pad_rows(x: jnp.ndarray, multiple: int, pad_t: jnp.ndarray) -> jnp.ndarray:
@@ -115,9 +136,6 @@ def _empty_block(capacity: int, dtype) -> dict:
             "count": jnp.zeros((), jnp.int32)}
 
 
-@functools.partial(jax.jit, static_argnames=("capacity", "use_pallas",
-                                             "interpret", "cand_blk",
-                                             "qry_blk", "compaction"))
 def query_block(entries: jnp.ndarray, queries: jnp.ndarray, d, *,
                 capacity: int, use_pallas: bool = True, interpret: bool = True,
                 cand_blk: int = DEFAULT_CAND_BLK, qry_blk: int = DEFAULT_QRY_BLK,
@@ -134,25 +152,67 @@ def query_block(entries: jnp.ndarray, queries: jnp.ndarray, d, *,
 
     ``compaction="fused"`` routes through the in-kernel compaction kernel
     when ``use_pallas`` is set (the jnp oracle has no kernel to fuse into,
-    so it always uses the dense two-phase pass); ``"dense"`` forces the
-    two-phase fallback.  Both orders are deterministic; see the module
-    docstring for how they differ.
+    so it always uses the dense two-phase pass), falling back **once, with
+    a warning** to ``"fused_rowloop"`` — the gather-free per-row ``pl.ds``
+    append variant — if the gather path fails to lower (see the module
+    docstring).  ``"fused_rowloop"`` selects that escape hatch explicitly;
+    ``"dense"`` forces the two-phase fallback.  All orders are
+    deterministic; see the module docstring for how they differ.
     """
     if compaction not in COMPACTIONS:
         raise ValueError(f"unknown compaction {compaction!r}; "
                          f"choose from {COMPACTIONS}")
+    kw = dict(capacity=capacity, use_pallas=use_pallas, interpret=interpret,
+              cand_blk=cand_blk, qry_blk=qry_blk)
+    if compaction == "fused" and use_pallas:
+        if _fused_fallback["tripped"]:
+            compaction = "fused_rowloop"
+        else:
+            try:
+                return _query_block_jit(entries, queries, d,
+                                        compaction="fused", **kw)
+            except Exception as err:
+                # Only fall back when the rowloop variant *succeeds* where
+                # the gather path failed — anything else (bad shapes, OOM,
+                # a broken install) is a real error and re-raises as-is.
+                try:
+                    out = _query_block_jit(entries, queries, d,
+                                           compaction="fused_rowloop", **kw)
+                except Exception:
+                    raise err
+                _fused_fallback["tripped"] = True
+                warnings.warn(
+                    "fused in-kernel compaction failed to lower "
+                    f"({type(err).__name__}: {err}); falling back to the "
+                    "gather-free compaction=\"fused_rowloop\" append loop "
+                    "for the rest of this process (pass "
+                    "compaction=\"fused_rowloop\" explicitly to silence)",
+                    RuntimeWarning, stacklevel=2)
+                return out
+    return _query_block_jit(entries, queries, d, compaction=compaction, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "use_pallas",
+                                             "interpret", "cand_blk",
+                                             "qry_blk", "compaction"))
+def _query_block_jit(entries: jnp.ndarray, queries: jnp.ndarray, d, *,
+                     capacity: int, use_pallas: bool, interpret: bool,
+                     cand_blk: int, qry_blk: int, compaction: str):
+    """Jitted :func:`query_block` body for one *resolved* compaction."""
     c, q = entries.shape[0], queries.shape[0]
     compute_dtype = jnp.promote_types(entries.dtype, jnp.float32)
     if c == 0 or q == 0:
         return _empty_block(capacity, compute_dtype)
 
-    if compaction == "fused" and use_pallas:
+    if compaction in ("fused", "fused_rowloop") and use_pallas:
         pad_t = _pad_time(entries, queries)
         ep = _pad_rows(entries, cand_blk, pad_t)
         qp = _pad_rows(queries, qry_blk, pad_t)
-        e_idx, q_idx, t_enter, t_exit, count = distthresh_compact_pallas(
+        append = "rowloop" if compaction == "fused_rowloop" else "chunk"
+        e_idx, q_idx, t_enter, t_exit, count = _dt.distthresh_compact_pallas(
             ep, qp.T, d, capacity=capacity, cand_blk=cand_blk,
-            qry_blk=qry_blk, valid_c=c, valid_q=q, interpret=interpret)
+            qry_blk=qry_blk, valid_c=c, valid_q=q, interpret=interpret,
+            append=append)
         return {"entry_idx": e_idx, "query_idx": q_idx,
                 "t_enter": t_enter, "t_exit": t_exit, "count": count}
 

@@ -8,11 +8,17 @@ online stream of distance-threshold queries (§3) — on top of the
 :class:`TrajectoryQueryService` is a minimal request/response shell around
 ``TrajectoryDB.query_stream``: callers ``submit()`` query sets as they
 arrive and ``drain()`` executes everything pending through the
-deadline/re-issue scheduler, so one straggling batch cannot stall the
-stream.  It is intentionally synchronous — the async transport (HTTP,
-queues, sharding across pods) layers on *top* of this API without touching
-query semantics, which is exactly the seam the ROADMAP's serving work
-needs.
+deadline/re-issue scheduler, so one straggling batch *group* cannot stall
+the stream.  Since PR 3 the scheduler's unit of work is a batch group (≥ 2
+batches per worker call by default, ``ExecutionPolicy.stream_group_size``
+to override) executed as one pipelined two-phase dispatch — ≤ 2 host syncs
+per group — so streamed serving keeps the engine's O(1)-sync property;
+``QueryResponse.scheduler`` reports the group accounting
+(``groups`` / ``group_sizes`` / ``batches_per_call``).  The service is
+intentionally synchronous — the async transport (HTTP, queues, routing
+across ``backend="shard"`` pods) layers on *top* of this API without
+touching query semantics, which is exactly the seam the ROADMAP's serving
+work needs.
 """
 from __future__ import annotations
 
@@ -60,7 +66,8 @@ class TrajectoryQueryService:
         if backend not in ("pallas", "jnp"):
             raise ValueError(
                 "TrajectoryQueryService streams through the scheduler and "
-                f"therefore needs an engine backend, got {backend!r}")
+                "therefore needs a single-device engine backend "
+                f"('pallas'/'jnp'), got {backend!r}")
         self.db = db
         self.backend = backend
         self.policy = policy or db.policy

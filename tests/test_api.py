@@ -30,20 +30,23 @@ def _rows(result: QueryResult):
 # Backend equivalence: the acceptance criterion.
 # ----------------------------------------------------------------------
 def test_backend_equivalence_on_scenario(scenario_db):
-    """All four backends — and, for each, both compaction strategies and
+    """All five backends — and, for each, the compaction strategies and
     both executors — produce identical canonical result sets, with
     query_idx in caller order, on a trajgen scenario.  (compaction= only
     changes the device path for "pallas"; pipeline= only the engine
     backends; both are accepted no-ops elsewhere.)"""
     db = scenario_db
     queries, d = db.scenario_queries, db.scenario_d
+    assert set(BACKENDS) == {"pallas", "jnp", "rtree", "brute", "shard"}
     results = {}
     for name in BACKENDS:
-        for compaction in ("fused", "dense"):
+        for compaction in ("fused", "fused_rowloop", "dense"):
             for pipeline in (True, False):
-                if name in ("rtree", "brute") and (compaction == "dense"
+                if name in ("rtree", "brute") and (compaction != "fused"
                                                    or not pipeline):
                     continue     # knobs don't reach the CPU baselines
+                if name != "pallas" and compaction == "fused_rowloop":
+                    continue     # rowloop is a Pallas-kernel escape hatch
                 res = db.query(queries, d, backend=name,
                                compaction=compaction, pipeline=pipeline)
                 results[(name, compaction, pipeline)] = res
@@ -65,13 +68,19 @@ def test_backend_equivalence_on_scenario(scenario_db):
     st = results[("pallas", "fused", True)].stats
     assert st.pipelined and st.num_syncs <= 2
     assert results[("jnp", "fused", False)].stats.num_syncs >= 1
+    # acceptance: the sharded path keeps <= 2 host syncs per query set
+    st_shard = results[("shard", "fused", True)].stats
+    assert st_shard is not None
+    assert st_shard.pipelined and st_shard.num_syncs <= 2
 
 
 def test_backend_protocol_and_cache(scenario_db):
+    from repro.api import ShardBackend
     db = scenario_db
     assert isinstance(db.backend("jnp"), EngineBackend)
     assert isinstance(db.backend("rtree"), RTreeBackend)
     assert isinstance(db.backend("brute"), BruteBackend)
+    assert isinstance(db.backend("shard"), ShardBackend)
     for name in BACKENDS:
         assert isinstance(db.backend(name), QueryBackend)
         assert db.backend(name) is db.backend(name)      # cached
@@ -82,6 +91,8 @@ def test_backend_protocol_and_cache(scenario_db):
         db.backend("cuda")
     with pytest.raises(ValueError):
         db.engine("brute")
+    with pytest.raises(ValueError):
+        db.engine("shard")              # mesh engine is not a device engine
 
 
 # ----------------------------------------------------------------------
@@ -234,8 +245,21 @@ def test_query_stream_matches_query(scenario_db):
     assert len(res) == len(base)
     for a, b in zip(_rows(res), _rows(base)):
         np.testing.assert_array_equal(a, b)
+    # acceptance: workers are handed batch *groups* (>= 2 batches per call
+    # whenever the plan has >= 2 batches), each one pipelined dispatch
+    assert res.plan.num_batches >= 2
+    assert sched.groups < res.plan.num_batches
+    assert max(sched.group_sizes) >= 2
+    assert sched.batches_per_call >= 2
+    # explicit group size flows through the policy
+    res2, sched2 = db.query_stream(
+        queries, d, policy=db.policy.with_(stream_group_size=1))
+    assert sched2.groups == res2.plan.num_batches
+    assert len(res2) == len(base)
     with pytest.raises(ValueError):
         db.query_stream(queries, d, backend="rtree")
+    with pytest.raises(ValueError):
+        db.query_stream(queries, d, backend="shard")
 
 
 def test_trajectory_query_service(scenario_db):

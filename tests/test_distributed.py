@@ -11,7 +11,8 @@ import textwrap
 import numpy as np
 import pytest
 
-from repro.core.distributed import choose_sharding, temporal_pod_partition
+from repro.core.distributed import (choose_sharding, route_query_to_pods,
+                                    temporal_pod_partition)
 from repro.core.segments import SegmentArray
 
 from conftest import random_segments
@@ -36,10 +37,244 @@ class TestPodPartition:
         assert len(seen) == len(set(seen)) == len(db)
 
 
+class TestPodPartitionEdgeCases:
+    """Satellite regressions: degenerate inputs must yield valid (possibly
+    empty) pod slices, never nonsense ranges."""
+
+    def test_more_pods_than_distinct_time_slices(self):
+        rng = np.random.default_rng(2)
+        db = random_segments(rng, 12, t_span=(5.0, 5.0))   # one instant
+        for pods in (2, 4, 50):
+            slices = temporal_pod_partition(db, pods)
+            assert len(slices) == pods
+            covered = [i for f, l in slices for i in range(f, l + 1)]
+            assert sorted(covered) == list(range(12))
+            assert len(covered) == len(set(covered))       # owned once
+            for f, l in slices:
+                assert f >= 0 and l >= f - 1               # valid range
+
+    def test_more_pods_than_segments(self):
+        rng = np.random.default_rng(3)
+        db = random_segments(rng, 3)
+        slices = temporal_pod_partition(db, 16)
+        covered = [i for f, l in slices for i in range(f, l + 1)]
+        assert sorted(covered) == [0, 1, 2]
+        # at least 13 of the 16 pods must be (validly) empty
+        assert sum(1 for f, l in slices if l < f) >= 13
+
+    def test_empty_database(self):
+        empty = SegmentArray.empty()
+        assert temporal_pod_partition(empty, 4) == [(0, -1)] * 4
+        assert route_query_to_pods(0.0, 1.0, empty, [(0, -1)] * 4) == []
+
+    def test_invalid_num_pods(self):
+        rng = np.random.default_rng(4)
+        db = random_segments(rng, 10)
+        with pytest.raises(ValueError, match="num_pods"):
+            temporal_pod_partition(db, 0)
+
+    def test_empty_query_extent_routes_nowhere(self):
+        rng = np.random.default_rng(5)
+        db = random_segments(rng, 50)
+        slices = temporal_pod_partition(db, 4)
+        assert route_query_to_pods(10.0, 5.0, db, slices) == []
+
+    def test_halo_slices_superset_of_owned(self):
+        rng = np.random.default_rng(6)
+        db = random_segments(rng, 400)
+        owned = temporal_pod_partition(db, 4)
+        halo = temporal_pod_partition(db, 4, halo=True)
+        edges = np.linspace(float(db.ts[0]), float(db.ts[-1]), 5)
+        widened = 0
+        for p, ((of, ol), (hf, hl)) in enumerate(zip(owned, halo)):
+            assert hf <= of and hl == ol                   # widened left only
+            widened += of - hf
+            # every excluded earlier segment really ends before the window
+            if hf > 0:
+                assert float(np.max(db.te[:hf])) < edges[p]
+        assert widened > 0, "fixture produced no boundary-crossing segments"
+
+
 class TestChooseSharding:
     def test_aspect_ratio(self):
         assert choose_sharding(100_000, 64, 16, 16) == "candidates"
         assert choose_sharding(64, 100_000, 16, 16) == "queries"
+
+
+class TestShardedEngineSingleDevice:
+    """backend="shard" correctness on whatever mesh the test process has
+    (1 CPU device here; the 8-device path runs in the subprocess below)."""
+
+    @pytest.fixture(scope="class")
+    def world(self):
+        rng = np.random.default_rng(11)
+        db = random_segments(rng, 900)
+        queries = random_segments(rng, 100)
+        d = 4.0
+        from repro.core.engine import brute_force
+        return db, queries, d, brute_force(db, queries, d)
+
+    def test_matches_bruteforce_o1_syncs(self, world):
+        from repro.core import batching
+        from repro.core.distributed import ShardedEngine
+        from repro.core.engine import DistanceThresholdEngine
+        db, queries, d, bf = world
+        eng = DistanceThresholdEngine(db, num_bins=64)
+        se = ShardedEngine(db, capacity_per_shard=4096)
+        plan = batching.periodic(eng.index, queries, 16)
+        rs, stats = se.execute(queries, d, plan)
+        rs = rs.sorted_canonical()
+        assert len(rs) == len(bf)
+        np.testing.assert_array_equal(rs.entry_idx, bf.entry_idx)
+        np.testing.assert_array_equal(rs.query_idx, bf.query_idx)
+        np.testing.assert_allclose(rs.t_enter, bf.t_enter, rtol=1e-4,
+                                   atol=1e-3)
+        assert stats.pipelined and stats.num_syncs <= 2
+
+    def test_overflow_retry_stays_o1(self, world):
+        from repro.core import batching
+        from repro.core.distributed import ShardedEngine
+        from repro.core.engine import DistanceThresholdEngine, brute_force
+        db, queries, _, _ = world
+        d_all = 20.0
+        bf = brute_force(db, queries, d_all)
+        eng = DistanceThresholdEngine(db, num_bins=64)
+        se = ShardedEngine(db, capacity_per_shard=256)
+        plan = batching.periodic(eng.index, queries, 64)
+        rs, stats = se.execute(queries, d_all, plan)
+        rs = rs.sorted_canonical()
+        assert len(rs) == len(bf)
+        np.testing.assert_array_equal(rs.entry_idx, bf.entry_idx)
+        assert stats.total_retries >= 1
+        assert stats.num_syncs <= 2                        # still O(1)
+
+    def test_query_beyond_database_extent_no_phantom_hits(self):
+        """Regression: shard pre-padding must place pad rows beyond the
+        QUERY extent too — a query outlasting the database must not hit
+        entry pad rows (which would index past the database).
+
+        The query below is a static point near the origin (where pad rows'
+        zero coordinates live) whose extent starts inside the database
+        range (so the batch has candidates and *is* dispatched) and ends
+        past ``db.te.max() + 1`` — the exact instant database-extent-only
+        padding would have placed the pad rows at.
+        """
+        from repro.core import batching
+        from repro.core.distributed import ShardedEngine
+        from repro.core.engine import DistanceThresholdEngine, brute_force
+        rng = np.random.default_rng(31)
+        db = random_segments(rng, 300, t_span=(0.0, 10.0))
+        half = np.full(2, 0.5, np.float32)
+        queries = SegmentArray(
+            xs=half.copy(), ys=half.copy(), zs=half.copy(),
+            xe=half.copy(), ye=half.copy(), ze=half.copy(),
+            ts=np.array([5.0, 6.0], np.float32),
+            te=np.array([float(db.te.max()) + 10.0] * 2, np.float32),
+            seg_id=np.arange(2, dtype=np.int32),
+            traj_id=np.zeros(2, np.int32))
+        d = 5.0
+        bf = brute_force(db, queries, d)
+        eng = DistanceThresholdEngine(db, num_bins=32)
+        se = ShardedEngine(db, capacity_per_shard=4096)
+        plan = batching.periodic(eng.index, queries, 2)
+        assert plan.batches[0].num_candidates > 0      # really dispatched
+        disp = se.dispatcher(queries.packed(), d)
+        assert disp._pad_e > float(queries.te.max())   # pads beyond queries
+        rs, _ = se.execute(queries, d, plan)
+        rs = rs.sorted_canonical()
+        assert np.all(rs.entry_idx < len(db))          # no phantom rows
+        assert len(rs) == len(bf)
+        np.testing.assert_array_equal(rs.entry_idx, bf.entry_idx)
+        np.testing.assert_array_equal(rs.query_idx, bf.query_idx)
+
+    def test_sync_mode_matches(self, world):
+        from repro.core import batching
+        from repro.core.distributed import ShardedEngine
+        from repro.core.engine import DistanceThresholdEngine
+        db, queries, d, bf = world
+        eng = DistanceThresholdEngine(db, num_bins=64)
+        se = ShardedEngine(db, capacity_per_shard=4096, pipeline=False)
+        plan = batching.periodic(eng.index, queries, 32)
+        rs, stats = se.execute(queries, d, plan)
+        assert not stats.pipelined
+        assert len(rs.sorted_canonical()) == len(bf)
+
+    def test_fused_probe_resolves_rowloop_when_gather_fails(self, world,
+                                                            monkeypatch):
+        """The in-jit shard step can't use ops.query_block's automatic
+        fused→rowloop fallback (lowering fails at the outer compile), so
+        ShardedEngine probes the fused path directly at construction and
+        bakes the resolved strategy in."""
+        import warnings
+        from repro.core.distributed import ShardedEngine
+        from repro.kernels import distthresh as dt
+        from repro.kernels import ops
+        db, *_ = world
+        orig = dt.distthresh_compact_pallas
+
+        def no_gather_lowering(*args, **kwargs):
+            if kwargs.get("append", "chunk") == "chunk":
+                raise RuntimeError("Mosaic lowering failed: gather")
+            return orig(*args, **kwargs)
+
+        monkeypatch.setattr(dt, "distthresh_compact_pallas",
+                            no_gather_lowering)
+        monkeypatch.setitem(ops._fused_fallback, "tripped", False)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            se = ShardedEngine(db, use_pallas=True, compaction="fused",
+                               cand_blk=16, qry_blk=16)
+        assert se.compaction == "fused_rowloop"
+
+    def test_overflow_redispatch_reuses_prepared_inputs(self, world):
+        """Overflow retries re-launch with the prepared per-pod blocks from
+        Dispatch.ctx instead of rebuilding/re-slicing them."""
+        from repro.core import batching
+        from repro.core.distributed import ShardedEngine
+        from repro.core.engine import DistanceThresholdEngine
+        db, queries, _, _ = world
+        eng = DistanceThresholdEngine(db, num_bins=64)
+        se = ShardedEngine(db, capacity_per_shard=256)
+        plan = batching.periodic(eng.index, queries, 64)
+        disp = se.dispatcher(queries.packed(), 20.0)
+        builds = []
+        orig_launch = disp._launch
+
+        def counting_launch(batch, capacity, prepared):
+            builds.append((id(prepared), capacity))
+            return orig_launch(batch, capacity, prepared)
+
+        disp._launch = counting_launch
+        from repro.core.executor import PipelinedExecutor
+        from repro.core.planner import as_query_plan
+        rs, stats = PipelinedExecutor(disp).run(
+            as_query_plan(plan, default_capacity=256))
+        assert stats.total_retries >= 1
+        # every retry reused an already-built prepared tuple (same id)
+        first_ids = {pid for pid, _ in builds}
+        assert len(first_ids) < len(builds)
+
+    def test_facade_backend_shard(self, world):
+        from repro.api import ExecutionPolicy, TrajectoryDB
+        db, queries, d, bf = world
+        tdb = TrajectoryDB.from_segments(
+            db, policy=ExecutionPolicy(num_bins=64))
+        res = tdb.query(queries, d, backend="shard")
+        base = tdb.query(queries, d, backend="jnp")
+        assert len(res) == len(base) == len(bf)
+        np.testing.assert_array_equal(res.entry_idx, base.entry_idx)
+        np.testing.assert_array_equal(res.query_idx, base.query_idx)
+        assert res.stats is not None and res.stats.num_syncs <= 2
+        # unsorted queries come back in caller order, like every backend
+        rng = np.random.default_rng(13)
+        perm = rng.permutation(len(queries))
+        got = tdb.query(queries.take(perm), d, backend="shard")
+        inv = np.empty_like(perm)
+        inv[perm] = np.arange(len(perm))
+        expect_q = inv[base.query_idx]
+        rank = np.lexsort((base.entry_idx, expect_q))
+        np.testing.assert_array_equal(got.query_idx, expect_q[rank])
+        np.testing.assert_array_equal(got.entry_idx, base.entry_idx[rank])
 
 
 _SUBPROCESS_SCRIPT = textwrap.dedent("""
@@ -78,6 +313,54 @@ def test_sharded_query_matches_bruteforce_subprocess():
                           timeout=600)
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert "DISTRIBUTED_OK" in proc.stdout
+
+
+_SHARD_BACKEND_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax
+    assert jax.device_count() == 8
+    from repro.api import BACKENDS, ExecutionPolicy, TrajectoryDB
+
+    policy = ExecutionPolicy(batching="periodic", batch_params={"s": 32},
+                             num_bins=200)
+    db = TrajectoryDB.from_scenario("S2", scale=0.01, policy=policy)
+    queries, d = db.scenario_queries, db.scenario_d
+    assert db.backend("shard").engine.ways == 8
+
+    results = {name: db.query(queries, d, backend=name) for name in BACKENDS}
+    base = results["jnp"]
+    assert len(base) > 0
+    for name, res in results.items():
+        assert len(res) == len(base), (name, len(res), len(base))
+        np.testing.assert_array_equal(res.entry_idx, base.entry_idx, err_msg=name)
+        np.testing.assert_array_equal(res.query_idx, base.query_idx, err_msg=name)
+        np.testing.assert_allclose(res.t_enter, base.t_enter, rtol=1e-4,
+                                   atol=1e-3, err_msg=name)
+    st = results["shard"].stats
+    assert st.pipelined and st.num_syncs <= 2, (st.num_syncs, st.pipelined)
+    # cross-pod halo dedup: no (entry, query) pair appears twice
+    pairs = list(zip(results["shard"].entry_idx.tolist(),
+                     results["shard"].query_idx.tolist()))
+    assert len(pairs) == len(set(pairs))
+    print("SHARD_BACKEND_OK", len(base), st.num_syncs)
+""")
+
+
+@pytest.mark.slow
+def test_five_backend_equivalence_on_8_device_mesh_subprocess():
+    """Acceptance: backend="shard" on an 8-device host mesh returns the
+    identical canonical result set as the other four backends, with
+    <= 2 host syncs per query set and no cross-pod duplicates."""
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _SHARD_BACKEND_SCRIPT],
+                          capture_output=True, text=True, env=env,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "SHARD_BACKEND_OK" in proc.stdout
 
 
 _ELASTIC_SCRIPT = textwrap.dedent("""

@@ -172,6 +172,82 @@ class TestPipelinedExecutor:
         assert len(rs) == 0 and stats.num_invocations == 0
 
 
+class TestPlannerExecutorSplit:
+    """PR 3: planning (capacities, dispatch groups) is a separate layer the
+    engine consumes — and grouped plans pipeline with bounded syncs."""
+
+    def test_planner_capacity_formula_matches_engine_default(self, world):
+        from repro.core.planner import (QueryPlanner, as_query_plan,
+                                        bucket_capacity, size_capacity)
+        db, queries, d, _ = world
+        eng = DistanceThresholdEngine(db, num_bins=128, default_capacity=512)
+        planner = QueryPlanner(eng.index, algorithm="periodic",
+                               params={"s": 32}, default_capacity=512)
+        qplan = planner.plan(queries)
+        assert qplan.algorithm == "periodic" and qplan.params == {"s": 32}
+        assert len(qplan.capacities) == qplan.num_batches
+        for b, cap in zip(qplan.batches, qplan.capacities):
+            assert cap == size_capacity(b, 512)
+            assert cap == bucket_capacity(min(512, b.num_candidates * b.size))
+        # single group by default — the O(1)-sync shape
+        assert qplan.groups == [list(range(qplan.num_batches))]
+        # legacy BatchPlan coerces to the same capacities
+        legacy = batching.periodic(eng.index, queries, 32)
+        coerced = as_query_plan(legacy, default_capacity=512)
+        assert coerced.capacities == qplan.capacities
+
+    def test_unknown_algorithm_raises(self, world):
+        from repro.core.planner import QueryPlanner
+        db, queries, _, _ = world
+        eng = DistanceThresholdEngine(db, num_bins=128)
+        with pytest.raises(ValueError, match="unknown batching"):
+            QueryPlanner(eng.index, algorithm="nope")
+
+    @pytest.mark.parametrize("group_size", [1, 3, None])
+    def test_grouped_plan_same_results_bounded_syncs(self, world, group_size):
+        from repro.core.planner import QueryPlanner
+        db, queries, d, bf = world
+        eng = DistanceThresholdEngine(db, num_bins=128)
+        planner = QueryPlanner(eng.index, algorithm="periodic",
+                               params={"s": 16}, group_size=group_size)
+        qplan = planner.plan(queries)
+        if group_size is None:
+            assert qplan.num_groups == 1
+        else:
+            import math
+            assert qplan.num_groups == math.ceil(qplan.num_batches
+                                                 / group_size)
+        rs, stats = eng.execute(queries, d, qplan, pipeline=True)
+        _check_equal(rs, bf)
+        assert stats.pipelined
+        assert stats.num_groups == qplan.num_groups
+        # <= 2 syncs per dispatch group, exactly 2 only on overflow retries
+        assert stats.num_syncs <= 2 * qplan.num_groups
+
+    def test_subplan_is_single_group(self, world):
+        from repro.core.planner import QueryPlanner
+        db, queries, d, _ = world
+        eng = DistanceThresholdEngine(db, num_bins=128)
+        planner = QueryPlanner(eng.index, algorithm="periodic",
+                               params={"s": 16}, group_size=2)
+        qplan = planner.plan(queries)
+        sub = qplan.subplan([1, 2])
+        assert sub.num_batches == 2 and sub.num_groups == 1
+        assert sub.batches[0] is qplan.batches[1]
+        assert sub.capacities == qplan.capacities[1:3]
+        rs, stats = eng.execute(queries, d, sub)
+        assert stats.num_syncs <= 2
+
+    def test_executor_protocol_dispatcher(self, world):
+        """The engine's dispatcher satisfies the executor protocol — the
+        seam the sharded backend implements too."""
+        from repro.core.executor import BatchDispatcher
+        db, queries, d, _ = world
+        eng = DistanceThresholdEngine(db, num_bins=128)
+        disp = eng.dispatcher(queries.packed(), d)
+        assert isinstance(disp, BatchDispatcher)
+
+
 class TestBucket:
     def test_bucket_edge_cases(self):
         from repro.core.engine import _bucket

@@ -1,4 +1,6 @@
 """Per-kernel allclose sweeps: Pallas kernels vs pure-jnp oracles."""
+import warnings
+
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings
@@ -174,6 +176,110 @@ class TestFusedCompaction:
                             compaction="atomic")
 
 
+class TestRowloopEscapeHatch:
+    """The gather-free per-row ``pl.ds`` append variant: identical results
+    *and identical order* to the chunked fused kernel, plus the one-time
+    automatic fallback when the gather path fails to lower."""
+
+    @pytest.mark.parametrize("c,q,cblk,qblk", [
+        (16, 16, 16, 16),      # single tile
+        (40, 24, 16, 8),       # multi-tile + row padding both axes
+        (8, 64, 8, 16),        # query-tile streaming
+    ])
+    def test_rowloop_matches_fused_order_exact(self, c, q, cblk, qblk):
+        rng = np.random.default_rng(c * 31 + q)
+        entries = random_segments(rng, c).packed()
+        queries = random_segments(rng, q).packed()
+        d = np.float32(15.0)
+        fused = ops.query_block(entries, queries, d, capacity=4096,
+                                use_pallas=True, compaction="fused",
+                                cand_blk=cblk, qry_blk=qblk)
+        rowl = ops.query_block(entries, queries, d, capacity=4096,
+                               use_pallas=True, compaction="fused_rowloop",
+                               cand_blk=cblk, qry_blk=qblk)
+        n = int(fused["count"])
+        assert int(rowl["count"]) == n > 0
+        # same deterministic order, not just the same set
+        np.testing.assert_array_equal(np.asarray(rowl["entry_idx"][:n]),
+                                      np.asarray(fused["entry_idx"][:n]))
+        np.testing.assert_array_equal(np.asarray(rowl["query_idx"][:n]),
+                                      np.asarray(fused["query_idx"][:n]))
+        np.testing.assert_allclose(np.asarray(rowl["t_enter"][:n]),
+                                   np.asarray(fused["t_enter"][:n]),
+                                   rtol=1e-4, atol=1e-3)
+        assert np.all(np.asarray(rowl["entry_idx"][n:]) == -1)
+
+    def test_rowloop_overflow_exact_count(self):
+        rng = np.random.default_rng(17)
+        entries = random_segments(rng, 48).packed()
+        queries = random_segments(rng, 32).packed()
+        d = np.float32(50.0)                       # everything hits
+        truth = int(np.asarray(ref.count_hits(entries, queries, d)))
+        out = ops.query_block(entries, queries, d, capacity=16,
+                              use_pallas=True, compaction="fused_rowloop",
+                              cand_blk=16, qry_blk=16)
+        assert int(out["count"]) == truth > 16
+        # the capacity prefix is still a valid (deterministic) hit prefix
+        assert np.all(np.asarray(out["entry_idx"][:16]) >= 0)
+
+    def test_fused_falls_back_to_rowloop_with_one_warning(self, monkeypatch):
+        """If the gather-path kernel fails to lower, compaction="fused"
+        warns once and reroutes through the rowloop kernel — but only when
+        the rowloop variant actually works (other errors re-raise)."""
+        from repro.kernels import distthresh as dt
+        orig = dt.distthresh_compact_pallas
+
+        def no_gather_lowering(*args, **kwargs):
+            if kwargs.get("append", "chunk") == "chunk":
+                raise RuntimeError("Mosaic lowering failed: gather")
+            return orig(*args, **kwargs)
+
+        monkeypatch.setattr(dt, "distthresh_compact_pallas",
+                            no_gather_lowering)
+        monkeypatch.setitem(ops._fused_fallback, "tripped", False)
+        rng = np.random.default_rng(23)
+        # Unseen shapes, so the monkeypatched callable is actually traced.
+        entries = random_segments(rng, 72).packed()
+        queries = random_segments(rng, 24).packed()
+        d = np.float32(15.0)
+        dense = ops.query_block(entries, queries, d, capacity=1024,
+                                use_pallas=True, compaction="dense",
+                                cand_blk=8, qry_blk=8)
+        with pytest.warns(RuntimeWarning, match="fused_rowloop"):
+            out = ops.query_block(entries, queries, d, capacity=1024,
+                                  use_pallas=True, compaction="fused",
+                                  cand_blk=8, qry_blk=8)
+        assert ops._fused_fallback["tripped"]
+        n = int(out["count"])
+        assert n == int(dense["count"]) > 0
+        # second call routes silently (one-time warning)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            out2 = ops.query_block(entries, queries, d, capacity=1024,
+                                   use_pallas=True, compaction="fused",
+                                   cand_blk=8, qry_blk=8)
+        assert int(out2["count"]) == n
+
+    def test_non_lowering_errors_reraise_untripped(self, monkeypatch):
+        """An error that also breaks the rowloop variant is a real bug: it
+        propagates unchanged and does NOT trip the global fallback."""
+        from repro.kernels import distthresh as dt
+
+        def broken(*args, **kwargs):
+            raise RuntimeError("everything is broken")
+
+        monkeypatch.setattr(dt, "distthresh_compact_pallas", broken)
+        monkeypatch.setitem(ops._fused_fallback, "tripped", False)
+        rng = np.random.default_rng(29)
+        entries = random_segments(rng, 56).packed()
+        queries = random_segments(rng, 40).packed()
+        with pytest.raises(RuntimeError, match="everything is broken"):
+            ops.query_block(entries, queries, np.float32(2.0), capacity=256,
+                            use_pallas=True, compaction="fused",
+                            cand_blk=8, qry_blk=8)
+        assert not ops._fused_fallback["tripped"]
+
+
 class TestEmptyInputGuards:
     """Zero-row entries/queries are reachable by direct kernel users; the
     pad-time computation (jnp.max over temporal extents) must not see
@@ -190,7 +296,8 @@ class TestEmptyInputGuards:
         assert te.shape == tx.shape == hit.shape == (c, q)
         assert not np.asarray(hit).any()
 
-    @pytest.mark.parametrize("compaction", ["fused", "dense"])
+    @pytest.mark.parametrize("compaction", ["fused", "fused_rowloop",
+                                            "dense"])
     def test_query_block_empty(self, compaction):
         entries = np.zeros((0, 8), np.float32)
         rng = np.random.default_rng(4)

@@ -59,6 +59,84 @@ def test_straggler_reissued_and_results_exact(world):
     assert stats.completed == plan.num_batches
 
 
+def test_batch_groups_formed_and_counted(world):
+    """Satellite: each worker call carries a *group* of >= 2 batches by
+    default; SchedulerStats counts groups and per-call sizes."""
+    db, queries, d, bf = world
+    eng = DistanceThresholdEngine(db, num_bins=64)
+    plan = batching.periodic(eng.index, queries, 8)      # 12 batches
+    assert plan.num_batches >= 4
+    eng.execute(queries, d, plan)                         # warm jit
+    sched = DeadlineScheduler(eng, workers=2, min_deadline=5.0)
+    rs, stats = sched.execute(queries, d, plan)
+    rs = rs.sorted_canonical()
+    np.testing.assert_array_equal(rs.entry_idx, bf.entry_idx)
+    assert stats.completed == plan.num_batches
+    assert 1 <= stats.groups < plan.num_batches           # grouped
+    assert stats.group_sizes == [len(g) for g in
+                                 sched.groups(plan.num_batches)]
+    assert max(stats.group_sizes) >= 2
+    assert stats.batches_per_call >= 2 or plan.num_batches < 2
+
+
+def test_auto_groups_fold_lone_remainder(world):
+    """Regression: auto-sized groups never dispatch a worker call with a
+    single trailing batch — the remainder folds into the previous group."""
+    db, *_ = world
+    eng = DistanceThresholdEngine(db, num_bins=64)
+    sched = DeadlineScheduler(eng, workers=2)
+    assert sched.groups(3) == [[0, 1, 2]]              # [2]+[1] folded
+    assert sched.groups(5) == [[0, 1], [2, 3, 4]]
+    for n in range(2, 40):
+        assert all(len(g) >= 2 for g in sched.groups(n)), n
+    assert sched.groups(1) == [[0]]                    # nothing to fold
+    # explicit group_size is honored as given, remainder included
+    assert DeadlineScheduler(eng, group_size=2).groups(5) == [
+        [0, 1], [2, 3], [4]]
+
+
+def test_explicit_group_size_and_single_batch_plan(world):
+    db, queries, d, bf = world
+    eng = DistanceThresholdEngine(db, num_bins=64)
+    plan = batching.periodic(eng.index, queries, 16)      # 6 batches
+    sched = DeadlineScheduler(eng, workers=2, min_deadline=5.0,
+                              group_size=3)
+    assert [len(g) for g in sched.groups(plan.num_batches)] == [3, 3]
+    rs, stats = sched.execute(queries, d, plan)
+    assert stats.groups == 2 and stats.group_sizes == [3, 3]
+    assert len(rs.sorted_canonical()) == len(bf)
+    # a one-batch plan still works (group of 1)
+    plan1 = batching.periodic(eng.index, queries, len(queries))
+    rs1, stats1 = DeadlineScheduler(eng, workers=1, min_deadline=5.0
+                                    ).execute(queries, d, plan1)
+    assert stats1.groups == 1 and stats1.completed == 1
+    assert len(rs1.sorted_canonical()) == len(bf)
+
+
+def test_straggler_group_reissued_idempotent(world):
+    """A whole *group* stalls past its deadline: the group is re-issued,
+    results stay exact (re-execution is idempotent), and the straggler's
+    late completion is dropped as a duplicate group."""
+    db, queries, d, bf = world
+    eng = DistanceThresholdEngine(db, num_bins=64)
+    plan = batching.periodic(eng.index, queries, 8)
+    eng.execute(queries, d, plan)                         # warm jit
+
+    def delay(group_idx, attempt):
+        if group_idx == 0 and attempt == 0:
+            time.sleep(1.0)                               # straggling group
+
+    sched = DeadlineScheduler(eng, workers=2, min_deadline=0.2,
+                              delay_hook=delay, group_size=2)
+    rs, stats = sched.execute(queries, d, plan)
+    rs = rs.sorted_canonical()
+    assert len(rs) == len(bf)
+    np.testing.assert_array_equal(rs.entry_idx, bf.entry_idx)
+    np.testing.assert_array_equal(rs.query_idx, bf.query_idx)
+    assert stats.reissued >= 1
+    assert stats.completed == plan.num_batches
+
+
 def test_model_driven_deadlines(world):
     """Deadlines derived from the §8 model's per-batch prediction."""
     db, queries, d, bf = world
