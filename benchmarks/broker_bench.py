@@ -1,0 +1,211 @@
+"""PR 4 serving benchmark: QueryBroker vs the drain() baseline.
+
+Three sections feed ``BENCH_PR4.json`` (written by ``benchmarks/run.py
+--only bench_pr4``; compared back-to-back against ``BENCH_PR3.json``):
+
+* ``broker``        — a stream of query-set requests served three ways on
+                      the same S2 scenario: sequential ``db.query`` calls
+                      (the sync floor), the deprecated
+                      ``TrajectoryQueryService.drain()`` shell, and the
+                      ``QueryBroker`` pump.  Each row reports total wall,
+                      interactions/sec, and the per-request latency
+                      distribution (mean/p95/max) — the broker addition-
+                      ally reports time-to-first-slice, the metric the
+                      incremental API exists for.
+* ``broker_sharded`` — the broker over ``backend="shard"`` with the pod
+                      partition balanced by time vs by ``num_ints``:
+                      per-pod routing stats (mean pods per batch, hit
+                      balance) plus wall time.
+* ``executor``      — the BENCH_PR2/PR3 S2 executor rows re-run on this
+                      tree (regressable 1:1 against ``BENCH_PR3.json``).
+
+Run directly::
+
+    PYTHONPATH=src python -m benchmarks.broker_bench [--quick] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+import warnings
+
+import numpy as np
+
+from benchmarks import kernel_bench
+
+
+def _latency_stats(latencies: list[float]) -> dict:
+    arr = np.asarray(latencies, float)
+    return {"mean": float(arr.mean()), "p95": float(np.percentile(arr, 95)),
+            "max": float(arr.max())}
+
+
+def _make_world(scale: float, s: int):
+    from repro.api import ExecutionPolicy, TrajectoryDB
+    policy = ExecutionPolicy(batching="periodic", batch_params={"s": s},
+                             num_bins=500)
+    db = TrajectoryDB.from_scenario("S2", scale=scale, policy=policy)
+    return db, db.scenario_queries, db.scenario_d
+
+
+def run_broker(scale: float = 0.01, s: int = 32, num_requests: int = 4,
+               repeats: int = 2, group_size: int = 2) -> list[dict]:
+    """Serve ``num_requests`` copies of the S2 workload three ways."""
+    db, queries, d = _make_world(scale, s)
+    ints = db.plan(queries).total_interactions * num_requests
+    db.query(queries, d, backend="jnp")                   # warm jit
+    rows = []
+
+    def measure(fn):
+        runs = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            latencies, extra = fn()
+            runs.append((time.perf_counter() - t0, latencies, extra))
+        return min(runs, key=lambda r: r[0])
+
+    # -- sequential sync queries (the latency floor, no batch overlap) ---
+    def sync_mode():
+        latencies = []
+        for _ in range(num_requests):
+            t0 = time.perf_counter()
+            db.query(queries, d, backend="jnp")
+            latencies.append(time.perf_counter() - t0)
+        return latencies, {}
+
+    # -- deprecated drain() shell (per-request scheduler streams) --------
+    def drain_mode():
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            from repro.serve import TrajectoryQueryService
+            svc = TrajectoryQueryService(db, backend="jnp")
+        for _ in range(num_requests):
+            svc.submit(queries, d)
+        responses = svc.drain()
+        return [r.latency_seconds for r in responses.values()], {}
+
+    # -- the broker pump -------------------------------------------------
+    def broker_mode():
+        broker = db.broker(backend="jnp")
+        t_sub = time.perf_counter()
+        first_slice: dict[int, float] = {}
+        done_at: dict[int, float] = {}
+
+        def on_slice(tk, sl):
+            now = time.perf_counter()
+            first_slice.setdefault(tk.uid, now - t_sub)
+            if sl.group_index + 1 == sl.num_groups:
+                done_at[tk.uid] = now
+        tickets = [broker.submit(queries, d, group_size=group_size,
+                                 on_slice=on_slice)
+                   for _ in range(num_requests)]
+        broker.run_until_idle()
+        latencies = [done_at[t.uid] - t_sub for t in tickets]
+        return latencies, {
+            "first_slice_seconds": float(np.mean(list(first_slice.values()))),
+            "groups_per_ticket": tickets[0].num_groups,
+        }
+
+    for mode, fn in (("query_sync", sync_mode), ("service_drain", drain_mode),
+                     ("broker", broker_mode)):
+        sec, latencies, extra = measure(fn)
+        rows.append({
+            "bench": "broker", "scenario": "S2", "scale": scale,
+            "mode": mode, "num_requests": num_requests,
+            "total_seconds": sec, "interactions_per_s": ints / sec,
+            "latency": _latency_stats(latencies), **extra,
+        })
+    return rows
+
+
+def run_broker_sharded(scale: float = 0.01, s: int = 32,
+                       repeats: int = 2, group_size: int = 2) -> list[dict]:
+    """Broker tickets over ``backend="shard"`` — per-pod routing stats for
+    both pod-partition balances."""
+    import jax
+    db, queries, d = _make_world(scale, s)
+    ints = db.plan(queries).total_interactions
+    rows = []
+    for balance in ("time", "num_ints"):
+        pol = db.policy.with_(shard_balance=balance)
+        broker = db.broker(backend="shard", policy=pol)
+        broker.submit(queries, d, group_size=group_size).result()  # warm jit
+        runs = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            ticket = broker.submit(queries, d, group_size=group_size)
+            ticket.result()
+            runs.append((time.perf_counter() - t0, ticket))
+        sec, ticket = min(runs, key=lambda r: r[0])
+        rt = ticket.routing
+        rows.append({
+            "bench": "broker_sharded", "scenario": "S2", "scale": scale,
+            "pods": len(jax.devices()), "balance": balance,
+            "group_size": group_size, "total_seconds": sec,
+            "interactions_per_s": ints / sec,
+            "num_groups": ticket.num_groups,
+            "mean_pods_per_batch": rt.mean_pods_per_batch,
+            "pod_hit_balance": rt.hit_balance,
+            "syncs_per_group": max(sl.num_syncs for sl in ticket.slices()),
+        })
+    return rows
+
+
+def canonical_report_pr4(*, quick: bool = False) -> dict:
+    """The BENCH_PR4 payload: S2 executor rows re-run on this tree
+    (regressable 1:1 against ``BENCH_PR3.json``) plus the broker and
+    sharded-routing sections."""
+    scale = 0.005 if quick else 0.01
+    repeats = 1 if quick else 3
+    return {"bench": "BENCH_PR4", "scenario": "S2", "scale": scale,
+            "quick": quick, "baseline": "BENCH_PR3.json",
+            "executor": kernel_bench.run_executor(scale=scale,
+                                                  repeats=repeats),
+            "broker": run_broker(scale=scale, repeats=repeats,
+                                 num_requests=2 if quick else 4),
+            "broker_sharded": run_broker_sharded(scale=scale,
+                                                 repeats=repeats)}
+
+
+def print_broker_rows(rows: list[dict]) -> None:
+    for r in rows:
+        lat = r["latency"]
+        extra = (f",first_slice_s={r['first_slice_seconds']:.3f}"
+                 if "first_slice_seconds" in r else "")
+        print(f"broker,{r['mode']},requests={r['num_requests']},"
+              f"total_s={r['total_seconds']:.3f},"
+              f"lat_mean_s={lat['mean']:.3f},lat_p95_s={lat['p95']:.3f},"
+              f"Minter_per_s={r['interactions_per_s'] / 1e6:.1f}{extra}")
+
+
+def print_broker_sharded_rows(rows: list[dict]) -> None:
+    for r in rows:
+        print(f"broker_sharded,balance={r['balance']},pods={r['pods']},"
+              f"groups={r['num_groups']},total_s={r['total_seconds']:.3f},"
+              f"pods_per_batch={r['mean_pods_per_batch']:.1f},"
+              f"hit_balance={r['pod_hit_balance']:.2f},"
+              f"syncs_per_group={r['syncs_per_group']}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizes (seconds, not minutes)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the canonical BENCH_PR4 report to PATH")
+    args = ap.parse_args(argv)
+    report = canonical_report_pr4(quick=args.quick)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# wrote {args.json}")
+    kernel_bench.print_executor_rows(report["executor"])
+    print_broker_rows(report["broker"])
+    print_broker_sharded_rows(report["broker_sharded"])
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -203,9 +203,14 @@ def canonical_report_pr3(*, quick: bool = False) -> dict:
                                                      repeats=repeats)}
 
 
-def compare_executor_sections(pr3: dict, pr2: dict) -> list[str]:
-    """Per-combo interactions/sec ratio of PR 3's S2 executor rows vs the
-    PR 2 baseline (same scenario/scale keys only).  > 1.0 means faster."""
+def compare_executor_sections(pr3: dict, pr2: dict,
+                              label: str | None = None) -> list[str]:
+    """Per-combo interactions/sec ratio of a report's S2 executor rows vs a
+    baseline report (same scenario/scale keys only).  > 1.0 means faster.
+    ``label`` defaults to ``executor_vs_<baseline bench name>``."""
+    if label is None:
+        suffix = pr2.get("bench", "baseline").replace("BENCH_", "").lower()
+        label = f"executor_vs_{suffix}"
     if pr2.get("scale") != pr3.get("scale"):
         return [f"# baseline scale {pr2.get('scale')} != {pr3.get('scale')}"
                 " — no comparison"]
@@ -218,7 +223,7 @@ def compare_executor_sections(pr3: dict, pr2: dict) -> list[str]:
             continue
         ratio = r["interactions_per_s"] / base[key]
         lines.append(
-            f"executor_vs_pr2,{key[0]},compaction={key[1]},"
+            f"{label},{key[0]},compaction={key[1]},"
             f"pipeline={key[2]},ratio={ratio:.2f}")
     return lines
 

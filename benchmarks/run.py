@@ -19,11 +19,19 @@ rows re-run on this tree plus the PR 3 sharded-executor section
 (``backend="shard"`` sync / pipelined / grouped dispatch), and prints the
 per-combo interactions/sec ratio against the ``BENCH_PR2.json`` baseline
 when that file is present.
+
+The ``bench_pr4`` entry writes ``BENCH_PR4.json`` (see
+``benchmarks.broker_bench``): the S2 executor rows again (ratioed against
+``BENCH_PR3.json``), the serving comparison (sequential ``db.query`` vs
+``TrajectoryQueryService.drain()`` vs the ``QueryBroker`` pump, with
+per-request latency distributions and time-to-first-slice) and the
+sharded-routing section (pod-partition balance time vs num_ints).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
@@ -37,13 +45,17 @@ def main(argv=None) -> int:
                     help="path for the canonical bench_pr2 JSON report")
     ap.add_argument("--bench-out3", default="BENCH_PR3.json",
                     help="path for the bench_pr3 JSON report")
+    ap.add_argument("--bench-out4", default="BENCH_PR4.json",
+                    help="path for the bench_pr4 JSON report")
     ap.add_argument("--baseline", default="BENCH_PR2.json",
                     help="baseline report bench_pr3 compares against")
+    ap.add_argument("--baseline4", default="BENCH_PR3.json",
+                    help="baseline report bench_pr4 compares against")
     args = ap.parse_args(argv)
 
-    from benchmarks import (fig3_interactions, kernel_bench, roofline_report,
-                            speedup_vs_rtree, table2_batching,
-                            table3_perfmodel)
+    from benchmarks import (broker_bench, fig3_interactions, kernel_bench,
+                            roofline_report, speedup_vs_rtree,
+                            table2_batching, table3_perfmodel)
 
     def bench_pr2():
         report = kernel_bench.canonical_report(quick=not args.full)
@@ -54,7 +66,6 @@ def main(argv=None) -> int:
         print(f"# bench_pr2 report -> {args.bench_out}")
 
     def bench_pr3():
-        import os
         report = kernel_bench.canonical_report_pr3(quick=not args.full)
         with open(args.bench_out3, "w") as f:
             json.dump(report, f, indent=2)
@@ -70,6 +81,23 @@ def main(argv=None) -> int:
             print(f"# baseline {args.baseline} not found — no comparison")
         print(f"# bench_pr3 report -> {args.bench_out3}")
 
+    def bench_pr4():
+        report = broker_bench.canonical_report_pr4(quick=not args.full)
+        with open(args.bench_out4, "w") as f:
+            json.dump(report, f, indent=2)
+        kernel_bench.print_executor_rows(report["executor"])
+        broker_bench.print_broker_rows(report["broker"])
+        broker_bench.print_broker_sharded_rows(report["broker_sharded"])
+        if os.path.exists(args.baseline4):
+            with open(args.baseline4) as f:
+                baseline = json.load(f)
+            for line in kernel_bench.compare_executor_sections(report,
+                                                               baseline):
+                print(line)
+        else:
+            print(f"# baseline {args.baseline4} not found — no comparison")
+        print(f"# bench_pr4 report -> {args.bench_out4}")
+
     benches = {
         "fig3": lambda: fig3_interactions.main(),
         "table2": lambda: table2_batching.main(),
@@ -80,6 +108,7 @@ def main(argv=None) -> int:
             kernel_bench.run(repeats=3 if args.full else 1)),
         "bench_pr2": bench_pr2,
         "bench_pr3": bench_pr3,
+        "bench_pr4": bench_pr4,
         "roofline": lambda: roofline_report.main(),
     }
     only = set(args.only.split(",")) if args.only else None

@@ -12,7 +12,8 @@ from __future__ import annotations
 __version__ = "0.1.0"
 
 _API_NAMES = ("TrajectoryDB", "ExecutionPolicy", "QueryResult",
-              "QueryBackend", "BACKENDS")
+              "QueryBackend", "BACKENDS", "QueryBroker", "QueryTicket",
+              "GroupSlice", "AdmissionError", "DeadlineExceededError")
 
 
 def __getattr__(name: str):

@@ -26,8 +26,8 @@ preconditions (pre-sorted queries, manual plan construction, reaching into
   search-and-refine CPU baseline), ``"brute"`` (the all-pairs oracle) and
   ``"shard"`` (the temporal-pod mesh backend from ``repro.core.
   distributed`` — the paper's §1 multi-node partitioning, with the same
-  ≤ 2-host-syncs-per-query-set pipelined dispatch as the single-device
-  engine).  All five return identical canonical result sets.
+  ≤ 2-host-syncs-per-dispatch-group pipelined dispatch as the
+  single-device engine).  All five return identical canonical result sets.
 * Planning and execution are split (PR 3): the facade's
   :class:`~repro.core.planner.QueryPlanner` turns a policy + query set into
   a ``QueryPlan`` (batches, capacities, dispatch groups) that every
@@ -36,8 +36,14 @@ preconditions (pre-sorted queries, manual plan construction, reaching into
 * Tuning knobs live in one :class:`ExecutionPolicy` value object instead of
   being scattered across constructors and free functions.
 * ``db.query_stream(...)`` routes execution through the deadline/re-issue
-  scheduler (``repro.core.scheduler``) — the serving layer's
-  trajectory-native entry point.
+  scheduler (``repro.core.scheduler``), for every engine backend — since
+  PR 4 ``backend="shard"`` streams through the per-pod routing layer.
+* ``db.broker(...)`` returns the session-oriented serving front door
+  (``repro.serve.broker.QueryBroker``): ticketed async submit, a
+  ``step()`` pump executing one dispatch group at a time, incremental
+  per-group result slices, §8-model admission control and per-pod shard
+  routing.  ``QueryBroker`` / ``QueryTicket`` / ``GroupSlice`` /
+  ``AdmissionError`` / ``DeadlineExceededError`` are re-exported here.
 
 Quick example::
 
@@ -117,6 +123,7 @@ class ExecutionPolicy:
     shard_pods: int | None = None         # None → every local device
     shard_capacity: int = 4096            # result slots per pod per batch
     shard_use_pallas: bool = False        # Pallas kernels inside shard_map
+    shard_balance: str = "time"           # pod partition: "time" | "num_ints"
 
     # -- R-tree baseline ------------------------------------------------
     rtree_r: int = 12                     # segments per leaf MBB (Fig. 5)
@@ -302,7 +309,9 @@ class ShardBackend:
     (``repro.core.distributed.ShardedEngine``) — the paper's §1 multi-node
     partitioning as a first-class ``backend="shard"``.  Shares the
     facade's sorted segments; runs through the same pipelined executor as
-    the single-device engine (≤ 2 host syncs per query set)."""
+    the single-device engine (≤ 2 host syncs per dispatch group — one
+    group per query set unless the §8-model group derivation splits a
+    high-hit-volume plan)."""
 
     name = "shard"
     needs_plan = True
@@ -397,8 +406,8 @@ class TrajectoryDB:
             # share one (expensively constructed) mesh engine.
             compaction = pol.compaction if pol.shard_use_pallas else "dense"
             return (pol.shard_pods, pol.shard_capacity, pol.shard_use_pallas,
-                    pol.interpret, pol.cand_blk, pol.qry_blk, compaction,
-                    pol.pipeline)
+                    pol.shard_balance, pol.interpret, pol.cand_blk,
+                    pol.qry_blk, compaction, pol.pipeline)
         if name == "rtree":
             return (pol.rtree_r, pol.rtree_fanout, pol.rtree_threads)
         return (pol.brute_chunk,)
@@ -432,7 +441,8 @@ class TrajectoryDB:
                     capacity_per_shard=pol.shard_capacity,
                     use_pallas=pol.shard_use_pallas, interpret=pol.interpret,
                     cand_blk=pol.cand_blk, qry_blk=pol.qry_blk,
-                    compaction=compaction, pipeline=pol.pipeline))
+                    compaction=compaction, pipeline=pol.pipeline,
+                    balance=pol.shard_balance))
             elif name == "rtree":
                 self._backends[key] = RTreeBackend(
                     RTreeEngine(self.segments, r=pol.rtree_r,
@@ -559,15 +569,17 @@ class TrajectoryDB:
         deadlines (§8-model-derived, summed over the group) all operate on
         groups; see ``repro.core.scheduler``.
 
-        Only single-device engine backends can stream (``'pallas'`` /
-        ``'jnp'`` — the scheduler's worker pool re-executes sub-plans on
-        one engine; a per-pod scheduler over ``'shard'`` is the next
-        serving layer up).
+        Engine backends stream: ``'pallas'`` / ``'jnp'`` re-execute
+        sub-plans on the single-device engine, and since PR 4 ``'shard'``
+        routes every group through a per-pod routing layer
+        (``repro.core.distributed.PodRouter``) over the temporal-pod mesh —
+        ``SchedulerStats.routing`` then carries the per-pod fan-out and
+        hit-balance accounting.
         """
-        if backend not in ("pallas", "jnp"):
+        if backend not in ENGINE_BACKENDS:
             raise ValueError(
-                f"query_stream requires a single-device engine backend "
-                f"('pallas'/'jnp'), got {backend!r}")
+                f"query_stream requires an engine backend "
+                f"{ENGINE_BACKENDS}, got {backend!r}")
         if len(queries) == 0:
             return (QueryResult.from_result_set(
                 ResultSet.empty(), order=None, d=float(d), backend=backend),
@@ -575,10 +587,15 @@ class TrajectoryDB:
         pol = self._resolve_policy(batching, policy, batch_params,
                                    compaction, pipeline)
         be = self.backend(backend, pol)
+        if backend == "shard":
+            from repro.core.distributed import PodRouter
+            engine = PodRouter(be.engine)
+        else:
+            engine = be.engine
         qs, order = self._sorted(queries)
         plan = self._make_plan(qs, pol, backend)
         sched = DeadlineScheduler(
-            be.engine, workers=pol.stream_workers, slack=pol.stream_slack,
+            engine, workers=pol.stream_workers, slack=pol.stream_slack,
             min_deadline=pol.stream_min_deadline,
             predict_seconds=predict_seconds, delay_hook=delay_hook,
             group_size=pol.stream_group_size)
@@ -588,8 +605,36 @@ class TrajectoryDB:
         return result, sstats
 
 
+    # -- session-oriented serving ----------------------------------------
+    def broker(self, *, backend: str = "jnp",
+               policy: ExecutionPolicy | None = None, **kwargs):
+        """A :class:`repro.serve.broker.QueryBroker` bound to this database
+        — the session-oriented serving front door: ``submit()`` returns a
+        ticketed future-like handle, ``step()``/``run_until_idle()`` pump
+        pending work one dispatch group at a time with incremental
+        per-group result slices, admission control prices tickets with the
+        §8 perf model, and ``backend="shard"`` fans groups out per pod.
+        Keyword arguments are forwarded to the broker constructor
+        (``predict_seconds=``, ``max_inflight_interactions=``, ...).
+        """
+        from repro.serve.broker import QueryBroker
+        return QueryBroker(self, backend=backend, policy=policy, **kwargs)
+
+
+def __getattr__(name: str):
+    # Broker types are re-exported here (the facade is the stable surface)
+    # but defined in repro.serve.broker, which imports this module — the
+    # lazy hook breaks the cycle.
+    if name in ("QueryBroker", "QueryTicket", "GroupSlice",
+                "AdmissionError", "DeadlineExceededError"):
+        from repro.serve import broker as _broker
+        return getattr(_broker, name)
+    raise AttributeError(f"module 'repro.api' has no attribute {name!r}")
+
+
 __all__ = [
     "BACKENDS", "DEFAULT_BATCH_SIZE", "ENGINE_BACKENDS", "ExecutionPolicy",
     "QueryBackend", "QueryResult", "TrajectoryDB", "EngineBackend",
-    "RTreeBackend", "BruteBackend", "ShardBackend",
+    "RTreeBackend", "BruteBackend", "ShardBackend", "QueryBroker",
+    "QueryTicket", "GroupSlice", "AdmissionError", "DeadlineExceededError",
 ]

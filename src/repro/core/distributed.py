@@ -34,7 +34,9 @@ registers it as ``backend="shard"`` (``repro.api``).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import threading
 from typing import Sequence
 
 import jax
@@ -58,45 +60,85 @@ else:  # pragma: no cover - depends on installed jax
 # ----------------------------------------------------------------------
 # temporal pod partition (paper's multi-node suggestion)
 # ----------------------------------------------------------------------
+#: Accepted ``temporal_pod_partition(balance=...)`` strategies.
+POD_BALANCES = ("time", "num_ints")
+
+
 def temporal_pod_partition(db: SegmentArray, num_pods: int, *,
-                           halo: bool = False) -> list[tuple[int, int]]:
+                           halo: bool = False,
+                           balance: str = "time") -> list[tuple[int, int]]:
     """Per-pod inclusive ``[first, last]`` slices of the sorted database.
 
     With ``halo=False`` (the default) the slices are an exact *partition*:
-    pod ``p`` **owns** the segments whose ``t_start`` falls in the p-th
-    equal-width slice of the temporal extent, every segment is owned by
-    exactly one pod, and empty pods come back as valid empty ranges
-    ``(first, first - 1)``.  This ownership is what makes cross-pod result
-    sets trivially duplicate-free: an interaction pair is evaluated by the
-    unique owner of its entry segment (the sharded backend's "halo dedup"
-    is by construction, not by filtering).
+    pod ``p`` **owns** a contiguous run of the t_start-sorted segments,
+    every segment is owned by exactly one pod, and empty pods come back as
+    valid empty ranges ``(first, first - 1)``.  This ownership is what
+    makes cross-pod result sets trivially duplicate-free: an interaction
+    pair is evaluated by the unique owner of its entry segment (the sharded
+    backend's "halo dedup" is by construction, not by filtering).
+
+    ``balance`` picks where the ownership boundaries go:
+
+    * ``"time"`` (the default, unchanged): pod ``p`` owns the segments
+      whose ``t_start`` falls in the p-th *equal-width* slice of the
+      temporal extent.  Temporally dense regions make their pod own (and
+      evaluate) disproportionately many candidate rows.
+    * ``"num_ints"``: boundaries are placed at equal quantiles of the
+      per-segment candidate-load prefix sum — the same prefix-sum
+      machinery the batching algorithms use for their ``numInts``
+      accounting, applied to pods.  A segment's expected interaction load
+      under a stationary query stream is proportional to how many queries
+      temporally overlap it, i.e. to ``duration(e) + mean query
+      duration`` (interval-overlap probability); lacking the workload at
+      partition time, the database's own duration distribution stands in
+      for the queries'.  Equalizing that cumulative weight equalizes
+      expected per-pod interactions on a temporally skewed database (the
+      total candidate-row count is partition-invariant; only its per-pod
+      distribution moves).
 
     With ``halo=True`` each slice is additionally *widened* to start at the
-    first segment whose running-max ``t_end`` reaches the pod's window —
-    segments with an earlier ``t_start`` that extend into the window.  Halo
-    slices overlap (a replica placement/routing view, not an ownership
-    view); consumers that evaluate over halo slices must dedup by entry
-    ownership.
+    first segment whose running-max ``t_end`` reaches the pod's window
+    start — segments with an earlier ``t_start`` that extend into the
+    window.  Halo slices overlap (a replica placement/routing view, not an
+    ownership view); consumers that evaluate over halo slices must dedup by
+    entry ownership.
 
     Degenerate inputs return valid (possibly empty) slices instead of
     nonsense ranges: an empty database yields ``num_pods`` empty slices,
-    and ``num_pods`` larger than the number of distinct time slices leaves
-    the surplus pods empty.
+    and ``num_pods`` larger than the number of distinct time slices (or
+    segments) leaves the surplus pods empty.
     """
     if num_pods <= 0:
         raise ValueError(f"num_pods must be positive, got {num_pods}")
+    if balance not in POD_BALANCES:
+        raise ValueError(f"unknown balance {balance!r}; "
+                         f"choose from {POD_BALANCES}")
     n = len(db)
     if n == 0:
         return [(0, -1)] * num_pods
     if not db.is_sorted():
         raise ValueError("database must be sorted by t_start")
-    edges = np.linspace(float(db.ts[0]), float(db.ts[-1]), num_pods + 1)
-    # Ownership boundaries: bounds[p] is the first segment of pod p.  With
-    # fewer distinct t_start values than pods (e.g. all segments at one
-    # instant) interior edges collapse and the surplus pods are empty.
-    bounds = np.concatenate([
-        [0], np.searchsorted(db.ts, edges[1:-1], side="left"), [n]
-    ]).astype(np.int64)
+    if balance == "time":
+        edges = np.linspace(float(db.ts[0]), float(db.ts[-1]), num_pods + 1)
+        # Ownership boundaries: bounds[p] is the first segment of pod p.
+        # With fewer distinct t_start values than pods (e.g. all segments
+        # at one instant) interior edges collapse and the surplus pods are
+        # empty.
+        bounds = np.concatenate([
+            [0], np.searchsorted(db.ts, edges[1:-1], side="left"), [n]
+        ]).astype(np.int64)
+    else:
+        # Equal-load boundaries via the prefix sum of per-segment candidate
+        # weight — expected overlapping-query count ∝ own duration + mean
+        # duration (the db's durations proxy the workload's): pod p starts
+        # at the first index whose cumulative weight exceeds p/num_pods of
+        # the total.
+        dur = np.maximum(db.te.astype(np.float64)
+                         - db.ts.astype(np.float64), 0.0)
+        cum_w = np.cumsum(dur + max(float(dur.mean()), 1e-30))
+        targets = cum_w[-1] * np.arange(1, num_pods) / num_pods
+        interior = np.searchsorted(cum_w, targets, side="left") + 1
+        bounds = np.concatenate([[0], interior, [n]]).astype(np.int64)
     out = []
     if halo:
         te_running_max = np.maximum.accumulate(db.te.astype(np.float64))
@@ -106,8 +148,8 @@ def temporal_pod_partition(db: SegmentArray, num_pods: int, *,
             # Widen to the first segment whose running-max t_end reaches
             # the pod's window start: every earlier-starting segment that
             # extends into the window is included.
-            first = int(np.searchsorted(te_running_max, edges[p],
-                                        side="left"))
+            win0 = (edges[p] if balance == "time" else float(db.ts[first]))
+            first = int(np.searchsorted(te_running_max, win0, side="left"))
         out.append((first, max(last, first - 1)))
     return out
 
@@ -308,14 +350,20 @@ class _PodShardDispatcher:
         self._pad_e = pad          # entry pad rows: [pad, pad]
         self._pad_q = pad + 1.0    # query pad rows: disjoint instant
 
-    def dispatch(self, batch, capacity: int):
-        se = self.engine
+    def _pod_lens(self, batch) -> tuple[list[int], list[int]]:
+        """Per-pod (first index, length) of the batch's candidate range
+        intersected with each pod's ownership slice — the exact fan-out."""
         los, lens = [], []
-        for pf, plast in se.pod_slices:
+        for pf, plast in self.engine.pod_slices:
             lo = max(batch.cand_first, pf)
             hi = min(batch.cand_last, plast)
             los.append(lo)
             lens.append(max(hi - lo + 1, 0))
+        return los, lens
+
+    def dispatch(self, batch, capacity: int):
+        se = self.engine
+        los, lens = self._pod_lens(batch)
         c_loc = bucket_capacity(max(max(lens), 1), se.cand_blk)
         # Pod-local candidate blocks, padded with rows at _pad_e (never
         # overlaps real data, real queries, or query padding at _pad_q).
@@ -385,9 +433,10 @@ class ShardedEngine:
     each batch's contiguous candidate range is answered by the pods owning
     its sub-ranges against the replicated query batch.  Execution runs
     through the shared ``repro.core.executor`` drivers, so the pipelined
-    path keeps ≤ 2 host syncs per query set (``ExecStats.num_syncs``) with
-    ``psum``-reduced exact hit counts and the same bucketed overflow-retry
-    protocol as the single-device engine.
+    path keeps ≤ 2 host syncs per dispatch group (``ExecStats.num_syncs``
+    — one group per query set unless the §8-model derivation splits a
+    high-hit-volume plan) with ``psum``-reduced exact hit counts and the
+    same bucketed overflow-retry protocol as the single-device engine.
 
     Registered through the facade as ``backend="shard"``
     (``repro.api.TrajectoryDB.query``); constructed there from
@@ -398,7 +447,8 @@ class ShardedEngine:
                  pods: int | None = None, capacity_per_shard: int = 4096,
                  use_pallas: bool = False, interpret: bool = True,
                  cand_blk: int = 256, qry_blk: int = 256,
-                 compaction: str = "dense", pipeline: bool = True):
+                 compaction: str = "dense", pipeline: bool = True,
+                 balance: str = "time"):
         self.db = db if db.is_sorted() else db.sort_by_tstart()
         self._packed = self.db.packed()
         if mesh is None:
@@ -409,7 +459,9 @@ class ShardedEngine:
         self.mesh = mesh
         self.pod_axis = mesh.axis_names[0]
         self.ways = int(mesh.shape[self.pod_axis])
-        self.pod_slices = temporal_pod_partition(self.db, self.ways)
+        self.balance = balance
+        self.pod_slices = temporal_pod_partition(self.db, self.ways,
+                                                 balance=balance)
         self.capacity_per_shard = capacity_per_shard
         self.use_pallas = use_pallas
         self.interpret = interpret
@@ -450,10 +502,14 @@ class ShardedEngine:
 
     # ------------------------------------------------------------------
     def execute(self, queries: SegmentArray, d: float, plan,
-                *, pipeline: bool | None = None):
+                *, pipeline: bool | None = None, on_group=None,
+                dispatcher=None):
         """Run a plan on the mesh — same contract as the single-device
         ``DistanceThresholdEngine.execute`` (``plan`` may be a ``BatchPlan``
-        or a refined ``QueryPlan``; per-batch capacities are *per shard*)."""
+        or a refined ``QueryPlan``; per-batch capacities are *per shard*;
+        ``on_group`` is the executor's group-completion hook).
+        ``dispatcher`` substitutes a pre-built pod dispatcher — the seam
+        :class:`PodRouter` uses to thread routing accounting through."""
         if not queries.is_sorted():
             raise ValueError(
                 "queries must be sorted by t_start; use "
@@ -461,9 +517,123 @@ class ShardedEngine:
         qplan = as_query_plan(plan,
                               default_capacity=self.capacity_per_shard)
         use_pipeline = self.pipeline if pipeline is None else pipeline
-        executor = make_executor(self.dispatcher(queries.packed(), d),
-                                 pipeline=use_pipeline)
+        if dispatcher is None:
+            dispatcher = self.dispatcher(queries.packed(), d)
+        executor = make_executor(dispatcher, pipeline=use_pipeline,
+                                 on_group=on_group)
         return executor.run(qplan)
+
+
+@dataclasses.dataclass(eq=False)      # identity compare: ndarray + lock fields
+class RoutingStats:
+    """Per-pod routing accounting for one :class:`PodRouter` binding.
+
+    ``pods_per_batch[k]`` is how many pods hold a non-empty intersection
+    of the k-th *dispatched* batch's candidate range with their ownership
+    slice — the SPMD step still runs on the whole mesh, but the non-routed
+    pods' candidate blocks are empty padding, so this is the exact fan-out
+    (the dispatch-time refinement of :func:`route_query_to_pods`' temporal
+    routing view).
+    ``pod_hits`` accumulates marshalled hit rows per pod — the load signal
+    the ``balance="num_ints"`` partition is meant to even out.
+
+    Both count **work dispatched to the pods**, not unique results: on the
+    deadline-scheduler path a straggling group that gets re-issued is
+    accounted once per execution (its duplicate *results* are dropped by
+    the scheduler, but each execution did load the pods).  On the broker's
+    single-threaded pump (no re-issue) ``pod_hits.sum()`` equals the
+    ticket's result rows exactly.  Updates are lock-protected — scheduler
+    worker threads share one stats object.
+    """
+
+    num_pods: int = 0
+    batches: int = 0
+    pods_per_batch: list = dataclasses.field(default_factory=list)
+    pod_hits: np.ndarray | None = None
+    _lock: object = dataclasses.field(default_factory=threading.Lock,
+                                      repr=False, compare=False)
+
+    @property
+    def mean_pods_per_batch(self) -> float:
+        return (float(np.mean(self.pods_per_batch))
+                if self.pods_per_batch else 0.0)
+
+    @property
+    def hit_balance(self) -> float:
+        """max/mean per-pod hit load (1.0 = perfectly even; 0 if no hits)."""
+        if self.pod_hits is None or self.pod_hits.sum() == 0:
+            return 0.0
+        return float(self.pod_hits.max() / self.pod_hits.mean())
+
+
+class _RoutedPodDispatcher(_PodShardDispatcher):
+    """The pod dispatcher with per-batch fan-out accounting (non-empty
+    pod candidate intersections) and per-pod hit accounting on marshal —
+    what :class:`PodRouter` hands the executors."""
+
+    def __init__(self, router: "PodRouter", q_packed: np.ndarray, d: float):
+        super().__init__(router.engine, q_packed, d)
+        self.router = router
+
+    def dispatch(self, batch, capacity: int):
+        _, lens = self._pod_lens(batch)
+        st = self.router.stats
+        with st._lock:
+            st.batches += 1
+            st.pods_per_batch.append(sum(1 for n in lens if n > 0))
+        return super().dispatch(batch, capacity)
+
+    def marshal(self, dp, count: int):
+        st = self.router.stats
+        per_pod = np.minimum(np.asarray(dp.out["count"], np.int64),
+                             dp.capacity)
+        with st._lock:
+            st.pod_hits += per_pod
+        return super().marshal(dp, count)
+
+
+class PodRouter:
+    """Per-pod shard routing layer over a :class:`ShardedEngine` — the
+    serving-side face of the mesh backend.
+
+    The broker (``repro.serve.broker.QueryBroker``) and the deadline
+    scheduler hand this object a ticket's batch *groups*; each group fans
+    out to the per-pod candidate slices through one pipelined ``shard_map``
+    dispatch (``_RoutedPodDispatcher``), per-pod hits merge into one
+    globally indexed ``ResultSet`` (``psum``-reduced exact counts, ≤ 2 host
+    syncs per group), and :class:`RoutingStats` records how many pods each
+    batch actually needed (non-empty candidate intersections) and how the
+    hit load balanced across pods.
+
+    ``execute`` has the same contract as the engines', so a
+    ``DeadlineScheduler`` can drive a router directly — this is what closed
+    the ROADMAP's "``query_stream`` never reaches the ``ShardedEngine``
+    pods" gap (``repro.api.TrajectoryDB.query_stream(backend="shard")``).
+    """
+
+    def __init__(self, engine: ShardedEngine):
+        self.engine = engine
+        self.stats = RoutingStats(
+            num_pods=engine.ways,
+            pod_hits=np.zeros(engine.ways, np.int64))
+
+    @property
+    def default_capacity(self) -> int:
+        """Per-shard capacity (scheduler/executor interop)."""
+        return self.engine.capacity_per_shard
+
+    def dispatcher(self, queries_packed: np.ndarray,
+                   d: float) -> _RoutedPodDispatcher:
+        return _RoutedPodDispatcher(self, queries_packed, float(d))
+
+    def execute(self, queries: SegmentArray, d: float, plan,
+                *, pipeline: bool | None = None, on_group=None):
+        """Engine-contract execution with routing accounting (the scheduler
+        calls this once per batch group) — ``ShardedEngine.execute`` with a
+        routed dispatcher substituted."""
+        return self.engine.execute(
+            queries, d, plan, pipeline=pipeline, on_group=on_group,
+            dispatcher=self.dispatcher(queries.packed(), d))
 
 
 class DistributedEngine:

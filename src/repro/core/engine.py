@@ -148,14 +148,17 @@ class DistanceThresholdEngine:
     # ------------------------------------------------------------------
     def execute(self, queries: SegmentArray, d: float,
                 plan: BatchPlan | QueryPlan,
-                *, pipeline: bool | None = None) -> tuple[ResultSet, ExecStats]:
+                *, pipeline: bool | None = None,
+                on_group=None) -> tuple[ResultSet, ExecStats]:
         """Run every batch in ``plan`` against the database.
 
         ``plan`` may be a refined ``QueryPlan`` (the facade's planner
         output, carrying capacities + dispatch groups) or a legacy
         ``BatchPlan`` (coerced to a single-group plan sized by the engine's
         ``default_capacity``).  ``pipeline`` overrides the engine-level
-        default for this call (``None`` → use ``self.pipeline``).
+        default for this call (``None`` → use ``self.pipeline``);
+        ``on_group`` is the executor's group-completion hook (incremental
+        result delivery — see ``repro.core.executor.GroupHook``).
         """
         if not queries.is_sorted():
             # Unreachable from the public facade: repro.api.TrajectoryDB
@@ -167,7 +170,7 @@ class DistanceThresholdEngine:
         qplan = as_query_plan(plan, default_capacity=self.default_capacity)
         use_pipeline = self.pipeline if pipeline is None else pipeline
         executor = make_executor(self.dispatcher(queries.packed(), d),
-                                 pipeline=use_pipeline)
+                                 pipeline=use_pipeline, on_group=on_group)
         return executor.run(qplan)
 
 

@@ -42,7 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Protocol, runtime_checkable
+from typing import Callable, Protocol, runtime_checkable
 
 import jax
 import numpy as np
@@ -211,6 +211,17 @@ def _empty_stats(batch: QueryBatch) -> BatchStats:
     return BatchStats(batch.size, 0, 0, 0, 0.0, 0)
 
 
+#: Group-completion hook ``(group_index, batch_indices, group_results)`` —
+#: fired by both executors as soon as one dispatch group's results are
+#: marshalled (for the pipelined executor that is while the *next* group is
+#: still computing).  The incremental-delivery seam for streaming
+#: consumers: ``DeadlineScheduler.execute(on_group=...)`` exposes it with
+#: first-completion deduplication.  (The serving broker delivers slices by
+#: running one single-group sub-plan per pump step instead — see
+#: ``repro.serve.broker``.)
+GroupHook = Callable[[int, "list[int]", ResultSet], None]
+
+
 # ----------------------------------------------------------------------
 # Executors.
 # ----------------------------------------------------------------------
@@ -223,42 +234,55 @@ class SyncExecutor:
 
     pipelined = False
 
-    def __init__(self, dispatcher: BatchDispatcher):
+    def __init__(self, dispatcher: BatchDispatcher, *,
+                 on_group: GroupHook | None = None):
         self.dispatcher = dispatcher
+        self.on_group = on_group
 
     def run(self, plan: QueryPlan) -> tuple[ResultSet, ExecStats]:
         t_begin = time.perf_counter()
         disp = self.dispatcher
+        nb = plan.num_batches
+        groups = plan.groups if plan.groups else (
+            [list(range(nb))] if nb else [])
         parts: list[ResultSet] = []
-        stats: list[BatchStats] = []
+        stats_by_idx: dict[int, BatchStats] = {}
         num_syncs = 0
-        for batch, capacity in zip(plan.batches, plan.capacities):
-            if batch.num_candidates == 0:
-                stats.append(_empty_stats(batch))
-                continue
-            t0 = time.perf_counter()
-            dp = disp.dispatch(batch, capacity)
-            jax.block_until_ready(dp.out)
-            kernel_s = time.perf_counter() - t0
-            num_syncs += 1
-            count = disp.count(dp)
-            retries = 0
-            retry_s = 0.0
-            while (cap2 := disp.retry_capacity(dp)) is not None:
-                t0r = time.perf_counter()
-                dp = _redispatch(disp, dp, cap2)
+        for gi, g in enumerate(groups):
+            group_parts: list[ResultSet] = []
+            for i in g:
+                batch, capacity = plan.batches[i], plan.capacities[i]
+                if batch.num_candidates == 0:
+                    stats_by_idx[i] = _empty_stats(batch)
+                    continue
+                t0 = time.perf_counter()
+                dp = disp.dispatch(batch, capacity)
                 jax.block_until_ready(dp.out)
-                retry_s += time.perf_counter() - t0r
+                kernel_s = time.perf_counter() - t0
                 num_syncs += 1
                 count = disp.count(dp)
-                retries += 1
-            part = disp.marshal(dp, count)
-            if part is not None:
-                parts.append(part)
-            stats.append(BatchStats(batch.size, batch.num_candidates,
-                                    batch.size * batch.num_candidates, count,
-                                    kernel_s, retries, retry_s))
+                retries = 0
+                retry_s = 0.0
+                while (cap2 := disp.retry_capacity(dp)) is not None:
+                    t0r = time.perf_counter()
+                    dp = _redispatch(disp, dp, cap2)
+                    jax.block_until_ready(dp.out)
+                    retry_s += time.perf_counter() - t0r
+                    num_syncs += 1
+                    count = disp.count(dp)
+                    retries += 1
+                part = disp.marshal(dp, count)
+                if part is not None:
+                    group_parts.append(part)
+                stats_by_idx[i] = BatchStats(
+                    batch.size, batch.num_candidates,
+                    batch.size * batch.num_candidates, count,
+                    kernel_s, retries, retry_s)
+            parts.extend(group_parts)
+            if self.on_group is not None:
+                self.on_group(gi, list(g), ResultSet.concatenate(group_parts))
         total = time.perf_counter() - t_begin
+        stats = [stats_by_idx[i] for i in range(nb)]
         return (ResultSet.concatenate(parts),
                 ExecStats(plan.plan_seconds, total, stats,
                           num_syncs=num_syncs, pipelined=False,
@@ -282,8 +306,10 @@ class PipelinedExecutor:
 
     pipelined = True
 
-    def __init__(self, dispatcher: BatchDispatcher):
+    def __init__(self, dispatcher: BatchDispatcher, *,
+                 on_group: GroupHook | None = None):
         self.dispatcher = dispatcher
+        self.on_group = on_group
 
     def run(self, plan: QueryPlan) -> tuple[ResultSet, ExecStats]:
         t_begin = time.perf_counter()
@@ -306,9 +332,11 @@ class PipelinedExecutor:
                 slots[i] = disp.dispatch(batch, plan.capacities[i])
             timing["dispatch"] += time.perf_counter() - t0
 
-        def finish_group(g: list[int]) -> None:
+        def finish_group(gi: int, g: list[int]) -> None:
             live = [i for i in g if i in slots]
             if not live:
+                if self.on_group is not None:
+                    self.on_group(gi, list(g), ResultSet.empty())
                 return
             t0 = time.perf_counter()
             jax.block_until_ready([slots[i].out for i in live])
@@ -339,13 +367,16 @@ class PipelinedExecutor:
                 part = disp.marshal(slots[i], counts[i])
                 if part is not None:
                     parts[i] = part
+            if self.on_group is not None:
+                self.on_group(gi, list(g), ResultSet.concatenate(
+                    [parts[i] for i in g if i in parts]))
 
         for gi, g in enumerate(groups):
             dispatch_group(g)
             if gi > 0:
-                finish_group(groups[gi - 1])
+                finish_group(gi - 1, groups[gi - 1])
         if groups:
-            finish_group(groups[-1])
+            finish_group(len(groups) - 1, groups[-1])
 
         stats = []
         for i, batch in enumerate(plan.batches):
@@ -366,13 +397,16 @@ class PipelinedExecutor:
                           num_groups=max(len(groups), 1)))
 
 
-def make_executor(dispatcher: BatchDispatcher, *, pipeline: bool):
+def make_executor(dispatcher: BatchDispatcher, *, pipeline: bool,
+                  on_group: GroupHook | None = None):
     """The executor for ``pipeline=True`` (two-phase, O(1) syncs per group)
-    or ``pipeline=False`` (per-batch sync loop with observable timings)."""
-    return (PipelinedExecutor if pipeline else SyncExecutor)(dispatcher)
+    or ``pipeline=False`` (per-batch sync loop with observable timings).
+    ``on_group`` fires as each dispatch group's results are marshalled."""
+    cls = PipelinedExecutor if pipeline else SyncExecutor
+    return cls(dispatcher, on_group=on_group)
 
 
 __all__ = [
-    "BatchDispatcher", "BatchStats", "Dispatch", "ExecStats",
+    "BatchDispatcher", "BatchStats", "Dispatch", "ExecStats", "GroupHook",
     "PipelinedExecutor", "ResultSet", "SyncExecutor", "make_executor",
 ]

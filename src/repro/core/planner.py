@@ -17,6 +17,10 @@ call).  This module owns all of it:
   executor phase dispatches together.
 * :class:`QueryPlanner` — builds a ``QueryPlan`` from sorted queries: runs
   the batching algorithm, sizes capacities, forms groups.
+* :func:`derive_group_size` — §8-model dispatch-group sizing (marshal time
+  ≈ hit volume): used whenever ``group_size`` is left ``None``, so the
+  "group sizing is manual" knob became a model-driven default (PR 4) while
+  explicit sizes stay overrides.
 
 Every executor consumes a ``QueryPlan`` — the single-device engine
 (``repro.core.engine``), the sharded mesh backend
@@ -29,8 +33,9 @@ implementation instead of a fork of the engine loop — see
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
-from typing import Mapping, Sequence
+from typing import Callable, Mapping, Sequence
 
 import numpy as np
 
@@ -46,6 +51,16 @@ CAPACITY_GRANULARITY = 256
 #: Default result-buffer slots per batch (the paper statically allocates
 #: |D| slots, §5; we allocate small and retry on exact-count overflow).
 DEFAULT_CAPACITY = 4096
+
+#: Predicted hit rows per dispatch group at which marshalling becomes worth
+#: overlapping with the next group's device compute (§8.2: marshal time is
+#: result-volume × 1/bandwidth; at 16 B/row this is ≈ 1 MiB of results).
+AUTO_GROUP_HIT_ROWS = 1 << 16
+
+#: Fallback hit fraction α when no §8-model estimate is available — the
+#: order of the paper's scenario hit rates (§7.2), deliberately small so
+#: low-volume plans keep the single-group O(1)-sync shape.
+AUTO_GROUP_HIT_FRACTION = 0.02
 
 
 def bucket_capacity(n: int, blk: int = CAPACITY_GRANULARITY) -> int:
@@ -128,6 +143,40 @@ def size_capacity(batch: QueryBatch, default_capacity: int,
                            granularity)
 
 
+def derive_group_size(batches: Sequence[QueryBatch], *,
+                      predict_hits: Callable | None = None,
+                      target_hit_rows: int = AUTO_GROUP_HIT_ROWS
+                      ) -> int | None:
+    """§8-model-driven dispatch-group sizing: marshal time ≈ hit volume.
+
+    The pipelined executor overlaps host-side marshalling of group k with
+    device compute of group k+1, so splitting a plan into groups only pays
+    off when there is marshalling to hide: the §8.2 host model says marshal
+    time is result-set volume over transfer bandwidth, so predicted *hit
+    rows* are the sizing signal.  ``predict_hits(batch)`` supplies the
+    model's per-batch hit estimate (α × numInts — see
+    ``repro.core.perfmodel.estimate_alpha_by_epoch``); without one, hits
+    are approximated as ``AUTO_GROUP_HIT_FRACTION × batch.num_ints``.
+
+    Returns the derived batches-per-group, or ``None`` when one group (the
+    classic O(1)-syncs-per-query-set shape) is predicted optimal — which is
+    also why deriving on ``group_size=None`` is backward compatible: plans
+    whose predicted result volume is below ``target_hit_rows`` keep the
+    exact pre-derivation behavior.
+    """
+    n = len(batches)
+    if n < 2:
+        return None
+    if predict_hits is not None:
+        hits = sum(max(float(predict_hits(b)), 0.0) for b in batches)
+    else:
+        hits = AUTO_GROUP_HIT_FRACTION * sum(b.num_ints for b in batches)
+    num_groups = min(int(hits // target_hit_rows) + 1, n)
+    if num_groups <= 1:
+        return None
+    return math.ceil(n / num_groups)
+
+
 def make_groups(num_batches: int, group_size: int | None) -> list[list[int]]:
     """Partition batch indices into contiguous dispatch groups.
 
@@ -160,7 +209,11 @@ class QueryPlanner:
                  params: Mapping | None = None,
                  default_capacity: int = DEFAULT_CAPACITY,
                  granularity: int = CAPACITY_GRANULARITY,
-                 group_size: int | None = None):
+                 group_size: int | None = None,
+                 predict_hits: Callable | None = None):
+        """``group_size=None`` (the default) derives the dispatch-group size
+        from the §8 perf model (:func:`derive_group_size`, optionally fed by
+        ``predict_hits``); an explicit ``group_size`` is honored as given."""
         if algorithm not in ALGORITHMS:
             raise ValueError(f"unknown batching algorithm {algorithm!r}; "
                              f"choose from {sorted(ALGORITHMS)}")
@@ -170,6 +223,7 @@ class QueryPlanner:
         self.default_capacity = default_capacity
         self.granularity = granularity
         self.group_size = group_size
+        self.predict_hits = predict_hits
 
     # ------------------------------------------------------------------
     def plan(self, sorted_queries: SegmentArray) -> QueryPlan:
@@ -192,7 +246,11 @@ class QueryPlanner:
         t0 = time.perf_counter()
         caps = [size_capacity(b, self.default_capacity, self.granularity)
                 for b in batch_plan.batches]
-        groups = make_groups(len(batch_plan.batches), self.group_size)
+        gs = self.group_size
+        if gs is None:
+            gs = derive_group_size(batch_plan.batches,
+                                   predict_hits=self.predict_hits)
+        groups = make_groups(len(batch_plan.batches), gs)
         return QueryPlan(batch_plan, caps, groups,
                          batch_plan.plan_seconds + time.perf_counter() - t0)
 
@@ -210,6 +268,7 @@ def as_query_plan(plan: "BatchPlan | QueryPlan", *,
 
 
 __all__ = [
-    "CAPACITY_GRANULARITY", "DEFAULT_CAPACITY", "QueryPlan", "QueryPlanner",
-    "as_query_plan", "bucket_capacity", "make_groups", "size_capacity",
+    "AUTO_GROUP_HIT_FRACTION", "AUTO_GROUP_HIT_ROWS", "CAPACITY_GRANULARITY",
+    "DEFAULT_CAPACITY", "QueryPlan", "QueryPlanner", "as_query_plan",
+    "bucket_capacity", "derive_group_size", "make_groups", "size_capacity",
 ]

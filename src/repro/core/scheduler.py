@@ -45,7 +45,8 @@ from typing import Callable
 
 from repro.core.batching import BatchPlan
 from repro.core.engine import DistanceThresholdEngine, ResultSet
-from repro.core.planner import QueryPlan, as_query_plan, make_groups
+from repro.core.planner import (DEFAULT_CAPACITY, QueryPlan, as_query_plan,
+                                derive_group_size, make_groups)
 from repro.core.segments import SegmentArray
 
 
@@ -57,6 +58,9 @@ class SchedulerStats:
     duplicates_dropped: int = 0    #: late duplicate group completions dropped
     wall_seconds: float = 0.0
     group_sizes: list = dataclasses.field(default_factory=list)
+    #: per-pod routing accounting when the engine is a ``PodRouter``
+    #: (``repro.core.distributed.RoutingStats``); ``None`` otherwise.
+    routing: object = None
 
     @property
     def batches_per_call(self) -> float:
@@ -68,7 +72,13 @@ class SchedulerStats:
 
 class DeadlineScheduler:
     """Run a plan as deadline-tracked batch *groups* with straggler
-    re-issue; each group is one pipelined engine dispatch."""
+    re-issue; each group is one pipelined engine dispatch.
+
+    ``engine`` is anything with the engines' ``execute(queries, d, plan)``
+    contract — the single-device ``DistanceThresholdEngine``, the mesh
+    ``ShardedEngine``, or a ``repro.core.distributed.PodRouter`` (the
+    per-pod routing layer ``query_stream(backend="shard")`` wraps around
+    the sharded engine)."""
 
     def __init__(self, engine: DistanceThresholdEngine, *,
                  workers: int = 2, slack: float = 4.0,
@@ -86,14 +96,20 @@ class DeadlineScheduler:
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------------
-    def groups(self, num_batches: int) -> list[list[int]]:
+    def groups(self, num_batches: int,
+               batches=None) -> list[list[int]]:
         """Partition batch indices into worker-call groups.
 
         ``group_size=None`` auto-sizes so every call carries ≥ 2 batches
         (a lone trailing remainder is folded into the previous group)
         while keeping at least ~2 groups per worker in flight (re-issue
-        granularity): ``max(2, ceil(n / (2·workers)))``.  An explicit
-        ``group_size`` is honored as given, remainder group included.
+        granularity): ``max(2, ceil(n / (2·workers)))``.  When the plan's
+        ``batches`` are supplied, the §8-model hit-volume heuristic
+        (``repro.core.planner.derive_group_size`` — marshal time ≈ hit
+        volume) can additionally *shrink* auto groups so one worker call
+        never marshals more than a group's worth of predicted result rows.
+        An explicit ``group_size`` is honored as given, remainder group
+        included.
         """
         if num_batches <= 0:
             return []
@@ -101,6 +117,10 @@ class DeadlineScheduler:
         auto = gs is None
         if auto:
             gs = max(2, math.ceil(num_batches / (2 * self.workers)))
+            if batches is not None:
+                model_gs = derive_group_size(batches)
+                if model_gs is not None:
+                    gs = min(gs, max(model_gs, 2))
         gs = max(1, min(int(gs), num_batches))
         out = make_groups(num_batches, gs)
         if auto and len(out) >= 2 and len(out[-1]) == 1:
@@ -128,14 +148,21 @@ class DeadlineScheduler:
 
     # ------------------------------------------------------------------
     def execute(self, queries: SegmentArray, d: float,
-                plan: BatchPlan | QueryPlan
+                plan: BatchPlan | QueryPlan, *,
+                on_group: Callable | None = None
                 ) -> tuple[ResultSet, SchedulerStats]:
+        """Run the plan; ``on_group(group_idx, batch_indices, results)``
+        fires on the *first* completion of each group (duplicates from
+        re-issued stragglers never reach it) — incremental delivery for
+        streaming consumers of the scheduler path."""
         t0 = time.perf_counter()
-        qplan = as_query_plan(plan,
-                              default_capacity=self.engine.default_capacity)
-        groups = self.groups(qplan.num_batches)
+        capacity = getattr(self.engine, "default_capacity", None)
+        qplan = as_query_plan(plan, default_capacity=capacity
+                              if capacity is not None else DEFAULT_CAPACITY)
+        groups = self.groups(qplan.num_batches, qplan.batches)
         stats = SchedulerStats(groups=len(groups),
-                               group_sizes=[len(g) for g in groups])
+                               group_sizes=[len(g) for g in groups],
+                               routing=getattr(self.engine, "stats", None))
         results: dict[int, ResultSet] = {}
         pool = ThreadPoolExecutor(self.workers)
         futures = {}
@@ -161,6 +188,8 @@ class DeadlineScheduler:
                         else:
                             results[g] = rs
                             stats.completed += len(groups[g])
+                            if on_group is not None:
+                                on_group(g, list(groups[g]), rs)
                 # re-issue groups past deadline that are still incomplete
                 pending = {g for g in futures.values()}
                 for g in list(pending):

@@ -1,3 +1,6 @@
-from repro.serve import batcher, engine, trajectory  # noqa: F401
+from repro.serve import batcher, broker, engine, trajectory  # noqa: F401
+from repro.serve.broker import (  # noqa: F401
+    AdmissionError, DeadlineExceededError, GroupSlice, QueryBroker,
+    QueryTicket)
 from repro.serve.trajectory import (  # noqa: F401
     QueryRequest, QueryResponse, TrajectoryQueryService)

@@ -1,0 +1,500 @@
+"""Session-oriented serving API: the :class:`QueryBroker`.
+
+The paper's workload is an *online stream* of distance-threshold queries
+(§3): requests arrive continuously, and the serving loop — admission,
+batching cadence, result hand-back — is where a GPU/TPU trajectory system
+wins or loses at scale (cf. the manycore repeated-range-query line of work,
+arXiv:1411.3212 / 1410.2698).  The previous front door
+(``repro.serve.trajectory.TrajectoryQueryService``, now a deprecated shim)
+was a blocking submit/drain shell: results were all-or-nothing, a failed
+request vanished, only single-device backends could serve, and nothing
+bounded how much work callers could pile on.
+
+The broker makes that loop first-class:
+
+* :meth:`QueryBroker.submit` returns a :class:`QueryTicket` — a future-like
+  handle (``done()`` / ``result(timeout=)`` / ``partial()``) rather than a
+  bare uid.  Planning happens at submit time, so the ticket knows its
+  dispatch groups, its interaction volume, and (given a §8 model predictor)
+  its predicted execution time before any device work runs.
+* **Admission control** prices tickets with the §8 perf-model predictions:
+  a ticket whose predicted time (queued work included) cannot meet its
+  ``deadline=`` is rejected at submit (:class:`AdmissionError`), and a
+  bounded in-flight-interactions budget (``max_inflight_interactions``)
+  provides backpressure — rejected work never occupies the device.
+* :meth:`QueryBroker.step` pumps pending work **one dispatch group at a
+  time** through the shared :class:`~repro.core.executor.PipelinedExecutor`
+  (≤ 2 host syncs per group — the engine's O(1)-sync property holds per
+  pump step), delivering an incremental :class:`GroupSlice` to the ticket
+  (and its ``on_slice`` callback) as each group's results marshal.
+  ``run_until_idle()`` drains everything pending.
+* Slices concatenate to **exactly** the canonical ``db.query(...)`` result:
+  each slice is canonicalized within its group and mapped to the caller's
+  query order; ``result()`` finalizes the global canonical order.  The
+  same batches run at the same capacities through the same kernels, so the
+  arrays are byte-identical to the one-shot path — for every backend.
+* The broker routes over *any* backend, including ``backend="shard"``: a
+  ticket's groups fan out to the per-pod candidate slices through
+  :class:`repro.core.distributed.PodRouter`, per-pod hits merge globally
+  indexed, and ``ticket.routing`` reports the pod fan-out and hit balance.
+* A group that raises marks its ticket **errored** (state ``"error"``,
+  ``result()`` re-raises, ``exception()`` exposes it) without poisoning the
+  queue — callers can retry by resubmitting.
+
+The broker is a single-threaded pump by design: ``step()`` is the event
+loop body an async transport (HTTP handler, queue consumer) calls; the
+broker itself is not thread-safe.  It always executes groups through the
+pipelined executor — ``ExecutionPolicy.pipeline=False`` exists for the
+perf-model fits on ``db.query``, not for serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable
+
+import numpy as np
+
+from repro.api import ExecutionPolicy, QueryResult, TrajectoryDB
+from repro.core.executor import ExecStats, PipelinedExecutor, ResultSet
+from repro.core.planner import QueryPlan, make_groups
+from repro.core.segments import SegmentArray
+
+#: Ticket lifecycle states (in order).
+PENDING, PARTIAL, DONE, ERROR = "pending", "partial", "done", "error"
+
+
+class AdmissionError(RuntimeError):
+    """Submit-time rejection: backpressure budget exceeded, or the §8-model
+    predicted time cannot meet the requested deadline.  Nothing was
+    enqueued; the caller may retry later (or with a looser deadline)."""
+
+
+class DeadlineExceededError(RuntimeError):
+    """An admitted ticket's deadline passed before its groups finished;
+    the ticket is errored and its remaining groups are dropped."""
+
+
+#: The result array columns, derived from ResultSet so a future column
+#: cannot silently go missing from the partial() concatenation.
+_RESULT_FIELDS = tuple(f.name for f in dataclasses.fields(ResultSet))
+
+
+def _concat_results(parts: list[QueryResult], *, d: float,
+                    backend: str) -> QueryResult:
+    """Plain concatenation of slice results in delivery order (the
+    ``partial()`` view; the canonical finalize goes through
+    ``ResultSet.concatenate`` + ``QueryResult.from_result_set`` instead —
+    the exact transform ``db.query`` uses)."""
+    if not parts:
+        return QueryResult.from_result_set(ResultSet.empty(), order=None,
+                                           d=d, backend=backend)
+    arrays = {f: np.concatenate([getattr(p, f) for p in parts])
+              for f in _RESULT_FIELDS}
+    return QueryResult(d=d, backend=backend, **arrays)
+
+
+@dataclasses.dataclass
+class GroupSlice:
+    """One delivered increment: the results of one dispatch group.
+
+    ``result`` is canonical *within* the slice (rows lexsorted by caller
+    ``query_idx`` then ``entry_idx``); consecutive slices of a ticket whose
+    queries were submitted in sorted order concatenate to the exact
+    canonical ``db.query`` result (dispatch groups cover disjoint,
+    increasing sorted-query ranges).  ``num_syncs ≤ 2`` — each slice is one
+    pipelined two-phase dispatch.
+    """
+
+    group_index: int
+    num_groups: int
+    batch_indices: list[int]
+    result: QueryResult
+    num_syncs: int
+    seconds: float               # wall time of this group's pump step
+
+
+class QueryTicket:
+    """Future-like handle for one submitted query set.
+
+    Lifecycle: ``"pending"`` (admitted, no groups executed) →
+    ``"partial"`` (≥ 1 slice delivered) → ``"done"`` (all groups delivered,
+    ``result()`` available) or ``"error"`` (a group raised / deadline
+    passed — ``exception()`` has the cause, ``result()`` re-raises).
+
+    Tickets are pump-driven: nothing executes until the broker's
+    ``step()`` / ``run_until_idle()`` runs (``result()`` pumps the broker
+    itself, so a plain submit-then-result flow needs no explicit pump).
+    """
+
+    def __init__(self, broker: "QueryBroker", uid: int,
+                 queries: SegmentArray, d: float, backend: str, *,
+                 deadline: float | None, predicted_seconds: float | None,
+                 interactions: int, order, plan: QueryPlan | None,
+                 groups: list, group_ints: list[int],
+                 group_pred: list[float], run_group: Callable | None,
+                 on_slice: Callable | None):
+        self.broker = broker
+        self.uid = uid
+        self.queries = queries
+        self.d = float(d)
+        self.backend = backend
+        self.submitted_at = time.perf_counter()
+        self.deadline = deadline
+        self.predicted_seconds = predicted_seconds
+        self.interactions = interactions
+        self.plan = plan
+        self.routing = None           # RoutingStats for backend="shard"
+        self.on_slice = on_slice
+        self._order = order
+        self._groups = groups
+        self._group_ints = group_ints
+        self._group_pred = group_pred
+        self._run_group = run_group
+        self._slices: list[GroupSlice] = []
+        self._parts: list = []          # raw ResultSet parts, sorted frame
+        self._partial_cache: tuple[int, QueryResult] | None = None
+        self._next_group = 0
+        self._error: BaseException | None = None
+        self._final: QueryResult | None = None
+
+    # -- state ----------------------------------------------------------
+    @property
+    def state(self) -> str:
+        if self._error is not None:
+            return ERROR
+        if self._final is not None:
+            return DONE
+        if self._slices:
+            return PARTIAL
+        return PENDING
+
+    def done(self) -> bool:
+        """True once the ticket reached a terminal state (done or error)."""
+        return self._error is not None or self._final is not None
+
+    def exception(self) -> BaseException | None:
+        return self._error
+
+    @property
+    def num_groups(self) -> int:
+        return len(self._groups)
+
+    @property
+    def groups_completed(self) -> int:
+        return len(self._slices)
+
+    def slices(self) -> tuple[GroupSlice, ...]:
+        """Every slice delivered so far (stable — slices never mutate)."""
+        return tuple(self._slices)
+
+    # -- results ---------------------------------------------------------
+    def partial(self) -> QueryResult:
+        """Concatenation of the slices delivered so far — the incremental
+        view (a canonical prefix when the submitted queries were sorted).
+        Valid in every state; empty while pending.  Cached per delivered
+        slice count, so polling it every pump step stays linear."""
+        if self._final is not None:
+            return self._final
+        n = len(self._slices)
+        if self._partial_cache is None or self._partial_cache[0] != n:
+            self._partial_cache = (n, _concat_results(
+                [s.result for s in self._slices], d=self.d,
+                backend=self.backend))
+        return self._partial_cache[1]
+
+    def result(self, timeout: float | None = None) -> QueryResult:
+        """The full canonical result, pumping the broker until this ticket
+        completes.  Raises the ticket's error if it failed, or
+        ``TimeoutError`` after ``timeout`` seconds of pumping (the ticket
+        stays queued and keeps its delivered slices)."""
+        t0 = time.perf_counter()
+        while not self.done():
+            if timeout is not None and time.perf_counter() - t0 > timeout:
+                raise TimeoutError(
+                    f"ticket {self.uid}: {self.groups_completed}/"
+                    f"{self.num_groups} groups after {timeout}s")
+            if not self.broker.step():   # pragma: no cover - invariant
+                raise RuntimeError("broker idle but ticket incomplete")
+        if self._error is not None:
+            raise self._error
+        return self._final
+
+
+class QueryBroker:
+    """Ticketed asynchronous serving front door over one ``TrajectoryDB``.
+
+    Example::
+
+        db = TrajectoryDB.from_scenario("S2", scale=0.02)
+        broker = db.broker(backend="jnp")
+        t = broker.submit(db.scenario_queries, db.scenario_d,
+                          on_slice=lambda tk, sl: push(tk.uid, sl.result))
+        while broker.step():          # the serving event loop
+            ...                       # t.partial() grows as groups finish
+        full = t.result()             # canonical, == db.query(...)
+
+    Constructor knobs:
+
+    * ``predict_seconds(batch)`` — the §8 model's per-batch prediction
+      (e.g. from ``repro.core.perfmodel.ResponseTimeModel``); prices
+      deadline admission and per-ticket ``predicted_seconds``.
+    * ``admission_slack`` — multiplier on predictions when checking
+      deadlines (the scheduler's slack notion, §8.3).
+    * ``max_inflight_interactions`` — backpressure: total admitted-but-
+      unfinished interaction volume is bounded; a submit that would exceed
+      it raises :class:`AdmissionError`.
+    * ``group_size`` — dispatch-group granularity for every ticket
+      (``None`` → the planner's §8-model-derived sizing; per-submit
+      override available).
+    """
+
+    def __init__(self, db: TrajectoryDB, *, backend: str = "jnp",
+                 policy: ExecutionPolicy | None = None,
+                 predict_seconds: Callable | None = None,
+                 admission_slack: float = 4.0,
+                 max_inflight_interactions: int | None = None,
+                 group_size: int | None = None):
+        self.db = db
+        self.backend = backend
+        self.policy = policy or db.policy
+        self.predict_seconds = predict_seconds
+        self.admission_slack = float(admission_slack)
+        self.max_inflight_interactions = max_inflight_interactions
+        self.group_size = group_size
+        self._queue: deque[QueryTicket] = deque()
+        self._next_uid = 0
+        self._inflight_interactions = 0
+        self._inflight_predicted = 0.0
+        self.submitted = 0
+        self.completed = 0
+        self.errored = 0
+        self.rejected = 0
+
+    # -- introspection ----------------------------------------------------
+    @property
+    def pending(self) -> int:
+        """Tickets admitted but not yet terminal."""
+        return len(self._queue)
+
+    @property
+    def inflight_interactions(self) -> int:
+        """Interaction volume of admitted-but-unfinished groups (the
+        quantity ``max_inflight_interactions`` bounds)."""
+        return self._inflight_interactions
+
+    # -- submit -----------------------------------------------------------
+    def submit(self, queries: SegmentArray, d: float, *,
+               backend: str | None = None,
+               policy: ExecutionPolicy | None = None,
+               deadline: float | None = None,
+               group_size: int | None = None,
+               on_slice: Callable | None = None) -> QueryTicket:
+        """Admit a query set and return its :class:`QueryTicket`.
+
+        Planning runs now (host-side only); device work waits for the
+        pump.  ``deadline`` is wall seconds from submit — enforced at
+        admission against the §8-model prediction of queued + own work
+        (when the broker has a predictor) and at every pump step
+        thereafter.  ``on_slice(ticket, slice)`` fires as each dispatch
+        group's results marshal.  Raises :class:`AdmissionError` instead
+        of enqueueing when the ticket cannot be served.
+        """
+        backend = backend or self.backend
+        pol = policy or self.policy
+        uid = self._next_uid
+        self._next_uid += 1
+        d = float(d)
+
+        if len(queries) == 0:
+            ticket = QueryTicket(
+                self, uid, queries, d, backend, deadline=deadline,
+                predicted_seconds=0.0, interactions=0, order=None,
+                plan=None, groups=[], group_ints=[], group_pred=[],
+                run_group=None, on_slice=on_slice)
+            ticket._final = _concat_results([], d=d, backend=backend)
+            self.submitted += 1
+            self.completed += 1
+            return ticket
+
+        be = self.db.backend(backend, pol)
+        qs, order = TrajectoryDB._sorted(queries)
+        if be.needs_plan:
+            plan = self.db._make_plan(qs, pol, backend)
+            interactions = plan.total_interactions
+            gs = group_size if group_size is not None else self.group_size
+            groups = (make_groups(plan.num_batches, gs)
+                      if gs is not None else [list(g) for g in plan.groups])
+            group_ints = [sum(plan.batches[i].num_ints for i in g)
+                          for g in groups]
+        else:
+            # CPU baselines have no plan: the whole request is one slice.
+            plan = None
+            interactions = len(self.db.segments) * len(qs)
+            groups = [None]
+            group_ints = [interactions]
+
+        # -- admission: backpressure budget -----------------------------
+        if (self.max_inflight_interactions is not None
+                and self._inflight_interactions + interactions
+                > self.max_inflight_interactions):
+            self.rejected += 1
+            raise AdmissionError(
+                f"ticket {uid}: {interactions} interactions would exceed "
+                f"the in-flight budget ({self._inflight_interactions} of "
+                f"{self.max_inflight_interactions} in use) — retry after "
+                f"pumping")
+
+        # -- admission: §8-model deadline pricing ------------------------
+        predicted = None
+        group_pred = [0.0] * len(groups)
+        if self.predict_seconds is not None and plan is not None:
+            group_pred = [sum(self.predict_seconds(plan.batches[i])
+                              for i in g) for g in groups]
+            predicted = sum(group_pred)
+            if deadline is not None:
+                priced = (self._inflight_predicted + predicted
+                          ) * self.admission_slack
+                if priced > deadline:
+                    self.rejected += 1
+                    raise AdmissionError(
+                        f"ticket {uid}: predicted {predicted:.4g}s "
+                        f"(+{self._inflight_predicted:.4g}s queued) × "
+                        f"slack {self.admission_slack} exceeds deadline "
+                        f"{deadline}s")
+
+        run_group = self._make_runner(be, backend, qs, d, plan)
+        ticket = QueryTicket(
+            self, uid, queries, d, backend, deadline=deadline,
+            predicted_seconds=predicted, interactions=interactions,
+            order=order, plan=plan, groups=groups, group_ints=group_ints,
+            group_pred=group_pred, run_group=run_group, on_slice=on_slice)
+        if backend == "shard":
+            ticket.routing = run_group.dispatcher.router.stats
+        self._inflight_interactions += interactions
+        self._inflight_predicted += predicted or 0.0
+        self._queue.append(ticket)
+        self.submitted += 1
+        return ticket
+
+    def _make_runner(self, be, backend: str, qs: SegmentArray, d: float,
+                     plan: QueryPlan | None):
+        """The per-ticket group runner.  Engine backends share one
+        dispatcher across the ticket's groups (jit cache, pad instants);
+        ``backend="shard"`` fans out through a fresh ``PodRouter``."""
+        if plan is None:
+            def run_whole(group, _be=be, _qs=qs, _d=d):
+                rs, stats = _be.run(_qs, _d, None)
+                return rs, stats
+            return run_whole
+        if backend == "shard":
+            from repro.core.distributed import PodRouter
+            router = PodRouter(be.engine)
+            dispatcher = router.dispatcher(qs.packed(), d)
+        else:
+            dispatcher = be.engine.dispatcher(qs.packed(), d)
+        return _GroupRunner(dispatcher, plan)
+
+    # -- the pump ---------------------------------------------------------
+    def step(self) -> bool:
+        """Execute the next pending dispatch group (one pipelined two-phase
+        dispatch, ≤ 2 host syncs) and deliver its slice.  Returns ``False``
+        when nothing is pending — the serving loop's idle signal."""
+        if not self._queue:
+            return False
+        ticket = self._queue[0]
+        if (ticket.deadline is not None
+                and time.perf_counter() - ticket.submitted_at
+                > ticket.deadline):
+            self._fail(ticket, DeadlineExceededError(
+                f"ticket {ticket.uid}: deadline {ticket.deadline}s passed "
+                f"with {ticket.groups_completed}/{ticket.num_groups} "
+                f"groups delivered"))
+            return True
+        g = ticket._groups[ticket._next_group]
+        t0 = time.perf_counter()
+        try:
+            rs_part, stats = ticket._run_group(g)
+        except Exception as e:
+            self._fail(ticket, e)
+            return True
+        self._deliver(ticket, g, rs_part, stats,
+                      time.perf_counter() - t0)
+        return True
+
+    def run_until_idle(self) -> int:
+        """Pump until no work is pending; returns pump steps executed."""
+        steps = 0
+        while self.step():
+            steps += 1
+        return steps
+
+    # -- internals --------------------------------------------------------
+    def _release(self, ticket: QueryTicket, from_group: int) -> None:
+        self._inflight_interactions -= sum(ticket._group_ints[from_group:])
+        self._inflight_predicted -= sum(ticket._group_pred[from_group:])
+
+    def _fail(self, ticket: QueryTicket, error: BaseException) -> None:
+        ticket._error = error
+        ticket._run_group = None       # drop the dispatcher's packed copies
+        self._release(ticket, ticket._next_group)
+        self._queue.remove(ticket)
+        self.errored += 1
+
+    def _deliver(self, ticket: QueryTicket, group, rs_part,
+                 stats: ExecStats | None, seconds: float) -> None:
+        sliced = QueryResult.from_result_set(
+            rs_part, order=ticket._order, d=ticket.d,
+            backend=ticket.backend)
+        gi = ticket._next_group
+        slice_ = GroupSlice(
+            group_index=gi, num_groups=ticket.num_groups,
+            batch_indices=list(group) if group is not None else [],
+            result=sliced,
+            num_syncs=stats.num_syncs if stats is not None else 0,
+            seconds=seconds)
+        ticket._slices.append(slice_)
+        ticket._parts.append(rs_part)
+        ticket._next_group += 1
+        self._inflight_interactions -= ticket._group_ints[gi]
+        self._inflight_predicted -= ticket._group_pred[gi]
+        if ticket._next_group == ticket.num_groups:
+            # Finalize through the exact transform db.query uses
+            # (ResultSet.concatenate + from_result_set) so the canonical
+            # equivalence is structural, not re-implemented.
+            ticket._final = QueryResult.from_result_set(
+                ResultSet.concatenate(ticket._parts), order=ticket._order,
+                d=ticket.d, backend=ticket.backend)
+            # Completed tickets may be retained by callers (audit logs,
+            # response caches): drop everything execution-only — the raw
+            # parts, the runner (whose dispatcher holds packed query
+            # copies), the sort permutation and the partial cache.
+            ticket._parts = []
+            ticket._run_group = None
+            ticket._order = None
+            ticket._partial_cache = None
+            self._queue.popleft()
+            self.completed += 1
+        if ticket.on_slice is not None:
+            ticket.on_slice(ticket, slice_)
+
+
+class _GroupRunner:
+    """Bound (dispatcher, plan) pair: runs one dispatch group as a
+    single-group sub-plan through the pipelined executor (≤ 2 host syncs
+    per call)."""
+
+    def __init__(self, dispatcher, plan: QueryPlan):
+        self.dispatcher = dispatcher
+        self.plan = plan
+
+    def __call__(self, group: list[int]):
+        executor = PipelinedExecutor(self.dispatcher)
+        return executor.run(self.plan.subplan(group))
+
+
+__all__ = [
+    "AdmissionError", "DeadlineExceededError", "GroupSlice", "QueryBroker",
+    "QueryTicket", "DONE", "ERROR", "PARTIAL", "PENDING",
+]

@@ -1,32 +1,28 @@
-"""Trajectory-native serving front door.
+"""Deprecated blocking submit/drain shell over ``db.query_stream``.
 
-The serving layer previously only spoke LLM requests (``serve.engine`` /
-``serve.batcher``); this module gives it the paper's actual workload — an
-online stream of distance-threshold queries (§3) — on top of the
-:mod:`repro.api` facade.
+.. deprecated::
+    :class:`TrajectoryQueryService` is superseded by the session-oriented
+    :class:`repro.serve.broker.QueryBroker` — ticketed async ``submit()``,
+    incremental per-group result slices, §8-model admission control and
+    per-pod shard routing.  This module stays for one release as a thin
+    shim (constructing the service emits a ``DeprecationWarning``) so
+    existing submit/drain callers keep working.
 
-:class:`TrajectoryQueryService` is a minimal request/response shell around
-``TrajectoryDB.query_stream``: callers ``submit()`` query sets as they
-arrive and ``drain()`` executes everything pending through the
-deadline/re-issue scheduler, so one straggling batch *group* cannot stall
-the stream.  Since PR 3 the scheduler's unit of work is a batch group (≥ 2
-batches per worker call by default, ``ExecutionPolicy.stream_group_size``
-to override) executed as one pipelined two-phase dispatch — ≤ 2 host syncs
-per group — so streamed serving keeps the engine's O(1)-sync property;
-``QueryResponse.scheduler`` reports the group accounting
-(``groups`` / ``group_sizes`` / ``batches_per_call``).  The service is
-intentionally synchronous — the async transport (HTTP, queues, routing
-across ``backend="shard"`` pods) layers on *top* of this API without
-touching query semantics, which is exactly the seam the ROADMAP's serving
-work needs.
+What changed besides the deprecation: ``drain()`` no longer *loses* a
+request whose execution raises.  The failed request is surfaced as an
+errored :class:`QueryResponse` (``response.error`` set, ``result`` ``None``)
+so callers can inspect and retry; the remaining queue drains normally.
+And because ``db.query_stream`` now routes ``backend="shard"`` through the
+per-pod ``PodRouter``, the service accepts the sharded backend too.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable
 
-from repro.api import ExecutionPolicy, QueryResult, TrajectoryDB
+from repro.api import ENGINE_BACKENDS, ExecutionPolicy, QueryResult, TrajectoryDB
 from repro.core.scheduler import SchedulerStats
 from repro.core.segments import SegmentArray
 
@@ -44,18 +40,26 @@ class QueryRequest:
 @dataclasses.dataclass
 class QueryResponse:
     uid: int
-    result: QueryResult
+    result: QueryResult | None
     scheduler: SchedulerStats
     latency_seconds: float   # submit → completion (includes queueing)
+    #: the exception a failed request raised (``None`` on success) — the
+    #: request is consumed either way; callers retry by resubmitting.
+    error: BaseException | None = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
 
 
 class TrajectoryQueryService:
-    """Online distance-threshold query service over one ``TrajectoryDB``.
+    """Deprecated online query service over one ``TrajectoryDB`` (use
+    :class:`repro.serve.broker.QueryBroker`).
 
     Example::
 
         db = TrajectoryDB.from_scenario("S2", scale=0.02)
-        svc = TrajectoryQueryService(db, backend="jnp")
+        svc = TrajectoryQueryService(db, backend="jnp")   # DeprecationWarning
         uid = svc.submit(db.scenario_queries, db.scenario_d)
         responses = svc.drain()           # {uid: QueryResponse}
     """
@@ -63,11 +67,16 @@ class TrajectoryQueryService:
     def __init__(self, db: TrajectoryDB, *, backend: str = "jnp",
                  policy: ExecutionPolicy | None = None,
                  predict_seconds: Callable | None = None):
-        if backend not in ("pallas", "jnp"):
+        warnings.warn(
+            "TrajectoryQueryService is deprecated; use repro.serve."
+            "QueryBroker (db.broker(...)) — ticketed submit(), step()/"
+            "run_until_idle() pumping and incremental result slices",
+            DeprecationWarning, stacklevel=2)
+        if backend not in ENGINE_BACKENDS:
             raise ValueError(
                 "TrajectoryQueryService streams through the scheduler and "
-                "therefore needs a single-device engine backend "
-                f"('pallas'/'jnp'), got {backend!r}")
+                f"therefore needs an engine backend {ENGINE_BACKENDS}, "
+                f"got {backend!r}")
         self.db = db
         self.backend = backend
         self.policy = policy or db.policy
@@ -75,6 +84,7 @@ class TrajectoryQueryService:
         self._next_uid = 0
         self._pending: list[QueryRequest] = []
         self.completed = 0
+        self.failed = 0
 
     # ------------------------------------------------------------------
     def submit(self, queries: SegmentArray, d: float) -> int:
@@ -93,15 +103,28 @@ class TrajectoryQueryService:
     # ------------------------------------------------------------------
     def drain(self) -> dict[int, QueryResponse]:
         """Execute every pending request through ``query_stream`` and
-        return responses keyed by request id."""
+        return responses keyed by request id.
+
+        A request that raises is returned as an *errored* response
+        (``response.error`` set) instead of being silently dropped — the
+        queue keeps draining and callers can retry the failed uid's
+        payload.
+        """
         out: dict[int, QueryResponse] = {}
-        # Pop one at a time so a request that raises only loses itself —
-        # the rest of the queue stays pending for the next drain().
         while self._pending:
             req = self._pending.pop(0)
-            result, sstats = self.db.query_stream(
-                req.queries, req.d, backend=self.backend, policy=self.policy,
-                predict_seconds=self.predict_seconds)
+            try:
+                result, sstats = self.db.query_stream(
+                    req.queries, req.d, backend=self.backend,
+                    policy=self.policy,
+                    predict_seconds=self.predict_seconds)
+            except Exception as e:
+                out[req.uid] = QueryResponse(
+                    uid=req.uid, result=None, scheduler=SchedulerStats(),
+                    latency_seconds=time.perf_counter() - req.submitted_at,
+                    error=e)
+                self.failed += 1
+                continue
             out[req.uid] = QueryResponse(
                 uid=req.uid, result=result, scheduler=sstats,
                 latency_seconds=time.perf_counter() - req.submitted_at)

@@ -258,15 +258,31 @@ def test_query_stream_matches_query(scenario_db):
     assert len(res2) == len(base)
     with pytest.raises(ValueError):
         db.query_stream(queries, d, backend="rtree")
-    with pytest.raises(ValueError):
-        db.query_stream(queries, d, backend="shard")
+
+
+def test_query_stream_shard_routes_per_pod(scenario_db):
+    """PR 4: query_stream reaches the ShardedEngine pods — groups route
+    through the PodRouter and SchedulerStats carries the routing view."""
+    db = scenario_db
+    queries, d = db.scenario_queries, db.scenario_d
+    base = db.query(queries, d)
+    res, sched = db.query_stream(queries, d, backend="shard")
+    assert len(res) == len(base)
+    for a, b in zip(_rows(res), _rows(base)):
+        np.testing.assert_array_equal(a, b)
+    assert sched.completed == res.plan.num_batches
+    assert sched.routing is not None
+    assert sched.routing.batches >= res.plan.num_batches   # incl. re-issue
+    assert sched.routing.num_pods >= 1
+    assert int(sched.routing.pod_hits.sum()) >= len(base)
 
 
 def test_trajectory_query_service(scenario_db):
     from repro.serve import TrajectoryQueryService
     db = scenario_db
     queries, d = db.scenario_queries, db.scenario_d
-    svc = TrajectoryQueryService(db, backend="jnp")
+    with pytest.warns(DeprecationWarning, match="QueryBroker"):
+        svc = TrajectoryQueryService(db, backend="jnp")
     base = db.query(queries, d)
     rng = np.random.default_rng(3)
     shuffled = queries.take(rng.permutation(len(queries)))
@@ -276,11 +292,44 @@ def test_trajectory_query_service(scenario_db):
     responses = svc.drain()
     assert svc.pending == 0 and svc.completed == 2
     assert set(responses) == {u1, u2}
+    assert responses[u1].ok and responses[u2].ok
     assert len(responses[u1].result) == len(base)
     assert len(responses[u2].result) == len(base)
     assert responses[u1].latency_seconds > 0
-    with pytest.raises(ValueError):
-        TrajectoryQueryService(db, backend="brute")
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError):
+            TrajectoryQueryService(db, backend="brute")
+
+
+def test_trajectory_query_service_drain_surfaces_errors(scenario_db,
+                                                        monkeypatch):
+    """Satellite regression: a request that raises must come back as an
+    errored QueryResponse (previously it was popped and silently lost) and
+    the rest of the queue must still drain."""
+    from repro.serve import TrajectoryQueryService
+    db = scenario_db
+    queries, d = db.scenario_queries, db.scenario_d
+    with pytest.warns(DeprecationWarning):
+        svc = TrajectoryQueryService(db, backend="jnp")
+    u_bad = svc.submit(queries, d)
+    u_ok = svc.submit(queries, d)
+    orig = db.query_stream
+    calls = {"n": 0}
+
+    def flaky(q, dd, **kw):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("injected executor failure")
+        return orig(q, dd, **kw)
+
+    monkeypatch.setattr(db, "query_stream", flaky)
+    responses = svc.drain()
+    assert set(responses) == {u_bad, u_ok}
+    assert not responses[u_bad].ok
+    assert responses[u_bad].result is None
+    assert isinstance(responses[u_bad].error, RuntimeError)
+    assert responses[u_ok].ok and len(responses[u_ok].result) > 0
+    assert svc.failed == 1 and svc.completed == 1 and svc.pending == 0
 
 
 # ----------------------------------------------------------------------

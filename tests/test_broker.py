@@ -1,0 +1,297 @@
+"""The session-oriented serving API (PR 4): QueryBroker ticket lifecycle,
+incremental per-group slices, admission control, backpressure, per-pod
+routing, and the §8-model-derived dispatch-group sizing."""
+import time
+
+import numpy as np
+import pytest
+
+from conftest import random_segments
+from repro.api import BACKENDS, ExecutionPolicy, TrajectoryDB
+from repro.core.planner import (AUTO_GROUP_HIT_FRACTION, AUTO_GROUP_HIT_ROWS,
+                                QueryPlanner, derive_group_size)
+from repro.core.segments import SegmentArray
+from repro.serve.broker import (AdmissionError, DeadlineExceededError,
+                                QueryBroker, QueryTicket)
+
+_FIELDS = ("entry_idx", "entry_traj", "entry_seg", "query_idx",
+           "t_enter", "t_exit")
+
+
+@pytest.fixture(scope="module")
+def world():
+    rng = np.random.default_rng(42)
+    db = TrajectoryDB.from_segments(
+        random_segments(rng, 700),
+        policy=ExecutionPolicy(num_bins=64, batching="periodic",
+                               batch_params={"s": 16}))
+    queries = random_segments(rng, 96)      # sorted by construction
+    return db, queries, 4.0
+
+
+def _assert_identical(res, base, label=""):
+    for f in _FIELDS:
+        np.testing.assert_array_equal(getattr(res, f), getattr(base, f),
+                                      err_msg=f"{label}:{f}")
+
+
+# ----------------------------------------------------------------------
+# Ticket lifecycle: pending -> partial -> done.
+# ----------------------------------------------------------------------
+def test_ticket_lifecycle_and_incremental_slices(world):
+    db, queries, d = world
+    base = db.query(queries, d, backend="jnp")
+    broker = db.broker(backend="jnp")
+    delivered = []
+    ticket = broker.submit(queries, d, group_size=2,
+                           on_slice=lambda tk, sl: delivered.append(sl))
+    assert isinstance(ticket, QueryTicket)
+    assert ticket.state == "pending" and not ticket.done()
+    assert ticket.num_groups >= 2
+    assert len(ticket.partial()) == 0
+
+    assert broker.step()                       # one dispatch group
+    assert ticket.state == "partial"
+    assert 0 < ticket.groups_completed < ticket.num_groups
+    first = len(ticket.partial())
+
+    broker.run_until_idle()
+    assert ticket.state == "done" and ticket.done()
+    assert broker.pending == 0 and not broker.step()
+    assert ticket.exception() is None
+    assert len(delivered) == ticket.num_groups
+    assert len(ticket.partial()) == len(base) >= first
+
+    # incremental slices concatenate to the exact canonical result (the
+    # acceptance criterion): sorted-caller slices are canonical prefixes.
+    for f in _FIELDS:
+        concat = np.concatenate([getattr(s.result, f) for s in delivered])
+        np.testing.assert_array_equal(concat, getattr(base, f), err_msg=f)
+    _assert_identical(ticket.result(), base)
+
+    # every slice was one pipelined two-phase dispatch: <= 2 host syncs
+    assert all(s.num_syncs <= 2 for s in delivered)
+    assert [s.group_index for s in delivered] == list(
+        range(ticket.num_groups))
+
+
+def test_result_pumps_the_broker(world):
+    """submit() + result() with no explicit step()/run_until_idle()."""
+    db, queries, d = world
+    base = db.query(queries, d, backend="jnp")
+    ticket = db.broker(backend="jnp").submit(queries, d, group_size=3)
+    _assert_identical(ticket.result(timeout=120.0), base)
+    assert ticket.state == "done"
+
+
+def test_empty_submit_is_immediately_done(world):
+    db, _, d = world
+    ticket = db.broker().submit(SegmentArray.empty(), d)
+    assert ticket.state == "done" and len(ticket.result()) == 0
+
+
+# ----------------------------------------------------------------------
+# Acceptance: byte-identical results across all five backends.
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_slices_concatenate_to_canonical_result_all_backends(world, backend):
+    db, queries, d = world
+    base = db.query(queries, d, backend=backend)
+    broker = db.broker(backend=backend)
+    ticket = broker.submit(queries, d, group_size=2)
+    broker.run_until_idle()
+    # slice concatenation == canonical result, byte-identical
+    for f in _FIELDS:
+        concat = np.concatenate(
+            [getattr(s.result, f) for s in ticket.slices()])
+        np.testing.assert_array_equal(concat, getattr(base, f),
+                                      err_msg=(backend, f))
+    _assert_identical(ticket.result(), base, backend)
+    assert all(s.num_syncs <= 2 for s in ticket.slices())
+
+
+def test_unsorted_queries_finalize_to_caller_order(world):
+    """Shuffled submissions still finalize to db.query's canonical result
+    (per-slice order is canonical within the slice; finalize re-sorts)."""
+    db, queries, d = world
+    rng = np.random.default_rng(7)
+    shuffled = queries.take(rng.permutation(len(queries)))
+    assert not shuffled.is_sorted()
+    base = db.query(shuffled, d, backend="jnp")
+    ticket = db.broker(backend="jnp").submit(shuffled, d, group_size=2)
+    _assert_identical(ticket.result(), base)
+
+
+def test_shard_ticket_routing_stats(world):
+    """backend="shard" tickets fan groups out through the PodRouter and
+    expose per-pod routing accounting."""
+    db, queries, d = world
+    base = db.query(queries, d, backend="shard")
+    broker = db.broker(backend="shard")
+    ticket = broker.submit(queries, d, group_size=2)
+    _assert_identical(ticket.result(), base, "shard")
+    rt = ticket.routing
+    assert rt is not None and rt.num_pods >= 1
+    # only batches with candidates are dispatched (and hence routed)
+    dispatched = sum(1 for b in ticket.plan.batches if b.num_candidates > 0)
+    assert rt.batches == dispatched
+    assert len(rt.pods_per_batch) == rt.batches
+    assert int(rt.pod_hits.sum()) == len(base)
+
+
+# ----------------------------------------------------------------------
+# Admission control + backpressure.
+# ----------------------------------------------------------------------
+def test_backpressure_rejection_and_recovery(world):
+    db, queries, d = world
+    probe = db.broker().submit(queries, d)
+    budget = probe.interactions + probe.interactions // 2   # fits 1, not 2
+    probe.result()
+
+    broker = db.broker(backend="jnp",
+                       max_inflight_interactions=budget)
+    t1 = broker.submit(queries, d)
+    assert broker.inflight_interactions == t1.interactions
+    with pytest.raises(AdmissionError, match="budget"):
+        broker.submit(queries, d)
+    assert broker.rejected == 1 and broker.pending == 1
+    broker.run_until_idle()                  # drain releases the budget
+    assert broker.inflight_interactions == 0
+    t2 = broker.submit(queries, d)           # now admitted
+    assert len(t2.result()) == len(t1.result())
+
+
+def test_deadline_priced_admission(world):
+    """§8-model pricing: a ticket whose predicted time x slack exceeds its
+    deadline is rejected at submit; without a deadline it is admitted."""
+    db, queries, d = world
+    broker = db.broker(backend="jnp", admission_slack=4.0,
+                       predict_seconds=lambda b: 1e-6 * b.num_ints)
+    with pytest.raises(AdmissionError, match="deadline"):
+        broker.submit(queries, d, deadline=1e-12)
+    assert broker.rejected == 1
+    ticket = broker.submit(queries, d)       # no deadline: admitted
+    assert ticket.predicted_seconds is not None
+    assert ticket.predicted_seconds > 0
+    ticket2 = broker.submit(queries, d, deadline=3600.0)  # loose: admitted
+    broker.run_until_idle()
+    assert ticket.state == ticket2.state == "done"
+
+
+def test_deadline_exceeded_mid_flight(world):
+    db, queries, d = world
+    broker = db.broker(backend="jnp")
+    ticket = broker.submit(queries, d, deadline=0.02, group_size=1)
+    time.sleep(0.05)
+    broker.run_until_idle()
+    assert ticket.state == "error"
+    assert isinstance(ticket.exception(), DeadlineExceededError)
+    with pytest.raises(DeadlineExceededError):
+        ticket.result()
+
+
+# ----------------------------------------------------------------------
+# Error lifecycle.
+# ----------------------------------------------------------------------
+def test_errored_ticket_does_not_poison_the_queue(world):
+    db, queries, d = world
+    broker = db.broker(backend="jnp")
+    bad = broker.submit(queries, d, group_size=2)
+    good = broker.submit(queries, d, group_size=2)
+
+    def explode(group):
+        raise RuntimeError("injected dispatch failure")
+
+    bad._run_group = explode
+    broker.run_until_idle()
+    assert bad.state == "error" and good.state == "done"
+    assert isinstance(bad.exception(), RuntimeError)
+    assert broker.errored == 1 and broker.completed == 1
+    assert broker.inflight_interactions == 0     # budget fully released
+    with pytest.raises(RuntimeError, match="injected"):
+        bad.result()
+    # partial results delivered before the failure stay readable
+    assert len(bad.partial()) >= 0
+    # retry is a fresh submit
+    retry = broker.submit(queries, d, group_size=2)
+    _assert_identical(retry.result(), good.result())
+
+
+def test_result_timeout_keeps_ticket_alive(world):
+    db, queries, d = world
+    broker = db.broker(backend="jnp")
+    stall = broker.submit(queries, d, group_size=1)
+    orig = stall._run_group
+
+    def slow(group):
+        time.sleep(0.05)
+        return orig(group)
+
+    stall._run_group = slow
+    with pytest.raises(TimeoutError):
+        stall.result(timeout=0.0)
+    assert not stall.done() and broker.pending == 1
+    stall._run_group = orig
+    assert len(stall.result()) >= 0 and stall.state == "done"
+
+
+# ----------------------------------------------------------------------
+# Model-derived dispatch-group sizing (satellite).
+# ----------------------------------------------------------------------
+class TestDeriveGroupSize:
+    def _batches(self, db, queries, s=8):
+        plan = db.plan(queries, db.policy.with_(batching="periodic",
+                                                batch_params={"s": s}))
+        return plan.batches
+
+    def test_low_hit_volume_keeps_single_group(self, world):
+        db, queries, _ = world
+        batches = self._batches(db, queries)
+        assert derive_group_size(batches) is None          # heuristic α
+        assert derive_group_size(batches,
+                                 predict_hits=lambda b: 0.0) is None
+
+    def test_high_hit_volume_splits(self, world):
+        db, queries, _ = world
+        batches = self._batches(db, queries)
+        # model predicts every interaction hits -> marshalling dominates
+        gs = derive_group_size(batches, predict_hits=lambda b: b.num_ints,
+                               target_hit_rows=1024)
+        assert gs is not None and 1 <= gs < len(batches)
+        # planner honors an explicit size over the derivation
+        planner = QueryPlanner(db.index, algorithm="periodic",
+                               params={"s": 8}, group_size=3)
+        qs, _ = TrajectoryDB._sorted(queries)
+        plan = planner.plan(qs)
+        assert all(len(g) <= 3 for g in plan.groups)
+        assert plan.num_groups == -(-plan.num_batches // 3)
+
+    def test_planner_derives_when_group_size_none(self, world):
+        db, queries, _ = world
+        qs, _ = TrajectoryDB._sorted(queries)
+        hot = QueryPlanner(db.index, algorithm="periodic", params={"s": 8},
+                           predict_hits=lambda b: float(b.num_ints))
+        nb = hot.plan(qs).num_batches
+        expected = derive_group_size(self._batches(db, queries),
+                                     predict_hits=lambda b: b.num_ints)
+        if expected is None:
+            assert hot.plan(qs).num_groups == 1
+        else:
+            assert hot.plan(qs).num_groups > 1
+        cold = QueryPlanner(db.index, algorithm="periodic", params={"s": 8})
+        assert cold.plan(qs).num_groups == 1               # default shape
+        assert cold.plan(qs).num_batches == nb
+
+    def test_fraction_heuristic_threshold(self):
+        """The default derivation flips to multi-group exactly when the
+        α-scaled interaction volume crosses the hit-row target."""
+        import dataclasses as dc
+        from repro.core.batching import QueryBatch
+        mk = lambda ints: QueryBatch(0, 0, 0.0, 1.0, 0, 0, ints)
+        small = [mk(100)] * 8
+        assert derive_group_size(small) is None
+        per_batch = int(AUTO_GROUP_HIT_ROWS / AUTO_GROUP_HIT_FRACTION)
+        big = [mk(per_batch)] * 8
+        gs = derive_group_size(big)
+        assert gs is not None and gs <= 4
+        assert derive_group_size(big[:1]) is None          # < 2 batches

@@ -247,6 +247,29 @@ class TestPlannerExecutorSplit:
         disp = eng.dispatcher(queries.packed(), d)
         assert isinstance(disp, BatchDispatcher)
 
+    @pytest.mark.parametrize("pipeline", [True, False])
+    def test_group_completion_hook_streams_groups(self, world, pipeline):
+        """PR 4: on_group fires once per dispatch group, in group order,
+        and the streamed parts concatenate to the full result — on both
+        executors."""
+        from repro.core.executor import ResultSet
+        from repro.core.planner import QueryPlanner
+        db, queries, d, bf = world
+        eng = DistanceThresholdEngine(db, num_bins=128)
+        planner = QueryPlanner(eng.index, algorithm="periodic",
+                               params={"s": 16}, group_size=2)
+        qplan = planner.plan(queries)
+        assert qplan.num_groups >= 2
+        seen = []
+        rs, stats = eng.execute(
+            queries, d, qplan, pipeline=pipeline,
+            on_group=lambda gi, g, part: seen.append((gi, g, part)))
+        assert [gi for gi, _, _ in seen] == list(range(qplan.num_groups))
+        assert [g for _, g, _ in seen] == qplan.groups
+        streamed = ResultSet.concatenate([p for _, _, p in seen])
+        _check_equal(streamed.sorted_canonical(), bf)
+        assert len(streamed) == len(rs)
+
 
 class TestBucket:
     def test_bucket_edge_cases(self):
