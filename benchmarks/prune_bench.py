@@ -1,0 +1,180 @@
+"""PR 5 pruning benchmark: two-level spatiotemporal candidate pruning.
+
+Three sections feed ``BENCH_PR5.json`` (written by ``benchmarks/run.py
+--only bench_pr5``; compared back-to-back against ``BENCH_PR4.json``):
+
+* ``executor``    — the BENCH_PR2/PR3/PR4 S2 executor rows re-run on this
+                    tree (regressable 1:1 against ``BENCH_PR4.json``;
+                    S2 has no exploitable space-time correlation, so these
+                    rows also demonstrate pruning costs nothing where it
+                    cannot win).
+* ``pruning``     — the spatially-clustered range-monitoring scenario C1
+                    (drifting swarm × static clustered sensors) end to end,
+                    pruning on vs off per backend: wall time, dispatched
+                    interactions, planner-pruned interactions, kernel
+                    pruned-tile fraction, and the headline speedup ratio
+                    (the ≥ 1.3× acceptance criterion).
+* ``selectivity`` — a spatial-selectivity sweep over the threshold ``d``
+                    on C1: as ``d`` grows the MBR test keeps more bins, so
+                    the pruned fraction falls and the pruned/unpruned wall
+                    times converge — the knee is the regime boundary.
+
+Run directly::
+
+    PYTHONPATH=src python -m benchmarks.prune_bench [--quick] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from benchmarks import kernel_bench
+
+
+def _c1_world(scale: float, s: int = 8):
+    from repro.api import ExecutionPolicy, TrajectoryDB
+    policy = ExecutionPolicy(batching="periodic", batch_params={"s": s},
+                             num_bins=500)
+    db = TrajectoryDB.from_scenario("C1", scale=scale, policy=policy)
+    return db, db.scenario_queries, db.scenario_d
+
+
+def _best_of(fn, repeats: int):
+    runs = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        runs.append((time.perf_counter() - t0, out))
+    sec, out = min(runs, key=lambda r: r[0])
+    return sec, out
+
+
+def run_pruning(scale: float = 0.05, repeats: int = 2) -> list[dict]:
+    """C1 end to end, pruning on vs off, for the engine backends."""
+    db, queries, d = _c1_world(scale)
+    rows = []
+    for backend in ("jnp", "pallas"):
+        walls = {}
+        for pruning in ("none", "spatial"):
+            def call(backend=backend, pruning=pruning):
+                return db.query(queries, d, backend=backend,
+                                pruning=pruning)
+            call()                                          # warm jit
+            sec, res = _best_of(call, repeats)
+            walls[pruning] = sec
+            st = res.stats
+            tiles = st.total_tiles
+            rows.append({
+                "bench": "pruning", "scenario": "C1", "scale": scale,
+                "backend": backend, "pruning": pruning,
+                "total_seconds": sec,
+                "dispatched_interactions": st.total_interactions,
+                "pruned_interactions": st.pruned_interactions,
+                "interactions_per_s": st.total_interactions / sec,
+                "pruned_tile_fraction": (st.pruned_tiles / tiles
+                                         if tiles else 0.0),
+                "num_batches": res.plan.num_batches,
+                "total_hits": st.total_hits,
+                "num_syncs": st.num_syncs,
+            })
+        rows[-1]["speedup_vs_none"] = walls["none"] / walls["spatial"]
+    return rows
+
+
+def run_selectivity(scale: float = 0.05,
+                    d_values=(2.0, 5.0, 20.0, 80.0, 320.0),
+                    repeats: int = 2) -> list[dict]:
+    """Sweep the threshold: pruned fraction vs wall time, on vs off."""
+    db, queries, _ = _c1_world(scale)
+    rows = []
+    for d in d_values:
+        walls = {}
+        for pruning in ("none", "spatial"):
+            def call(d=d, pruning=pruning):
+                return db.query(queries, float(d), backend="jnp",
+                                pruning=pruning)
+            call()
+            sec, res = _best_of(call, repeats)
+            walls[pruning] = sec
+            if pruning == "spatial":
+                st = res.stats
+                total = st.total_interactions + st.pruned_interactions
+                rows.append({
+                    "bench": "selectivity", "scenario": "C1",
+                    "scale": scale, "d": float(d),
+                    "pruned_fraction": (st.pruned_interactions / total
+                                        if total else 0.0),
+                    "interactions_per_s": st.total_interactions
+                    / walls["spatial"],
+                    "seconds_spatial": walls["spatial"],
+                    "total_hits": st.total_hits,
+                })
+        rows[-1]["seconds_none"] = walls["none"]
+        rows[-1]["speedup"] = walls["none"] / walls["spatial"]
+    return rows
+
+
+def canonical_report_pr5(*, quick: bool = False) -> dict:
+    """The BENCH_PR5 payload: S2 executor rows re-run on this tree
+    (regressable 1:1 against ``BENCH_PR4.json``) plus the pruning and
+    selectivity sections on the clustered scenario."""
+    s2_scale = 0.005 if quick else 0.01
+    c1_scale = 0.02 if quick else 0.05
+    repeats = 1 if quick else 3
+    return {"bench": "BENCH_PR5", "scenario": "S2+C1", "scale": s2_scale,
+            "c1_scale": c1_scale, "quick": quick,
+            "baseline": "BENCH_PR4.json",
+            "executor": kernel_bench.run_executor(scale=s2_scale,
+                                                  repeats=repeats),
+            "pruning": run_pruning(scale=c1_scale, repeats=repeats),
+            "selectivity": run_selectivity(
+                scale=c1_scale, repeats=repeats,
+                d_values=(2.0, 20.0, 320.0) if quick
+                else (2.0, 5.0, 20.0, 80.0, 320.0))}
+
+
+def print_pruning_rows(rows: list[dict]) -> None:
+    for r in rows:
+        extra = (f",speedup={r['speedup_vs_none']:.2f}x"
+                 if "speedup_vs_none" in r else "")
+        print(f"pruning,{r['backend']},pruning={r['pruning']},"
+              f"total_s={r['total_seconds']:.3f},"
+              f"ints={r['dispatched_interactions']},"
+              f"pruned_ints={r['pruned_interactions']},"
+              f"pruned_tiles={r['pruned_tile_fraction']:.2f},"
+              f"hits={r['total_hits']}{extra}")
+
+
+def print_selectivity_rows(rows: list[dict]) -> None:
+    for r in rows:
+        print(f"selectivity,d={r['d']},"
+              f"pruned_frac={r['pruned_fraction']:.3f},"
+              f"s_spatial={r['seconds_spatial']:.3f},"
+              f"s_none={r['seconds_none']:.3f},"
+              f"speedup={r['speedup']:.2f}x,hits={r['total_hits']}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizes (seconds, not minutes)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the canonical BENCH_PR5 report to PATH")
+    args = ap.parse_args(argv)
+    report = canonical_report_pr5(quick=args.quick)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# wrote {args.json}")
+    kernel_bench.print_executor_rows(report["executor"])
+    print_pruning_rows(report["pruning"])
+    print_selectivity_rows(report["selectivity"])
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,6 +26,12 @@ The ``bench_pr4`` entry writes ``BENCH_PR4.json`` (see
 ``TrajectoryQueryService.drain()`` vs the ``QueryBroker`` pump, with
 per-request latency distributions and time-to-first-slice) and the
 sharded-routing section (pod-partition balance time vs num_ints).
+
+The ``bench_pr5`` entry writes ``BENCH_PR5.json`` (see
+``benchmarks.prune_bench``): the S2 executor rows again (ratioed against
+``BENCH_PR4.json``), the spatiotemporal-pruning comparison on the
+clustered C1 scenario (pruning on vs off: wall, interactions, pruned-tile
+fraction, speedup) and the spatial-selectivity sweep over ``d``.
 """
 from __future__ import annotations
 
@@ -47,14 +53,18 @@ def main(argv=None) -> int:
                     help="path for the bench_pr3 JSON report")
     ap.add_argument("--bench-out4", default="BENCH_PR4.json",
                     help="path for the bench_pr4 JSON report")
+    ap.add_argument("--bench-out5", default="BENCH_PR5.json",
+                    help="path for the bench_pr5 JSON report")
     ap.add_argument("--baseline", default="BENCH_PR2.json",
                     help="baseline report bench_pr3 compares against")
     ap.add_argument("--baseline4", default="BENCH_PR3.json",
                     help="baseline report bench_pr4 compares against")
+    ap.add_argument("--baseline5", default="BENCH_PR4.json",
+                    help="baseline report bench_pr5 compares against")
     args = ap.parse_args(argv)
 
     from benchmarks import (broker_bench, fig3_interactions, kernel_bench,
-                            roofline_report, speedup_vs_rtree,
+                            prune_bench, roofline_report, speedup_vs_rtree,
                             table2_batching, table3_perfmodel)
 
     def bench_pr2():
@@ -98,6 +108,23 @@ def main(argv=None) -> int:
             print(f"# baseline {args.baseline4} not found — no comparison")
         print(f"# bench_pr4 report -> {args.bench_out4}")
 
+    def bench_pr5():
+        report = prune_bench.canonical_report_pr5(quick=not args.full)
+        with open(args.bench_out5, "w") as f:
+            json.dump(report, f, indent=2)
+        kernel_bench.print_executor_rows(report["executor"])
+        prune_bench.print_pruning_rows(report["pruning"])
+        prune_bench.print_selectivity_rows(report["selectivity"])
+        if os.path.exists(args.baseline5):
+            with open(args.baseline5) as f:
+                baseline = json.load(f)
+            for line in kernel_bench.compare_executor_sections(report,
+                                                               baseline):
+                print(line)
+        else:
+            print(f"# baseline {args.baseline5} not found — no comparison")
+        print(f"# bench_pr5 report -> {args.bench_out5}")
+
     benches = {
         "fig3": lambda: fig3_interactions.main(),
         "table2": lambda: table2_batching.main(),
@@ -109,6 +136,7 @@ def main(argv=None) -> int:
         "bench_pr2": bench_pr2,
         "bench_pr3": bench_pr3,
         "bench_pr4": bench_pr4,
+        "bench_pr5": bench_pr5,
         "roofline": lambda: roofline_report.main(),
     }
     only = set(args.only.split(",")) if args.only else None

@@ -66,7 +66,7 @@ from repro.core.batching import ALGORITHMS, BatchPlan
 from repro.core.engine import (DistanceThresholdEngine, ExecStats, ResultSet,
                                brute_force)
 from repro.core.index import DEFAULT_NUM_BINS, TemporalBinIndex
-from repro.core.planner import QueryPlan, QueryPlanner
+from repro.core.planner import PRUNINGS, QueryPlan, QueryPlanner
 from repro.core.rtree import RTreeEngine
 from repro.core.scheduler import DeadlineScheduler, SchedulerStats
 from repro.core.segments import SegmentArray
@@ -106,6 +106,14 @@ class ExecutionPolicy:
 
     # -- index ----------------------------------------------------------
     num_bins: int = DEFAULT_NUM_BINS
+    #: two-level spatiotemporal candidate pruning (PR 5): ``"spatial"``
+    #: (default) prices batching against the pruned workload, trims and
+    #: splits each batch's candidate range against the per-bin MBR index,
+    #: and arms the fused kernels' tile-level MBR early-out; ``"none"``
+    #: keeps the paper's temporal-only candidates.  Pruning is exact —
+    #: canonical results are byte-identical either way; only the work (and
+    #: hence the wall time) changes.
+    pruning: str = "spatial"
 
     # -- kernel / device ------------------------------------------------
     cand_blk: int = DEFAULT_CAND_BLK
@@ -348,10 +356,15 @@ class TrajectoryDB:
             interpret=self.policy.interpret, cand_blk=self.policy.cand_blk,
             qry_blk=self.policy.qry_blk,
             default_capacity=self.policy.capacity,
-            compaction=self.policy.compaction, pipeline=self.policy.pipeline)
+            compaction=self.policy.compaction, pipeline=self.policy.pipeline,
+            pruning=self.policy.pruning)
         self.segments: SegmentArray = self._base_engine.db
         self.index: TemporalBinIndex = self._base_engine.index
         self._backends: dict[str, QueryBackend] = {}
+        #: fitted §8 model (see :meth:`fit_response_model`); when set it is
+        #: the default ``predict_hits`` for planning and ``predict_seconds``
+        #: for broker admission.
+        self.response_model = None
         # Populated by from_scenario for convenience.
         self.scenario_queries: SegmentArray | None = None
         self.scenario_d: float | None = None
@@ -399,15 +412,21 @@ class TrajectoryDB:
         different knobs get (and reuse) their own adapters."""
         if name in ("pallas", "jnp"):
             return (pol.interpret, pol.cand_blk, pol.qry_blk, pol.capacity,
-                    pol.compaction, pol.pipeline)
+                    pol.compaction, pol.pipeline, pol.pruning)
         if name == "shard":
-            # compaction only matters on the Pallas path — key on the
-            # effective value so policies differing in an irrelevant knob
-            # share one (expensively constructed) mesh engine.
+            # compaction (and kernel pruning) only matter on the Pallas
+            # path — key on the effective values so policies differing in
+            # an irrelevant knob share one (expensively constructed) mesh
+            # engine.
             compaction = pol.compaction if pol.shard_use_pallas else "dense"
+            # kernel-level pruning exists only on the fused Pallas path
+            # (mirrors ShardedEngine.__init__'s normalization)
+            pruning = (pol.pruning if pol.shard_use_pallas
+                       and compaction in ("fused", "fused_rowloop")
+                       else "none")
             return (pol.shard_pods, pol.shard_capacity, pol.shard_use_pallas,
                     pol.shard_balance, pol.interpret, pol.cand_blk,
-                    pol.qry_blk, compaction, pol.pipeline)
+                    pol.qry_blk, compaction, pol.pipeline, pruning)
         if name == "rtree":
             return (pol.rtree_r, pol.rtree_fanout, pol.rtree_threads)
         return (pol.brute_chunk,)
@@ -431,6 +450,7 @@ class TrajectoryDB:
                 eng.default_capacity = pol.capacity
                 eng.compaction = pol.compaction
                 eng.pipeline = pol.pipeline
+                eng.pruning = pol.pruning
                 self._backends[key] = EngineBackend(name, eng)
             elif name == "shard":
                 from repro.core.distributed import ShardedEngine
@@ -442,7 +462,7 @@ class TrajectoryDB:
                     use_pallas=pol.shard_use_pallas, interpret=pol.interpret,
                     cand_blk=pol.cand_blk, qry_blk=pol.qry_blk,
                     compaction=compaction, pipeline=pol.pipeline,
-                    balance=pol.shard_balance))
+                    balance=pol.shard_balance, pruning=pol.pruning))
             elif name == "rtree":
                 self._backends[key] = RTreeBackend(
                     RTreeEngine(self.segments, r=pol.rtree_r,
@@ -467,26 +487,38 @@ class TrajectoryDB:
                 num_queries: int = 0, backend: str = "jnp") -> QueryPlanner:
         """The :class:`~repro.core.planner.QueryPlanner` a policy resolves
         to — batching algorithm + params, capacity sizing (per-shard for
-        ``backend="shard"``) and executor dispatch grouping."""
+        ``backend="shard"``), spatial pruning and executor dispatch
+        grouping.  A fitted §8 :class:`~repro.core.perfmodel.
+        ResponseTimeModel` attached via :meth:`fit_response_model` feeds
+        the planner's ``predict_hits`` (model-driven dispatch-group
+        sizing replacing the constant hit-fraction default)."""
         pol = pol or self.policy
+        if pol.pruning not in PRUNINGS:
+            raise ValueError(f"unknown pruning {pol.pruning!r}; "
+                             f"choose from {PRUNINGS}")
         capacity = pol.shard_capacity if backend == "shard" else pol.capacity
+        predict_hits = (self.response_model.predict_batch_hits
+                        if self.response_model is not None else None)
         return QueryPlanner(
             self.index, algorithm=pol.batching,
             params=pol.resolved_batch_params(num_queries),
-            default_capacity=capacity, group_size=pol.group_size)
+            default_capacity=capacity, group_size=pol.group_size,
+            pruning=pol.pruning, predict_hits=predict_hits)
 
     def plan(self, queries: SegmentArray,
              policy: ExecutionPolicy | None = None, *,
-             backend: str = "jnp") -> QueryPlan:
+             backend: str = "jnp", d: float | None = None) -> QueryPlan:
         """Build a refined query plan for *sorted-or-not* queries (sorts a
-        copy if needed; the facade's query path reuses this)."""
+        copy if needed; the facade's query path reuses this).  Pass the
+        query threshold ``d`` to get the pruned plan the query path would
+        execute — without it planning is temporal-only."""
         qs, _ = self._sorted(queries)
-        return self._make_plan(qs, policy or self.policy, backend)
+        return self._make_plan(qs, policy or self.policy, backend, d=d)
 
     def _make_plan(self, sorted_queries: SegmentArray, pol: ExecutionPolicy,
-                   backend: str = "jnp") -> QueryPlan:
+                   backend: str = "jnp", d: float | None = None) -> QueryPlan:
         return self.planner(pol, num_queries=len(sorted_queries),
-                            backend=backend).plan(sorted_queries)
+                            backend=backend).plan(sorted_queries, d=d)
 
     @staticmethod
     def _sorted(queries: SegmentArray
@@ -503,7 +535,8 @@ class TrajectoryDB:
                         policy: ExecutionPolicy | None,
                         batch_params: Mapping,
                         compaction: str | None = None,
-                        pipeline: bool | None = None) -> ExecutionPolicy:
+                        pipeline: bool | None = None,
+                        pruning: str | None = None) -> ExecutionPolicy:
         pol = policy or self.policy
         if batching is not None:
             pol = pol.with_(batching=batching, batch_params=None)
@@ -513,6 +546,8 @@ class TrajectoryDB:
             pol = pol.with_(compaction=compaction)
         if pipeline is not None:
             pol = pol.with_(pipeline=pipeline)
+        if pruning is not None:
+            pol = pol.with_(pruning=pruning)
         return pol
 
     # -- the entrypoint --------------------------------------------------
@@ -520,6 +555,7 @@ class TrajectoryDB:
               backend: str = "jnp", batching: str | None = None,
               policy: ExecutionPolicy | None = None,
               compaction: str | None = None, pipeline: bool | None = None,
+              pruning: str | None = None,
               **batch_params) -> QueryResult:
         """Find every (entry segment, query segment) pair within distance
         ``d`` during their temporal overlap.
@@ -529,18 +565,21 @@ class TrajectoryDB:
         caller's order.  ``batching``/``**batch_params`` are shorthand for a
         one-off policy override (e.g. ``batching="periodic", s=48``), as are
         ``compaction=`` ("fused" in-kernel vs "fused_rowloop" gather-free vs
-        "dense" two-phase result compaction) and ``pipeline=`` (async
-        O(1)-sync executor vs per-batch sync loop) for the engine backends
+        "dense" two-phase result compaction), ``pipeline=`` (async
+        O(1)-sync executor vs per-batch sync loop) and ``pruning=``
+        ("spatial" two-level candidate pruning vs "none" — same canonical
+        result, less work) for the engine backends
         (``"pallas"``/``"jnp"``/``"shard"``).
         """
         if len(queries) == 0:
             return QueryResult.from_result_set(
                 ResultSet.empty(), order=None, d=float(d), backend=backend)
         pol = self._resolve_policy(batching, policy, batch_params,
-                                   compaction, pipeline)
+                                   compaction, pipeline, pruning)
         be = self.backend(backend, pol)
         qs, order = self._sorted(queries)
-        plan = self._make_plan(qs, pol, backend) if be.needs_plan else None
+        plan = (self._make_plan(qs, pol, backend, d=float(d))
+                if be.needs_plan else None)
         rs, stats = be.run(qs, float(d), plan)
         return QueryResult.from_result_set(
             rs, order=order, d=float(d), backend=backend,
@@ -552,6 +591,7 @@ class TrajectoryDB:
                      policy: ExecutionPolicy | None = None,
                      compaction: str | None = None,
                      pipeline: bool | None = None,
+                     pruning: str | None = None,
                      predict_seconds: Callable | None = None,
                      delay_hook: Callable | None = None,
                      **batch_params) -> tuple[QueryResult, SchedulerStats]:
@@ -585,7 +625,7 @@ class TrajectoryDB:
                 ResultSet.empty(), order=None, d=float(d), backend=backend),
                 SchedulerStats())
         pol = self._resolve_policy(batching, policy, batch_params,
-                                   compaction, pipeline)
+                                   compaction, pipeline, pruning)
         be = self.backend(backend, pol)
         if backend == "shard":
             from repro.core.distributed import PodRouter
@@ -593,7 +633,9 @@ class TrajectoryDB:
         else:
             engine = be.engine
         qs, order = self._sorted(queries)
-        plan = self._make_plan(qs, pol, backend)
+        plan = self._make_plan(qs, pol, backend, d=float(d))
+        if predict_seconds is None and self.response_model is not None:
+            predict_seconds = self.response_model.predict_batch_seconds
         sched = DeadlineScheduler(
             engine, workers=pol.stream_workers, slack=pol.stream_slack,
             min_deadline=pol.stream_min_deadline,
@@ -604,6 +646,49 @@ class TrajectoryDB:
             rs, order=order, d=float(d), backend=backend, plan=plan)
         return result, sstats
 
+
+    # -- §8 response-time model ------------------------------------------
+    def fit_response_model(self, queries: SegmentArray | None = None,
+                           d: float | None = None, *, s: int = DEFAULT_BATCH_SIZE,
+                           backend: str = "jnp", quick: bool = True,
+                           num_epochs: int = 20, seed: int = 0):
+        """Fit the §8 :class:`~repro.core.perfmodel.ResponseTimeModel` on
+        this database and attach it as the default predictor.
+
+        One model object then feeds the whole stack: the planner's
+        ``predict_hits`` (model-driven dispatch-group sizing — replaces
+        the constant ``AUTO_GROUP_HIT_FRACTION`` default), the broker's
+        ``predict_seconds`` admission pricing, and ``query_stream``'s
+        scheduler deadlines.  The α fit runs against the engine's
+        configured pruning, so predictions track the *pruned* interaction
+        workload.  ``quick=True`` (default) uses small benchmark grids —
+        a couple of seconds on CPU; pass ``quick=False`` for the paper's
+        full grids.  Returns the fitted model (also at
+        ``self.response_model``; set that to ``None`` to detach).
+        """
+        from repro.core import perfmodel
+        queries = queries if queries is not None else self.scenario_queries
+        d = d if d is not None else self.scenario_d
+        if queries is None or d is None:
+            raise ValueError("fit_response_model needs a representative "
+                             "query workload and threshold (or a scenario "
+                             "database)")
+        if quick:
+            device = perfmodel.benchmark_device_curves(
+                c_values=(256, 2048), q_values=(16, 128), repeats=1,
+                seed=seed)
+        else:
+            device = perfmodel.benchmark_device_curves(seed=seed)
+        engine = self.engine(backend)
+        qs, _ = self._sorted(queries)
+        host = perfmodel.benchmark_host_curves(
+            engine, qs, s_values=(16, 64) if quick else (16, 32, 64, 128, 256),
+            seed=seed)
+        model = perfmodel.ResponseTimeModel(device, host,
+                                            num_epochs=num_epochs)
+        model.fit_alphas(engine, qs, float(d), s=s, seed=seed)
+        self.response_model = model
+        return model
 
     # -- session-oriented serving ----------------------------------------
     def broker(self, *, backend: str = "jnp",

@@ -11,6 +11,18 @@ max of ``te`` over the range, maintained in O(1) across merges).
 of candidate entry segments given by the temporal-bin index (paper §4) —
 this is the quantity every algorithm below minimizes increases of.
 
+**Pruning-aware pricing (PR 5).**  With spatial pruning enabled the true
+per-batch workload is the *pruned* candidate count, so every merge
+decision should price it: pass a :class:`SpatialInteractionCounter` as
+``counter=`` and the merge loops evaluate ``numInts`` against the
+temporal-bin index's coarse per-bin-MBR grid (conservative, vectorized)
+while maintaining each batch's query-MBR union incrementally across
+merges.  A merge of two spatially distant batches then has a *positive*
+cost even when their temporal extents nest — the algorithms keep
+spatially coherent batches, which is what makes the downstream sub-range
+split (``repro.core.planner``) effective.  ``counter=None`` (the default)
+prices the paper's temporal-only count, bit-for-bit as before.
+
 Algorithms:
 
 * :func:`periodic` — fixed batch size ``s`` (paper §6.1).
@@ -87,24 +99,61 @@ class BatchPlan:
         return np.array([b.size for b in self.batches], dtype=np.int64)
 
 
+class SpatialInteractionCounter:
+    """Prices ``numInts`` with spatial pruning folded in.
+
+    Bound to one (index, sorted query set, threshold): per-batch candidate
+    counts come from the index's coarse per-bin-MBR estimate
+    (:meth:`~repro.core.index.TemporalBinIndex.
+    estimate_pruned_candidates_batch`) evaluated against each batch's
+    query-MBR union — never smaller than the *uncapped* pruned workload
+    (the planner's ``max_subranges`` cap can re-admit a fragmented
+    extent's gap segments beyond the priced count; see the estimate's
+    docstring).
+    """
+
+    def __init__(self, index: TemporalBinIndex, queries: SegmentArray,
+                 d: float):
+        self.index = index
+        self.d = float(d)
+        self.qlo, self.qhi = queries.mbrs()      # (nq, 3) float64
+
+    def counts(self, qt0, qt1, lo, hi) -> np.ndarray:
+        """Pruned candidate counts for batches with extents (qt0, qt1) and
+        query-MBR unions (lo, hi) — all stacked arrays."""
+        return self.index.estimate_pruned_candidates_batch(
+            qt0, qt1, lo, hi, self.d)
+
+
 # ----------------------------------------------------------------------
 # internal representation used by the merge loops: parallel arrays over
 # the current batch list B.  Batches are contiguous and ordered, so batch
 # k is [starts[k], starts[k] + sizes[k] - 1].
 # ----------------------------------------------------------------------
 class _BatchState:
-    def __init__(self, index: TemporalBinIndex, queries: SegmentArray):
+    def __init__(self, index: TemporalBinIndex, queries: SegmentArray,
+                 counter: SpatialInteractionCounter | None = None):
         if not queries.is_sorted():
             raise ValueError("queries must be sorted by t_start (paper §4)")
         nq = len(queries)
         if nq == 0:
             raise ValueError("empty query set")
         self.index = index
+        self.counter = counter
         self.starts = np.arange(nq, dtype=np.int64)
         self.sizes = np.ones(nq, dtype=np.int64)
         self.qt0 = queries.ts.astype(np.float64).copy()
         self.qt1 = queries.te.astype(np.float64).copy()
-        self.num_ints = self.sizes * index.num_candidates_batch(self.qt0, self.qt1)
+        if counter is not None:
+            # Per-batch query-MBR unions, maintained across merges.
+            self.mlo = counter.qlo.copy()
+            self.mhi = counter.qhi.copy()
+            self.num_ints = self.sizes * counter.counts(
+                self.qt0, self.qt1, self.mlo, self.mhi)
+        else:
+            self.mlo = self.mhi = None
+            self.num_ints = self.sizes * index.num_candidates_batch(
+                self.qt0, self.qt1)
 
     def __len__(self) -> int:
         return len(self.starts)
@@ -114,21 +163,49 @@ class _BatchState:
         m_qt0 = self.qt0[:-1]                                 # sorted ⇒ min is left's
         m_qt1 = np.maximum(self.qt1[:-1], self.qt1[1:])
         m_size = self.sizes[:-1] + self.sizes[1:]
-        merged = m_size * self.index.num_candidates_batch(m_qt0, m_qt1)
+        if self.counter is not None:
+            m_lo = np.minimum(self.mlo[:-1], self.mlo[1:])
+            m_hi = np.maximum(self.mhi[:-1], self.mhi[1:])
+            merged = m_size * self.counter.counts(m_qt0, m_qt1, m_lo, m_hi)
+        else:
+            merged = m_size * self.index.num_candidates_batch(m_qt0, m_qt1)
         return merged - (self.num_ints[:-1] + self.num_ints[1:])
 
     def merged_sizes(self) -> np.ndarray:
         return self.sizes[:-1] + self.sizes[1:]
 
+    def merged_ints(self, i: int) -> int:
+        """numInts of the would-be merge of batches i and i+1 (the scalar
+        the GREEDYSETSPLIT free-merge test and the MINMAX fix-up use)."""
+        qt0 = self.qt0[i]
+        qt1 = max(self.qt1[i], self.qt1[i + 1])
+        size = int(self.sizes[i] + self.sizes[i + 1])
+        if self.counter is not None:
+            lo = np.minimum(self.mlo[i], self.mlo[i + 1])
+            hi = np.maximum(self.mhi[i], self.mhi[i + 1])
+            return size * int(self.counter.counts(
+                np.array([qt0]), np.array([qt1]), lo[None], hi[None])[0])
+        return size * self.index.num_candidates(qt0, qt1)
+
     def merge_at(self, i: int) -> None:
         """Merge batches i and i+1 in place (paper's merge + removeElementAt)."""
         self.qt1[i] = max(self.qt1[i], self.qt1[i + 1])
         self.sizes[i] += self.sizes[i + 1]
-        self.num_ints[i] = self.sizes[i] * self.index.num_candidates(
-            self.qt0[i], self.qt1[i])
+        if self.counter is not None:
+            self.mlo[i] = np.minimum(self.mlo[i], self.mlo[i + 1])
+            self.mhi[i] = np.maximum(self.mhi[i], self.mhi[i + 1])
+            self.num_ints[i] = self.sizes[i] * int(self.counter.counts(
+                self.qt0[i:i + 1], self.qt1[i:i + 1],
+                self.mlo[i][None], self.mhi[i][None])[0])
+        else:
+            self.num_ints[i] = self.sizes[i] * self.index.num_candidates(
+                self.qt0[i], self.qt1[i])
         for name in ("starts", "sizes", "qt0", "qt1", "num_ints"):
             arr = getattr(self, name)
             setattr(self, name, np.delete(arr, i + 1))
+        if self.counter is not None:
+            self.mlo = np.delete(self.mlo, i + 1, axis=0)
+            self.mhi = np.delete(self.mhi, i + 1, axis=0)
 
     def to_batches(self) -> list[QueryBatch]:
         first, last = self.index.candidate_range_batch(self.qt0, self.qt1)
@@ -154,8 +231,15 @@ def _finish(name: str, params: dict, state_or_batches, t_start: float) -> BatchP
 # ----------------------------------------------------------------------
 # PERIODIC (paper §6.1)
 # ----------------------------------------------------------------------
-def periodic(index: TemporalBinIndex, queries: SegmentArray, s: int) -> BatchPlan:
-    """Fixed-size batches of ``s`` consecutive sorted query segments."""
+def periodic(index: TemporalBinIndex, queries: SegmentArray, s: int, *,
+             counter: SpatialInteractionCounter | None = None) -> BatchPlan:
+    """Fixed-size batches of ``s`` consecutive sorted query segments.
+
+    PERIODIC makes no merge decisions, so ``counter`` is accepted for
+    interface uniformity only — the pruned workload is priced downstream
+    by the planner's sub-range refinement.
+    """
+    del counter
     t_begin = time.perf_counter()
     if s <= 0:
         raise ValueError("batch size must be positive")
@@ -178,10 +262,12 @@ def periodic(index: TemporalBinIndex, queries: SegmentArray, s: int) -> BatchPla
 # SETSPLIT (paper §6.2, Algorithms 2 & 3)
 # ----------------------------------------------------------------------
 def setsplit_fixed(index: TemporalBinIndex, queries: SegmentArray,
-                   num_batches: int) -> BatchPlan:
+                   num_batches: int, *,
+                   counter: SpatialInteractionCounter | None = None
+                   ) -> BatchPlan:
     """Algorithm 2: merge the cheapest adjacent pair until |B| = numBatches."""
     t_begin = time.perf_counter()
-    st = _BatchState(index, queries)
+    st = _BatchState(index, queries, counter)
     num_batches = max(1, num_batches)
     while len(st) > num_batches:
         costs = st.merge_costs()
@@ -190,12 +276,14 @@ def setsplit_fixed(index: TemporalBinIndex, queries: SegmentArray,
 
 
 def setsplit_minmax(index: TemporalBinIndex, queries: SegmentArray,
-                    min_size: int, max_size: int) -> BatchPlan:
+                    min_size: int, max_size: int, *,
+                    counter: SpatialInteractionCounter | None = None
+                    ) -> BatchPlan:
     """Algorithm 3: constrained best-merge loop + undersize fix-up passes."""
     t_begin = time.perf_counter()
     if min_size > max_size:
         raise ValueError("min_size > max_size")
-    st = _BatchState(index, queries)
+    st = _BatchState(index, queries, counter)
     # Phase 1 (lines 3–21): best merge among pairs whose merged size <= max.
     while True:
         if len(st) == 1:
@@ -212,10 +300,8 @@ def setsplit_minmax(index: TemporalBinIndex, queries: SegmentArray,
         if small.size == 0 or len(st) == 1:
             break
         i = int(small[0])
-        left = (st.sizes[i - 1] + st.sizes[i]) * index.num_candidates(
-            st.qt0[i - 1], max(st.qt1[i - 1], st.qt1[i])) if i > 0 else np.inf
-        right = (st.sizes[i] + st.sizes[i + 1]) * index.num_candidates(
-            st.qt0[i], max(st.qt1[i], st.qt1[i + 1])) if i < len(st) - 1 else np.inf
+        left = st.merged_ints(i - 1) if i > 0 else np.inf
+        right = st.merged_ints(i) if i < len(st) - 1 else np.inf
         if left < right:
             st.merge_at(i - 1)
         else:
@@ -224,9 +310,11 @@ def setsplit_minmax(index: TemporalBinIndex, queries: SegmentArray,
 
 
 def setsplit_max(index: TemporalBinIndex, queries: SegmentArray,
-                 max_size: int) -> BatchPlan:
+                 max_size: int, *,
+                 counter: SpatialInteractionCounter | None = None
+                 ) -> BatchPlan:
     """SETSPLIT-MINMAX with min = 1 (paper §6.2, final paragraph)."""
-    plan = setsplit_minmax(index, queries, 1, max_size)
+    plan = setsplit_minmax(index, queries, 1, max_size, counter=counter)
     plan.algorithm = "setsplit-max"
     plan.params = {"max": max_size}
     return plan
@@ -236,16 +324,15 @@ def setsplit_max(index: TemporalBinIndex, queries: SegmentArray,
 # GREEDYSETSPLIT (paper §6.3, Algorithm 4)
 # ----------------------------------------------------------------------
 def _greedy(index: TemporalBinIndex, queries: SegmentArray, bound: int,
-            variant: str) -> BatchPlan:
+            variant: str,
+            counter: SpatialInteractionCounter | None = None) -> BatchPlan:
     t_begin = time.perf_counter()
-    st = _BatchState(index, queries)
+    st = _BatchState(index, queries, counter)
     # Phase 1 (lines 4–11): single pass of free merges.  A merge is free iff
     # numInts(merge) == numInts(B[i]) + numInts(B[i+1]).
     i = 0
     while i < len(st) - 1:
-        merged_ints = (st.sizes[i] + st.sizes[i + 1]) * index.num_candidates(
-            st.qt0[i], max(st.qt1[i], st.qt1[i + 1]))
-        if merged_ints == st.num_ints[i] + st.num_ints[i + 1]:
+        if st.merged_ints(i) == st.num_ints[i] + st.num_ints[i + 1]:
             st.merge_at(i)
         else:
             i += 1
@@ -269,15 +356,19 @@ def _greedy(index: TemporalBinIndex, queries: SegmentArray, bound: int,
 
 
 def greedysetsplit_min(index: TemporalBinIndex, queries: SegmentArray,
-                       bound: int) -> BatchPlan:
+                       bound: int, *,
+                       counter: SpatialInteractionCounter | None = None
+                       ) -> BatchPlan:
     """Algorithm 4: free merges, then merge any batch smaller than ``bound``."""
-    return _greedy(index, queries, bound, "min")
+    return _greedy(index, queries, bound, "min", counter)
 
 
 def greedysetsplit_max(index: TemporalBinIndex, queries: SegmentArray,
-                       bound: int) -> BatchPlan:
+                       bound: int, *,
+                       counter: SpatialInteractionCounter | None = None
+                       ) -> BatchPlan:
     """Algorithm 4 MAX variant (paper §6.3 prose)."""
-    return _greedy(index, queries, bound, "max")
+    return _greedy(index, queries, bound, "max", counter)
 
 
 ALGORITHMS: dict[str, Callable] = {

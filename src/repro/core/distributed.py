@@ -256,6 +256,10 @@ def make_sharded_query_fn(mesh: Mesh, cand_axes: Sequence[str],
             entries, queries, d, capacity=capacity_per_shard,
             use_pallas=use_pallas, interpret=interpret,
             cand_blk=cand_blk, qry_blk=qry_blk)
+        # tile-prune diagnostics are not part of this legacy driver's
+        # contract (its out_specs predate them)
+        out = {k: v for k, v in out.items()
+               if k not in ("pruned_tiles", "num_tiles")}
         valid = out["entry_idx"] >= 0
         e_off = _axis_offset(cand_axes, entries.shape[0])
         out["entry_idx"] = jnp.where(valid, out["entry_idx"] + e_off, -1)
@@ -279,7 +283,8 @@ def make_sharded_query_fn(mesh: Mesh, cand_axes: Sequence[str],
 def make_pod_query_fn(mesh: Mesh, capacity_per_shard: int, *,
                       pod_axis: str = "pod", use_pallas: bool = False,
                       interpret: bool = True, cand_blk: int = 256,
-                      qry_blk: int = 256, compaction: str = "dense"):
+                      qry_blk: int = 256, compaction: str = "dense",
+                      pruning: str = "none"):
     """Jitted per-batch query step for the temporal-pod mesh backend.
 
     ``fn(entries (P, C_loc, 8), offsets (P,), queries (Q, 8), d)`` runs
@@ -302,7 +307,8 @@ def make_pod_query_fn(mesh: Mesh, capacity_per_shard: int, *,
         out = ops.query_block(
             entries[0], queries, d, capacity=capacity_per_shard,
             use_pallas=use_pallas, interpret=interpret,
-            cand_blk=cand_blk, qry_blk=qry_blk, compaction=compaction)
+            cand_blk=cand_blk, qry_blk=qry_blk, compaction=compaction,
+            pruning=pruning)
         valid = out["entry_idx"] >= 0
         cnt = out["count"]
         return {
@@ -312,6 +318,8 @@ def make_pod_query_fn(mesh: Mesh, capacity_per_shard: int, *,
             "t_exit": out["t_exit"],
             "count": cnt[None],
             "total": jax.lax.psum(cnt, pod_axis),
+            "pruned_tiles": out["pruned_tiles"][None],
+            "num_tiles": out["num_tiles"][None],
         }
 
     shmapped = _shard_map(
@@ -319,7 +327,8 @@ def make_pod_query_fn(mesh: Mesh, capacity_per_shard: int, *,
         in_specs=(P(pod_axis, None, None), P(pod_axis), P(None, None), P()),
         out_specs={"entry_idx": P(pod_axis), "query_idx": P(pod_axis),
                    "t_enter": P(pod_axis), "t_exit": P(pod_axis),
-                   "count": P(pod_axis), "total": P()},
+                   "count": P(pod_axis), "total": P(),
+                   "pruned_tiles": P(pod_axis), "num_tiles": P(pod_axis)},
     )
     return jax.jit(shmapped)
 
@@ -400,6 +409,12 @@ class _PodShardDispatcher:
     def count(self, dp) -> int:
         return int(dp.out["total"])
 
+    def tile_stats(self, dp) -> tuple[int, int]:
+        """Kernel-level pruning counters summed over the pods (executor
+        hook; see ``repro.core.executor._tile_stats``)."""
+        return (int(np.asarray(dp.out["pruned_tiles"]).sum()),
+                int(np.asarray(dp.out["num_tiles"]).sum()))
+
     def retry_capacity(self, dp) -> int | None:
         per_shard = int(np.asarray(dp.out["count"]).max())
         return (bucket_capacity(per_shard)
@@ -448,7 +463,7 @@ class ShardedEngine:
                  use_pallas: bool = False, interpret: bool = True,
                  cand_blk: int = 256, qry_blk: int = 256,
                  compaction: str = "dense", pipeline: bool = True,
-                 balance: str = "time"):
+                 balance: str = "time", pruning: str = "spatial"):
         self.db = db if db.is_sorted() else db.sort_by_tstart()
         self._packed = self.db.packed()
         if mesh is None:
@@ -469,6 +484,11 @@ class ShardedEngine:
         self.qry_blk = qry_blk
         self.compaction = compaction
         self.pipeline = pipeline
+        # Kernel-level tile pruning only exists on the fused Pallas path;
+        # normalizing here keeps the jit-cache key honest.
+        self.pruning = (pruning if use_pallas
+                        and compaction in ("fused", "fused_rowloop")
+                        else "none")
         self._pad_t = float(self.db.temporal_extent[1]) + 1.0
         self._fns: dict[int, object] = {}
         if self.use_pallas and self.compaction == "fused":
@@ -493,7 +513,7 @@ class ShardedEngine:
                 self.mesh, capacity, pod_axis=self.pod_axis,
                 use_pallas=self.use_pallas, interpret=self.interpret,
                 cand_blk=self.cand_blk, qry_blk=self.qry_blk,
-                compaction=self.compaction)
+                compaction=self.compaction, pruning=self.pruning)
         return self._fns[capacity]
 
     def dispatcher(self, queries_packed: np.ndarray,

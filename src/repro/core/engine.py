@@ -77,11 +77,16 @@ class _QueryBlockDispatcher:
             e_slice, q_slice, np.float32(self.d), capacity=capacity,
             use_pallas=eng.use_pallas, interpret=eng.interpret,
             cand_blk=eng.cand_blk, qry_blk=eng.qry_blk,
-            compaction=eng.compaction)
+            compaction=eng.compaction, pruning=eng.pruning)
         return Dispatch(batch, capacity, out)
 
     def count(self, dp: Dispatch) -> int:
         return int(dp.out["count"])
+
+    def tile_stats(self, dp: Dispatch) -> tuple[int, int]:
+        """Kernel-level pruning counters (executor hook; see
+        ``repro.core.executor._tile_stats``)."""
+        return int(dp.out["pruned_tiles"]), int(dp.out["num_tiles"])
 
     def retry_capacity(self, dp: Dispatch) -> int | None:
         count = self.count(dp)
@@ -111,7 +116,7 @@ class DistanceThresholdEngine:
                  use_pallas: bool = False, interpret: bool = True,
                  cand_blk: int = DEFAULT_CAND_BLK, qry_blk: int = DEFAULT_QRY_BLK,
                  default_capacity: int = 4096, compaction: str = "fused",
-                 pipeline: bool = True):
+                 pipeline: bool = True, pruning: str = "spatial"):
         """``use_pallas=False`` routes interactions through the jnp oracle —
         the right default on CPU where Pallas runs in interpret mode.  Both
         paths share identical semantics (tests assert equality).
@@ -123,10 +128,18 @@ class DistanceThresholdEngine:
         jnp oracle is always dense).  ``pipeline`` selects the async
         two-phase executor (see the module docstring); both can be
         overridden per call on :meth:`execute`.
+
+        ``pruning="spatial"`` (the default) arms the fused kernels'
+        tile-level MBR early-out (work-only — the result set is provably
+        unchanged); the planner-level candidate trimming lives upstream in
+        ``repro.core.planner`` and reaches this engine through the plan.
         """
         if compaction not in ops.COMPACTIONS:
             raise ValueError(f"unknown compaction {compaction!r}; "
                              f"choose from {ops.COMPACTIONS}")
+        if pruning not in ops.PRUNINGS:
+            raise ValueError(f"unknown pruning {pruning!r}; "
+                             f"choose from {ops.PRUNINGS}")
         self.db = db if db.is_sorted() else db.sort_by_tstart()
         self.index = TemporalBinIndex.build(self.db, num_bins)
         self._packed = self.db.packed()          # (n, 8) float32, host copy
@@ -137,6 +150,7 @@ class DistanceThresholdEngine:
         self.default_capacity = default_capacity
         self.compaction = compaction
         self.pipeline = pipeline
+        self.pruning = pruning
 
     # ------------------------------------------------------------------
     def dispatcher(self, queries_packed: np.ndarray,

@@ -106,6 +106,10 @@ class BatchStats:
     kernel_seconds: float
     retries: int
     retry_seconds: float = 0.0
+    #: kernel grid tiles the in-kernel spatial early-out skipped / total
+    #: (PR 5; zero on paths without a tile loop — dense compaction, jnp).
+    pruned_tiles: int = 0
+    num_tiles: int = 0
 
 
 @dataclasses.dataclass
@@ -124,6 +128,19 @@ class ExecStats:
     pipelined: bool = False
     #: dispatch groups the executor processed (1 = classic whole-plan phase).
     num_groups: int = 1
+    #: interactions the *planner's* spatial pruning removed before dispatch
+    #: (candidate sub-range trimming — ``QueryPlan.pruned_interactions``);
+    #: the in-kernel tile early-out is accounted per batch in
+    #: ``BatchStats.pruned_tiles`` / :attr:`pruned_tiles`.
+    pruned_interactions: int = 0
+
+    @property
+    def pruned_tiles(self) -> int:
+        return sum(b.pruned_tiles for b in self.batches)
+
+    @property
+    def total_tiles(self) -> int:
+        return sum(b.num_tiles for b in self.batches)
 
     @property
     def kernel_seconds(self) -> float:
@@ -207,6 +224,15 @@ def _redispatch(dispatcher: BatchDispatcher, dp: Dispatch,
     return dispatcher.dispatch(dp.batch, capacity)
 
 
+def _tile_stats(dispatcher: BatchDispatcher, dp: Dispatch) -> tuple[int, int]:
+    """(pruned_tiles, num_tiles) of a synced dispatch — an *optional*
+    dispatcher hook (kernel-level spatial pruning accounting); dispatchers
+    without it report zeros.  Only called after the executor has blocked on
+    ``dp.out``, so reading the counters costs no extra host sync."""
+    fn = getattr(dispatcher, "tile_stats", None)
+    return fn(dp) if fn is not None else (0, 0)
+
+
 def _empty_stats(batch: QueryBatch) -> BatchStats:
     return BatchStats(batch.size, 0, 0, 0, 0.0, 0)
 
@@ -274,10 +300,12 @@ class SyncExecutor:
                 part = disp.marshal(dp, count)
                 if part is not None:
                     group_parts.append(part)
+                pt, nt = _tile_stats(disp, dp)
                 stats_by_idx[i] = BatchStats(
                     batch.size, batch.num_candidates,
                     batch.size * batch.num_candidates, count,
-                    kernel_s, retries, retry_s)
+                    kernel_s, retries, retry_s,
+                    pruned_tiles=pt, num_tiles=nt)
             parts.extend(group_parts)
             if self.on_group is not None:
                 self.on_group(gi, list(g), ResultSet.concatenate(group_parts))
@@ -286,7 +314,9 @@ class SyncExecutor:
         return (ResultSet.concatenate(parts),
                 ExecStats(plan.plan_seconds, total, stats,
                           num_syncs=num_syncs, pipelined=False,
-                          num_groups=max(plan.num_groups, 1)))
+                          num_groups=max(plan.num_groups, 1),
+                          pruned_interactions=getattr(
+                              plan, "pruned_interactions", 0)))
 
 
 class PipelinedExecutor:
@@ -383,10 +413,12 @@ class PipelinedExecutor:
             if batch.num_candidates == 0:
                 stats.append(_empty_stats(batch))
                 continue
+            pt, nt = (_tile_stats(disp, slots[i]) if i in slots else (0, 0))
             stats.append(BatchStats(
                 batch.size, batch.num_candidates,
                 batch.size * batch.num_candidates, counts.get(i, 0), 0.0,
-                1 if i in retried else 0, retried.get(i, 0.0)))
+                1 if i in retried else 0, retried.get(i, 0.0),
+                pruned_tiles=pt, num_tiles=nt))
         total = time.perf_counter() - t_begin
         ordered = [parts[i] for i in sorted(parts)]
         return (ResultSet.concatenate(ordered),
@@ -394,7 +426,9 @@ class PipelinedExecutor:
                           num_syncs=timing["syncs"],
                           dispatch_seconds=timing["dispatch"],
                           sync_seconds=timing["sync"], pipelined=True,
-                          num_groups=max(len(groups), 1)))
+                          num_groups=max(len(groups), 1),
+                          pruned_interactions=getattr(
+                              plan, "pruned_interactions", 0)))
 
 
 def make_executor(dispatcher: BatchDispatcher, *, pipeline: bool,

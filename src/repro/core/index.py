@@ -17,6 +17,21 @@ dense streaming computation on the accelerator.
 The paper finds the overlapping bins with an index-tree over bin extents in
 O(log m); we use the equivalent binary search over the prefix-max of
 ``B_end`` (non-decreasing, hence searchable) — same complexity, no tree.
+
+**Spatial pruning (PR 5).**  The paper's index is purely temporal: every
+segment in the contiguous range is a candidate even when it is spatially
+nowhere near the query (the follow-up work, arXiv:1410.2698, shows spatial
+pruning is the next win).  Each bin therefore also carries a spatial MBR —
+the axis-aligned box over its segments' endpoint boxes (a linearly moving
+segment never leaves that box) — plus running prefix/suffix MBR unions.
+:meth:`candidate_subranges` *trims and splits* a query's contiguous
+``[first, last]`` range into the sub-ranges whose bin MBRs lie within the
+(conservatively inflated) threshold of the query's MBR; a bin farther than
+``d`` from every query in the batch cannot contribute a hit, so dropping
+it is exact, never lossy.  :meth:`estimate_pruned_candidates_batch` is the
+vectorized *pricing* counterpart over a coarsened bin grid — cheap enough
+for the SETSPLIT merge loops, conservative (it never under-counts the
+exact pruned workload).
 """
 from __future__ import annotations
 
@@ -27,6 +42,43 @@ import numpy as np
 from repro.core.segments import SegmentArray
 
 DEFAULT_NUM_BINS = 10_000  # paper §7.2: "the number of entry bins ... is set to 10,000"
+
+#: Coarse pricing-grid resolution: per-bin MBRs are unioned into at most
+#: this many coarse bins for the vectorized pruned-count estimate (the
+#: merge loops evaluate it per adjacent pair per iteration).
+COARSE_GRID_BINS = 128
+
+#: Max sub-ranges :meth:`candidate_subranges` returns per query extent —
+#: each sub-range becomes one dispatched batch, so this bounds the
+#: dispatch-count blow-up; surplus runs merge across the smallest gaps.
+DEFAULT_MAX_SUBRANGES = 8
+
+
+def mbr_gap2(alo, ahi, blo, bhi):
+    """Squared minimum distance between axis-aligned boxes (broadcasts
+    over leading dims; the last dim is the 3 spatial axes).  Empty boxes
+    (``lo=+inf, hi=-inf``) yield ``inf`` — always pruned."""
+    g = np.maximum(np.maximum(blo - ahi, alo - bhi), 0.0)
+    return np.sum(g * g, axis=-1)
+
+
+def prune_limit(d: float, scale: float) -> float:
+    """Conservatively inflated threshold for MBR pruning.
+
+    The kernels decide hits in float32; the quadratic coefficient
+    ``c = |Δr|² − d²`` carries an absolute round-off ~``eps32·scale²``
+    (``scale`` = largest coordinate magnitude), which can make a pair whose
+    true minimum distance slightly exceeds ``d`` register as a hit.  The
+    pruning test must keep such pairs, so the threshold is inflated by the
+    distance overshoot that error can cause: ``err/(2d)`` in the smooth
+    regime, ``sqrt(err)`` when ``d`` is tiny.  Exactness of pruning (no
+    dropped hit, ever) only needs the slack to be an upper bound; the
+    over-inflation costs a negligible amount of pruning.
+    """
+    d = float(d)
+    err = 4e-6 * scale * scale
+    slack = min(err / max(2.0 * d, 1e-12), float(np.sqrt(err)))
+    return d + 1e-5 * d + slack + 1e-9
 
 
 @dataclasses.dataclass
@@ -42,6 +94,18 @@ class TemporalBinIndex:
     b_last: np.ndarray       # (m,) int64 — last segment index in bin (first-1 if empty)
     _bend_prefix_max: np.ndarray  # (m,) float64 — running max of b_end
     n_segments: int
+    # -- spatial pruning layer (PR 5) ----------------------------------
+    mbr_lo: np.ndarray       # (m, 3) float64 — per-bin MBR min (+inf if empty)
+    mbr_hi: np.ndarray       # (m, 3) float64 — per-bin MBR max (−inf if empty)
+    prefix_lo: np.ndarray    # (m, 3) — union MBR of bins [0, j]
+    prefix_hi: np.ndarray
+    suffix_lo: np.ndarray    # (m, 3) — union MBR of bins [j, m)
+    suffix_hi: np.ndarray
+    _prune_scale: float      # largest |coordinate| in the db (slack sizing)
+    _coarse_first: np.ndarray  # (k,) int64 — coarse-bin segment ranges
+    _coarse_last: np.ndarray
+    _coarse_lo: np.ndarray     # (k, 3) — coarse-bin union MBRs
+    _coarse_hi: np.ndarray
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -69,8 +133,12 @@ class TemporalBinIndex:
         b_last = (firsts[1:] - 1).astype(np.int64)
 
         b_end = np.full(num_bins, -np.inf, dtype=np.float64)
+        seg_lo, seg_hi = db.mbrs()
+        mbr_lo = np.full((num_bins, 3), np.inf, dtype=np.float64)
+        mbr_hi = np.full((num_bins, 3), -np.inf, dtype=np.float64)
         nonempty = b_last >= b_first
-        # Per-bin max of te via reduceat over the sorted layout.
+        # Per-bin max of te (and min/max of the endpoint boxes) via
+        # reduceat over the sorted layout.
         if nonempty.any():
             starts = b_first[nonempty]
             seg_max = np.maximum.reduceat(te, starts)
@@ -82,11 +150,37 @@ class TemporalBinIndex:
             # are exactly the bins' segment ranges, except the final range
             # runs to n which is also correct.
             b_end[nonempty] = seg_max
+            mbr_lo[nonempty] = np.minimum.reduceat(seg_lo, starts, axis=0)
+            mbr_hi[nonempty] = np.maximum.reduceat(seg_hi, starts, axis=0)
         prefix_max = np.maximum.accumulate(b_end)
+        # Running MBR unions (±inf empty boxes are the min/max identities):
+        # prefix[j] covers bins [0, j], suffix[j] covers bins [j, m) — a
+        # query range [j_lo, j_hi] is a subset of both, so the larger of
+        # the two box distances lower-bounds the distance to the range's
+        # true union (the whole-range quick reject in candidate_subranges).
+        prefix_lo = np.minimum.accumulate(mbr_lo, axis=0)
+        prefix_hi = np.maximum.accumulate(mbr_hi, axis=0)
+        suffix_lo = np.minimum.accumulate(mbr_lo[::-1], axis=0)[::-1].copy()
+        suffix_hi = np.maximum.accumulate(mbr_hi[::-1], axis=0)[::-1].copy()
+        scale = float(max(np.abs(seg_lo).max(), np.abs(seg_hi).max(), 1.0))
+        # Coarse pricing grid: chunks of fine bins unioned down to at most
+        # COARSE_GRID_BINS boxes; chunk c's segment range is contiguous
+        # because the fine bins partition the sorted segment array.
+        chunk = max((num_bins + COARSE_GRID_BINS - 1) // COARSE_GRID_BINS, 1)
+        cstarts = np.arange(0, num_bins, chunk, dtype=np.int64)
+        cends = np.minimum(cstarts + chunk - 1, num_bins - 1)
+        coarse_lo = np.minimum.reduceat(mbr_lo, cstarts, axis=0)
+        coarse_hi = np.maximum.reduceat(mbr_hi, cstarts, axis=0)
         return TemporalBinIndex(
             t0=t0, bin_width=width, num_bins=num_bins,
             b_start=b_start, b_end=b_end, b_first=b_first, b_last=b_last,
             _bend_prefix_max=prefix_max, n_segments=n,
+            mbr_lo=mbr_lo, mbr_hi=mbr_hi,
+            prefix_lo=prefix_lo, prefix_hi=prefix_hi,
+            suffix_lo=suffix_lo, suffix_hi=suffix_hi,
+            _prune_scale=scale,
+            _coarse_first=b_first[cstarts], _coarse_last=b_last[cends],
+            _coarse_lo=coarse_lo, _coarse_hi=coarse_hi,
         )
 
     # ------------------------------------------------------------------
@@ -95,29 +189,39 @@ class TemporalBinIndex:
         j = int(np.floor((t_start - self.t0) / self.bin_width))
         return min(max(j, 0), self.num_bins - 1)
 
-    def candidate_range(self, qt0: float, qt1: float) -> tuple[int, int]:
-        """Contiguous candidate index range [first, last] for query extent
-        [qt0, qt1].  Returns (0, -1) when no candidates exist.
-
-        Overlapping bins are those with ``B_start <= qt1`` and
-        ``B_end >= qt0``; the range is then
-        ``[min B_first, max B_last]`` over that (contiguous) set.
-        """
+    def _bin_range(self, qt0: float, qt1: float) -> tuple[int, int] | None:
+        """Contiguous overlapping-bin range [j_lo, j_hi], or None."""
         if qt1 < qt0:
-            return (0, -1)
+            return None
         j_hi = int(np.floor((qt1 - self.t0) / self.bin_width))
         if j_hi < 0:
-            return (0, -1)
+            return None
         j_hi = min(j_hi, self.num_bins - 1)
         # Earliest bin whose B_end reaches qt0: prefix-max is non-decreasing
         # so binary search is valid; prefix_max[j] >= qt0 first holds at the
         # earliest overlapping bin itself.
         j_lo = int(np.searchsorted(self._bend_prefix_max, qt0, side="left"))
         if j_lo > j_hi:
+            return None
+        return j_lo, j_hi
+
+    def candidate_range(self, qt0: float, qt1: float) -> tuple[int, int]:
+        """Contiguous candidate index range [first, last] for query extent
+        [qt0, qt1].  Returns (0, -1) when no candidates exist.
+
+        Overlapping bins are those with ``B_start <= qt1`` and
+        ``B_end >= qt0``; the range is then
+        ``[min B_first, max B_last]`` over that (contiguous) set.  The
+        range is clamped into ``[0, n_segments)`` — a query outlasting the
+        database extent must price (and dispatch) only real segments.
+        """
+        r = self._bin_range(qt0, qt1)
+        if r is None:
             return (0, -1)
+        j_lo, j_hi = r
         # min B_first over bins [j_lo, j_hi]: b_first is non-decreasing.
-        first = int(self.b_first[j_lo])
-        last = int(self.b_last[j_hi])
+        first = max(int(self.b_first[j_lo]), 0)
+        last = min(int(self.b_last[j_hi]), self.n_segments - 1)
         if last < first:
             return (0, -1)
         return first, last
@@ -142,8 +246,9 @@ class TemporalBinIndex:
         j_lo = np.searchsorted(self._bend_prefix_max, qt0, side="left").astype(np.int64)
         valid &= j_lo <= j_hi
         j_lo = np.minimum(j_lo, self.num_bins - 1)
-        first = self.b_first[j_lo]
-        last = self.b_last[j_hi]
+        # Clamp into [0, n_segments) — same contract as candidate_range.
+        first = np.maximum(self.b_first[j_lo], 0)
+        last = np.minimum(self.b_last[j_hi], self.n_segments - 1)
         valid &= last >= first
         first = np.where(valid, first, 0)
         last = np.where(valid, last, -1)
@@ -162,3 +267,133 @@ class TemporalBinIndex:
         """Indices of bins that temporally overlap [qt0, qt1] (for tests)."""
         mask = (self.b_start <= qt1) & (self.b_end >= qt0)
         return np.nonzero(mask)[0]
+
+    # ------------------------------------------------------------------
+    # spatial pruning (PR 5)
+    # ------------------------------------------------------------------
+    def _limit(self, d: float, qlo: np.ndarray, qhi: np.ndarray) -> float:
+        """The inflated prune threshold for one query MBR (or a stack)."""
+        finite = np.isfinite(qlo) & np.isfinite(qhi)
+        qscale = (float(max(np.abs(qlo[finite]).max(initial=0.0),
+                            np.abs(qhi[finite]).max(initial=0.0)))
+                  if finite.any() else 0.0)
+        return prune_limit(d, max(self._prune_scale, qscale))
+
+    def candidate_subranges(self, qt0: float, qt1: float,
+                            qlo: np.ndarray, qhi: np.ndarray, d: float, *,
+                            max_subranges: int = DEFAULT_MAX_SUBRANGES
+                            ) -> list[tuple[int, int]]:
+        """Spatially pruned candidate sub-ranges for one query extent.
+
+        ``qlo``/``qhi`` is the (3,) union MBR of the query segments sharing
+        the extent ``[qt0, qt1]`` (a batch); ``d`` the distance threshold.
+        Returns disjoint, increasing, inclusive ``(first, last)`` segment
+        index sub-ranges — the temporal ``candidate_range`` with every run
+        of bins farther than the inflated threshold from the query MBR (or
+        temporally dead: ``B_end < qt0``) cut out.  Exact: a pruned bin's
+        box lies farther than ``d`` from the whole batch MBR, hence from
+        every member query's box, hence from every member query at every
+        instant — no hit can be dropped.  At most ``max_subranges`` runs
+        come back (surplus runs merge across the smallest gaps), bounding
+        the per-batch dispatch count.
+        """
+        r = self._bin_range(qt0, qt1)
+        if r is None:
+            return []
+        j_lo, j_hi = r
+        first = max(int(self.b_first[j_lo]), 0)
+        last = min(int(self.b_last[j_hi]), self.n_segments - 1)
+        if last < first:
+            return []
+        qlo = np.asarray(qlo, np.float64)
+        qhi = np.asarray(qhi, np.float64)
+        lim = self._limit(d, qlo, qhi)
+        lim2 = lim * lim
+        # Whole-range quick reject: the range's true MBR union is a subset
+        # of both prefix[j_hi] and suffix[j_lo], so the larger box distance
+        # lower-bounds the distance to everything in the range.
+        lb2 = max(float(mbr_gap2(self.prefix_lo[j_hi], self.prefix_hi[j_hi],
+                                 qlo, qhi)),
+                  float(mbr_gap2(self.suffix_lo[j_lo], self.suffix_hi[j_lo],
+                                 qlo, qhi)))
+        if lb2 > lim2:
+            return []
+        bins = slice(j_lo, j_hi + 1)
+        gap2 = mbr_gap2(self.mbr_lo[bins], self.mbr_hi[bins], qlo, qhi)
+        keep = (gap2 <= lim2) & (self.b_end[bins] >= qt0)
+        kept = np.nonzero(keep)[0]
+        if kept.size == 0:
+            return []
+        # Runs of consecutive kept bins -> segment sub-ranges.  Adjacent
+        # sub-ranges with no segments between them coalesce: a pruned bin
+        # that is *empty* (or whose segments all sit left of the range)
+        # separates runs in bin space but not in segment space, and
+        # splitting there would fragment the plan for zero pruned work
+        # (e.g. integer-aligned segment starts against a finer bin grid
+        # leave every fifth bin empty).
+        breaks = np.nonzero(np.diff(kept) > 1)[0]
+        run_a = np.concatenate([[0], breaks + 1])
+        run_b = np.concatenate([breaks, [kept.size - 1]])
+        subs: list[list[int]] = []
+        for a, b in zip(kept[run_a], kept[run_b]):
+            f = max(int(self.b_first[j_lo + a]), first)
+            l = min(int(self.b_last[j_lo + b]), last)
+            if l < f:
+                continue
+            if subs and f <= subs[-1][1] + 1:
+                subs[-1][1] = max(subs[-1][1], l)
+            else:
+                subs.append([f, l])
+        if len(subs) > max_subranges:
+            # Keep only the largest inter-run gaps as split points; merging
+            # across a gap re-admits the gap's segments (exactness is
+            # preserved — pruning may only shrink, never grow, the result).
+            gaps = np.array([subs[i + 1][0] - subs[i][1]
+                             for i in range(len(subs) - 1)])
+            keep = max(int(max_subranges) - 1, 0)
+            splits = (set(np.argsort(gaps)[-keep:].tolist()) if keep
+                      else set())
+            merged = [subs[0]]
+            for i, s in enumerate(subs[1:]):
+                if i in splits:
+                    merged.append(s)
+                else:
+                    merged[-1][1] = s[1]
+            subs = merged
+        return [(int(f), int(l)) for f, l in subs]
+
+    def pruned_num_candidates(self, qt0: float, qt1: float, qlo, qhi,
+                              d: float) -> int:
+        """Exact candidate count surviving :meth:`candidate_subranges`."""
+        return sum(l - f + 1 for f, l in
+                   self.candidate_subranges(qt0, qt1, qlo, qhi, d))
+
+    def estimate_pruned_candidates_batch(self, qt0, qt1, qlo, qhi,
+                                         d: float) -> np.ndarray:
+        """Vectorized pruned-candidate estimate over the coarse bin grid.
+
+        ``qt0``/``qt1`` are (n,) extents, ``qlo``/``qhi`` (n, 3) query-MBR
+        stacks.  For each row, the temporal ``[first, last]`` range is
+        intersected with every coarse bin's segment range and coarse bins
+        whose union MBR lies beyond the inflated threshold are dropped.
+        Conservative with respect to the *uncapped* sub-range split (a
+        coarse union prunes no more than its fine bins; the
+        ``max_subranges`` cap can re-admit gap segments the estimate
+        dropped, so heavily fragmented extents may dispatch slightly more
+        than priced) and exactly equal to the temporal count when nothing
+        is spatially pruned — this is the pricing signal the
+        SETSPLIT/GREEDYSETSPLIT merge loops consume.
+        """
+        qt0 = np.asarray(qt0, np.float64)
+        qt1 = np.asarray(qt1, np.float64)
+        qlo = np.asarray(qlo, np.float64).reshape(-1, 3)
+        qhi = np.asarray(qhi, np.float64).reshape(-1, 3)
+        first, last = self.candidate_range_batch(qt0, qt1)
+        cf, cl = self._coarse_first, self._coarse_last
+        ov = (np.minimum(last[:, None], cl[None, :])
+              - np.maximum(first[:, None], cf[None, :]) + 1)
+        ov = np.maximum(ov, 0)
+        lim = self._limit(float(d), qlo, qhi)
+        gap2 = mbr_gap2(self._coarse_lo[None], self._coarse_hi[None],
+                        qlo[:, None], qhi[:, None])     # (n, k)
+        return (ov * (gap2 <= lim * lim)).sum(axis=1).astype(np.int64)

@@ -146,17 +146,32 @@ def benchmark_device_curves(c_values=(256, 1024, 4096, 16384),
 def estimate_alpha_by_epoch(engine: DistanceThresholdEngine,
                             sample_queries: SegmentArray, d: float, s: int,
                             *, num_epochs: int = 50, trials: int = 2,
-                            seed: int = 0) -> np.ndarray:
+                            seed: int = 0,
+                            pruning: str | None = None) -> np.ndarray:
     """Per-epoch hit-fraction estimates from sampled consecutive-s batches.
 
     Returns (num_epochs,) float array; epochs with no sample queries reuse
     the global mean.
+
+    ``pruning`` (default: the engine's own setting) selects the
+    interaction denominator: with ``"spatial"`` the sampled batches count
+    (and evaluate) only the candidate sub-ranges surviving the per-bin MBR
+    pruning — the α the *pruned* workload actually exhibits (spatially
+    pruned bins contribute zero hits by construction, so the numerator is
+    unchanged while the denominator shrinks; pruned-workload α ≥ unpruned
+    α).  Predictions fed by these α values therefore track the pruned
+    interaction counts carried by the plans.
     """
     rng = np.random.default_rng(seed)
     t0, t1 = engine.db.temporal_extent
     edges = np.linspace(t0, t1, num_epochs + 1)
     q_packed = sample_queries.packed()
     qts = sample_queries.ts
+    if pruning is None:
+        pruning = getattr(engine, "pruning", "none")
+    qlo = qhi = None
+    if pruning == "spatial":
+        qlo, qhi = sample_queries.mbrs()
     alphas = np.full(num_epochs, np.nan)
     for ep in range(num_epochs):
         in_ep = np.nonzero((qts >= edges[ep]) & (qts < edges[ep + 1]))[0]
@@ -169,15 +184,20 @@ def estimate_alpha_by_epoch(engine: DistanceThresholdEngine,
             stop = min(start + s, len(sample_queries))
             qt0 = float(qts[start])
             qt1 = float(sample_queries.te[start:stop].max())
-            first, last = engine.index.candidate_range(qt0, qt1)
-            c = last - first + 1
-            if c <= 0:
-                continue
-            n = int(ops.count_hits(engine._packed[first:last + 1],
-                                   q_packed[start:stop], np.float32(d),
-                                   use_pallas=False))
-            hits += n
-            ints += c * (stop - start)
+            if pruning == "spatial":
+                ranges = engine.index.candidate_subranges(
+                    qt0, qt1, qlo[start:stop].min(axis=0),
+                    qhi[start:stop].max(axis=0), float(d))
+            else:
+                first, last = engine.index.candidate_range(qt0, qt1)
+                ranges = [(first, last)] if last >= first else []
+            for first, last in ranges:
+                c = last - first + 1
+                n = int(ops.count_hits(engine._packed[first:last + 1],
+                                       q_packed[start:stop], np.float32(d),
+                                       use_pallas=False))
+                hits += n
+                ints += c * (stop - start)
         if ints > 0:
             alphas[ep] = hits / ints
     mean = np.nanmean(alphas) if np.isfinite(alphas).any() else 0.0
@@ -262,9 +282,69 @@ def benchmark_host_curves(engine: DistanceThresholdEngine,
 # ----------------------------------------------------------------------
 @dataclasses.dataclass
 class ResponseTimeModel:
+    """The full §8 model — and, once :meth:`fit_alphas` has run, the one
+    object feeding the whole serving stack (ROADMAP item, PR 5):
+    :meth:`predict_batch_hits` is the planner's ``predict_hits`` (dispatch-
+    group sizing — replaces the constant ``AUTO_GROUP_HIT_FRACTION``
+    heuristic) and :meth:`predict_batch_seconds` the broker/scheduler
+    ``predict_seconds`` (admission pricing, deadlines).  Both consume
+    ``QueryBatch.num_ints``, which since PR 5 is the *pruned* interaction
+    count — predictions track the workload actually dispatched.
+    ``repro.api.TrajectoryDB.fit_response_model`` builds + attaches one."""
+
     device: DeviceTimeModel
     host: HostTimeModel
     num_epochs: int = 50
+    #: per-epoch α fit (:meth:`fit_alphas`); None until fitted.
+    alphas: np.ndarray | None = None
+    #: temporal extent the α epochs divide; set by :meth:`fit_alphas`.
+    extent: tuple[float, float] | None = None
+
+    # -- per-batch predictors (planner / broker / scheduler hooks) -------
+    def fit_alphas(self, engine: DistanceThresholdEngine,
+                   sample_queries: SegmentArray, d: float,
+                   s: int = 64, *, trials: int = 2,
+                   seed: int = 0) -> "ResponseTimeModel":
+        """Fit the per-epoch hit fractions against a representative
+        workload (α measured over the engine's pruned candidate ranges —
+        see :func:`estimate_alpha_by_epoch`) and return self."""
+        self.alphas = estimate_alpha_by_epoch(
+            engine, sample_queries, d, s, num_epochs=self.num_epochs,
+            trials=trials, seed=seed)
+        self.extent = engine.db.temporal_extent
+        return self
+
+    def _alpha_for(self, batch) -> float:
+        """The fitted α of the epoch holding the batch's temporal midpoint
+        (the fleet mean when the batch falls outside the fitted extent)."""
+        if self.alphas is None:
+            raise ValueError("call fit_alphas (or TrajectoryDB."
+                             "fit_response_model) before predicting batches")
+        t0, t1 = self.extent
+        width = max(t1 - t0, 1e-30)
+        ep = int(np.clip((0.5 * (batch.qt0 + batch.qt1) - t0) / width
+                         * self.num_epochs, 0, self.num_epochs - 1))
+        return float(self.alphas[ep])
+
+    def predict_batch_hits(self, batch) -> float:
+        """Predicted result rows of one ``QueryBatch``: epoch-α ×
+        ``num_ints`` (pruned).  The planner's ``predict_hits`` hook."""
+        return self._alpha_for(batch) * batch.num_ints
+
+    def predict_batch_seconds(self, batch) -> float:
+        """Predicted device + transfer seconds of one ``QueryBatch`` —
+        the broker's admission / the scheduler's deadline unit.  β is
+        taken as 0 (the batch's candidates are temporally selected, and
+        the three class curves are near-equal on the branchless TPU path
+        anyway — see the module docstring); the per-invocation host
+        overhead is in the curves' floor ``Θ``."""
+        c, q = batch.num_candidates, batch.size
+        if c <= 0 or q <= 0:
+            return 0.0
+        a = min(max(self._alpha_for(batch), 0.0), 1.0)
+        dev = self.device.predict(c, q, a, 0.0, 1.0 - a)
+        return dev + self.host.transfer_time(
+            a * batch.num_ints * RESULT_ITEM_BYTES)
 
     def predict(self, engine: DistanceThresholdEngine, queries: SegmentArray,
                 d: float, s: int, alphas: np.ndarray | None = None,

@@ -39,9 +39,15 @@ from typing import Callable, Mapping, Sequence
 
 import numpy as np
 
-from repro.core.batching import ALGORITHMS, BatchPlan, QueryBatch
+from repro.core.batching import (ALGORITHMS, BatchPlan, QueryBatch,
+                                 SpatialInteractionCounter)
 from repro.core.index import TemporalBinIndex
 from repro.core.segments import SegmentArray
+
+#: Spatial-pruning strategies a planner (and ``ExecutionPolicy.pruning``)
+#: accepts: ``"spatial"`` trims-and-splits candidate ranges against the
+#: per-bin MBR index; ``"none"`` keeps the paper's temporal-only ranges.
+PRUNINGS = ("spatial", "none")
 
 #: Result-capacity bucket granularity (slots).  Capacities are rounded up
 #: to ``CAPACITY_GRANULARITY * 2**k`` so retries and differently-sized
@@ -93,6 +99,15 @@ class QueryPlan:
     capacities: list[int]          # result-buffer slots per batch (bucketed)
     groups: list[list[int]]        # dispatch groups: contiguous batch index runs
     plan_seconds: float            # batching + refinement time
+    #: per-original-batch split counts when spatial pruning split candidate
+    #: ranges (sum == num_batches); ``None`` when no splitting happened.
+    #: Sibling batches of one run share a query range, so dispatch groups
+    #: must not separate them if group-slice concatenation is to stay
+    #: canonical (see :func:`make_groups`).
+    runs: list[int] | None = None
+    #: interactions removed by spatial pruning (original temporal workload
+    #: minus the planned workload) — surfaced through ``ExecStats``.
+    pruned_interactions: int = 0
 
     # -- BatchPlan passthrough (stable consumer surface) -----------------
     @property
@@ -177,21 +192,43 @@ def derive_group_size(batches: Sequence[QueryBatch], *,
     return math.ceil(n / num_groups)
 
 
-def make_groups(num_batches: int, group_size: int | None) -> list[list[int]]:
+def make_groups(num_batches: int, group_size: int | None,
+                runs: list[int] | None = None) -> list[list[int]]:
     """Partition batch indices into contiguous dispatch groups.
 
     ``group_size=None`` (the default) puts every batch in one group — the
     O(1)-syncs-per-query-set shape.  A positive ``group_size`` chunks the
     plan so the executor can overlap marshalling of group k with device
     compute of group k+1 (and so the scheduler has re-issuable units).
+
+    ``runs`` (from spatial-pruning sub-range splitting) marks runs of
+    sibling batches that share one query range; groups then accumulate
+    whole runs — splitting siblings across two groups would interleave one
+    query range's rows across two slices and break the broker's
+    canonical-prefix concatenation.  ``group_size`` becomes the threshold
+    at which a group closes (groups may exceed it by one run's tail).
     """
     if num_batches <= 0:
         return []
     if group_size is None or group_size >= num_batches:
         return [list(range(num_batches))]
     group_size = max(int(group_size), 1)
-    return [list(range(k, min(k + group_size, num_batches)))
-            for k in range(0, num_batches, group_size)]
+    if runs is None:
+        return [list(range(k, min(k + group_size, num_batches)))
+                for k in range(0, num_batches, group_size)]
+    assert sum(runs) == num_batches, (sum(runs), num_batches)
+    groups: list[list[int]] = []
+    cur: list[int] = []
+    start = 0
+    for r in runs:
+        cur.extend(range(start, start + r))
+        start += r
+        if len(cur) >= group_size:
+            groups.append(cur)
+            cur = []
+    if cur:
+        groups.append(cur)
+    return groups
 
 
 class QueryPlanner:
@@ -210,13 +247,26 @@ class QueryPlanner:
                  default_capacity: int = DEFAULT_CAPACITY,
                  granularity: int = CAPACITY_GRANULARITY,
                  group_size: int | None = None,
-                 predict_hits: Callable | None = None):
+                 predict_hits: Callable | None = None,
+                 pruning: str = "spatial"):
         """``group_size=None`` (the default) derives the dispatch-group size
         from the §8 perf model (:func:`derive_group_size`, optionally fed by
-        ``predict_hits``); an explicit ``group_size`` is honored as given."""
+        ``predict_hits``); an explicit ``group_size`` is honored as given.
+
+        ``pruning="spatial"`` (the default) activates the two-level
+        candidate pruning whenever :meth:`plan` is given the query
+        threshold ``d``: batching merges are priced against the pruned
+        workload (``SpatialInteractionCounter``) and each planned batch's
+        contiguous candidate range is trimmed and split into the sub-ranges
+        the per-bin MBR index cannot rule out.  Without ``d`` (legacy
+        callers) planning is the paper's temporal-only behavior.
+        """
         if algorithm not in ALGORITHMS:
             raise ValueError(f"unknown batching algorithm {algorithm!r}; "
                              f"choose from {sorted(ALGORITHMS)}")
+        if pruning not in PRUNINGS:
+            raise ValueError(f"unknown pruning {pruning!r}; "
+                             f"choose from {PRUNINGS}")
         self.index = index
         self.algorithm = algorithm
         self.params = dict(params or {})
@@ -224,25 +274,82 @@ class QueryPlanner:
         self.granularity = granularity
         self.group_size = group_size
         self.predict_hits = predict_hits
+        self.pruning = pruning
 
     # ------------------------------------------------------------------
-    def plan(self, sorted_queries: SegmentArray) -> QueryPlan:
+    def plan(self, sorted_queries: SegmentArray,
+             d: float | None = None) -> QueryPlan:
         """Run the batching algorithm and refine the result.  Queries must
-        already be sorted by ``t_start`` (the facade guarantees it)."""
+        already be sorted by ``t_start`` (the facade guarantees it).
+        ``d`` is the distance threshold — required for spatial pruning
+        (``None`` plans temporal-only regardless of the pruning knob)."""
+        counter = None
+        if self.pruning == "spatial" and d is not None:
+            counter = SpatialInteractionCounter(self.index, sorted_queries,
+                                                float(d))
         try:
             bp = ALGORITHMS[self.algorithm](self.index, sorted_queries,
-                                            **self.params)
+                                            counter=counter, **self.params)
         except TypeError as e:
             raise ValueError(
                 f"batch params {self.params} do not match algorithm "
                 f"{self.algorithm!r}: {e} (pass batching=... alongside the "
                 f"algorithm's parameters)") from None
-        return self.refine(bp)
+        if counter is None:
+            return self.refine(bp)
+        bp, runs, pruned = self._prune_batches(bp, counter)
+        return self.refine(bp, runs=runs, pruned_interactions=pruned)
 
-    def refine(self, batch_plan: BatchPlan) -> QueryPlan:
+    def _prune_batches(self, bp: BatchPlan,
+                       counter: SpatialInteractionCounter
+                       ) -> tuple[BatchPlan, list[int], int]:
+        """Trim and split every batch's candidate range against the per-bin
+        MBR index: each batch becomes ≥ 1 sibling batches over the
+        sub-ranges the MBR test cannot rule out, with *exact* per-sub-range
+        ``num_ints`` (the dispatched workload — the executor's
+        ``total_interactions`` matches by construction).  A fully pruned
+        batch stays as one empty batch so query coverage bookkeeping
+        (scheduler group counting, broker slices) is unchanged."""
+        qlo, qhi = counter.qlo, counter.qhi
+        out: list[QueryBatch] = []
+        runs: list[int] = []
+        pruned = 0
+        for b in bp.batches:
+            base = b.size * b.num_candidates
+            if b.num_candidates <= 0:
+                out.append(QueryBatch(b.q_first, b.q_last, b.qt0, b.qt1,
+                                      0, -1, 0))
+                runs.append(1)
+                continue
+            lo = qlo[b.q_first:b.q_last + 1].min(axis=0)
+            hi = qhi[b.q_first:b.q_last + 1].max(axis=0)
+            subs = self.index.candidate_subranges(b.qt0, b.qt1, lo, hi,
+                                                  counter.d)
+            if not subs:
+                out.append(QueryBatch(b.q_first, b.q_last, b.qt0, b.qt1,
+                                      0, -1, 0))
+                runs.append(1)
+                pruned += base
+                continue
+            kept = 0
+            for f, l in subs:
+                ints = b.size * (l - f + 1)
+                kept += ints
+                out.append(QueryBatch(b.q_first, b.q_last, b.qt0, b.qt1,
+                                      f, l, ints))
+            runs.append(len(subs))
+            pruned += base - kept
+        plan = BatchPlan(bp.algorithm, bp.params, out, bp.plan_seconds)
+        return plan, runs, pruned
+
+    def refine(self, batch_plan: BatchPlan, *,
+               runs: list[int] | None = None,
+               pruned_interactions: int = 0) -> QueryPlan:
         """Attach capacities and dispatch groups to an existing
         ``BatchPlan`` (also the adapter engines use to accept legacy
-        ``BatchPlan`` arguments)."""
+        ``BatchPlan`` arguments).  The batches' candidate ranges are taken
+        as given; ``runs``/``pruned_interactions`` carry the provenance of
+        an upstream :meth:`_prune_batches` pass (groups align to runs)."""
         t0 = time.perf_counter()
         caps = [size_capacity(b, self.default_capacity, self.granularity)
                 for b in batch_plan.batches]
@@ -250,9 +357,10 @@ class QueryPlanner:
         if gs is None:
             gs = derive_group_size(batch_plan.batches,
                                    predict_hits=self.predict_hits)
-        groups = make_groups(len(batch_plan.batches), gs)
+        groups = make_groups(len(batch_plan.batches), gs, runs=runs)
         return QueryPlan(batch_plan, caps, groups,
-                         batch_plan.plan_seconds + time.perf_counter() - t0)
+                         batch_plan.plan_seconds + time.perf_counter() - t0,
+                         runs=runs, pruned_interactions=pruned_interactions)
 
 
 def as_query_plan(plan: "BatchPlan | QueryPlan", *,
@@ -269,6 +377,7 @@ def as_query_plan(plan: "BatchPlan | QueryPlan", *,
 
 __all__ = [
     "AUTO_GROUP_HIT_FRACTION", "AUTO_GROUP_HIT_ROWS", "CAPACITY_GRANULARITY",
-    "DEFAULT_CAPACITY", "QueryPlan", "QueryPlanner", "as_query_plan",
-    "bucket_capacity", "derive_group_size", "make_groups", "size_capacity",
+    "DEFAULT_CAPACITY", "PRUNINGS", "QueryPlan", "QueryPlanner",
+    "as_query_plan", "bucket_capacity", "derive_group_size", "make_groups",
+    "size_capacity",
 ]

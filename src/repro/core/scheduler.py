@@ -96,8 +96,8 @@ class DeadlineScheduler:
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------------
-    def groups(self, num_batches: int,
-               batches=None) -> list[list[int]]:
+    def groups(self, num_batches: int, batches=None,
+               runs=None) -> list[list[int]]:
         """Partition batch indices into worker-call groups.
 
         ``group_size=None`` auto-sizes so every call carries ≥ 2 batches
@@ -109,7 +109,9 @@ class DeadlineScheduler:
         volume) can additionally *shrink* auto groups so one worker call
         never marshals more than a group's worth of predicted result rows.
         An explicit ``group_size`` is honored as given, remainder group
-        included.
+        included.  ``runs`` (spatial-pruning split runs — see
+        ``QueryPlan.runs``) keeps sibling batches of one query range in
+        the same group, so ``on_group`` deliveries stay canonical slices.
         """
         if num_batches <= 0:
             return []
@@ -122,7 +124,7 @@ class DeadlineScheduler:
                 if model_gs is not None:
                     gs = min(gs, max(model_gs, 2))
         gs = max(1, min(int(gs), num_batches))
-        out = make_groups(num_batches, gs)
+        out = make_groups(num_batches, gs, runs=runs)
         if auto and len(out) >= 2 and len(out[-1]) == 1:
             out[-2].extend(out.pop())
         return out
@@ -159,7 +161,8 @@ class DeadlineScheduler:
         capacity = getattr(self.engine, "default_capacity", None)
         qplan = as_query_plan(plan, default_capacity=capacity
                               if capacity is not None else DEFAULT_CAPACITY)
-        groups = self.groups(qplan.num_batches, qplan.batches)
+        groups = self.groups(qplan.num_batches, qplan.batches,
+                             getattr(qplan, "runs", None))
         stats = SchedulerStats(groups=len(groups),
                                group_sizes=[len(g) for g in groups],
                                routing=getattr(self.engine, "stats", None))

@@ -137,6 +137,16 @@ class SegmentArray:
     def is_sorted(self) -> bool:
         return bool(np.all(self.ts[1:] >= self.ts[:-1])) if len(self) > 1 else True
 
+    def mbrs(self) -> tuple[np.ndarray, np.ndarray]:
+        """Per-segment axis-aligned spatial bounding boxes, ``(lo, hi)`` of
+        shape (n, 3) float64.  A segment moves linearly between its
+        endpoints, so its position at every instant of its temporal extent
+        lies inside the box spanned by the two endpoints — the invariant
+        the spatial pruning layer (``repro.core.index``) relies on."""
+        p0 = np.stack([self.xs, self.ys, self.zs], axis=1).astype(np.float64)
+        p1 = np.stack([self.xe, self.ye, self.ze], axis=1).astype(np.float64)
+        return np.minimum(p0, p1), np.maximum(p0, p1)
+
     @property
     def temporal_extent(self) -> tuple[float, float]:
         if len(self) == 0:

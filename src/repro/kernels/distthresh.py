@@ -47,6 +47,17 @@ Mosaic-lowering escape hatch (``ops.query_block(compaction=
 lower outside interpret mode).  Both emit the identical deterministic
 order.
 
+Both fused kernels optionally take a **tile-level spatial early-out**
+(PR 5, the device half of the two-level pruning subsystem — the host half
+is ``repro.core.index.candidate_subranges``): per entry-tile and per
+query-tile MBRs are precomputed upstream of the ``pallas_call``, and each
+grid step first runs a ~10-scalar-op box-distance test against the
+conservatively inflated threshold (``repro.core.index.prune_limit``) —
+a tile whose boxes cannot come within ``d`` skips the full
+(CAND_BLK × QRY_BLK) interval evaluation under ``@pl.when`` and bumps a
+resident ``pruned`` tile counter instead (the unwritten result buffers
+and running hit counter simply carry over to the next grid step).
+
 The interval math matches ``ref.interaction_tile`` bit-for-bit in float32;
 tests sweep shapes/dtypes and assert allclose against the oracle, and the
 fused kernel's compacted rows are asserted equal to the dense kernel's
@@ -233,10 +244,30 @@ def distthresh_pallas(entries: jnp.ndarray, queries_t: jnp.ndarray, d,
 # ----------------------------------------------------------------------
 # Fused in-kernel compaction (the §5 atomic_inc analogue, sequential grid)
 # ----------------------------------------------------------------------
+def _tile_mbr_live(embr_ref, qmbr_ref, dprune_ref):
+    """The tile-level early-out test: squared box distance between the
+    tile's entry/query MBRs vs the (conservatively inflated) threshold.
+
+    The MBR rows are laid out ``(lo_x, lo_y, lo_z, hi_x, hi_y, hi_z, _, _)``;
+    all-padding tiles carry the empty box (``lo=+inf, hi=-inf``) whose gap
+    is ``inf`` — always pruned.  A handful of scalar VPU ops per tile,
+    against a full (CAND_BLK × QRY_BLK) interval evaluation saved.
+    """
+    gap2 = jnp.zeros((), embr_ref.dtype)
+    for ax in range(3):
+        elo, ehi = embr_ref[0, ax], embr_ref[0, 3 + ax]
+        qlo, qhi = qmbr_ref[0, ax], qmbr_ref[0, 3 + ax]
+        g = jnp.maximum(jnp.maximum(qlo - ehi, elo - qhi), 0.0)
+        gap2 = gap2 + g * g
+    dp = dprune_ref[0, 0]
+    return gap2 <= dp * dp
+
+
 def _distthresh_compact_kernel(d_ref, entries_ref, queries_t_ref,
                                e_idx_ref, q_idx_ref, enter_ref, exit_ref,
-                               count_ref, *, cand_blk: int, qry_blk: int,
-                               capacity: int, valid_c: int, valid_q: int):
+                               count_ref, pruned_ref, *, cand_blk: int,
+                               qry_blk: int, capacity: int, valid_c: int,
+                               valid_q: int, prune_refs=None):
     """One grid step: evaluate a tile, append its hits at the running offset.
 
     The four flat result buffers and the (1, 1) ``count`` block use constant
@@ -251,6 +282,12 @@ def _distthresh_compact_kernel(d_ref, entries_ref, queries_t_ref,
     ``capacity`` appends are skipped (the caller sees ``count > capacity``
     and retries larger — the counter itself keeps accumulating, so ``count``
     is always exact).
+
+    With ``prune_refs`` (the per-tile MBR blocks + inflated threshold) the
+    tile body runs under ``@pl.when``: a tile whose entry/query boxes are
+    farther apart than the threshold skips the interval math entirely and
+    bumps the resident ``pruned`` counter instead — the unwritten result
+    buffers and ``count`` block simply carry over to the next grid step.
     """
     i = pl.program_id(0)
     j = pl.program_id(1)
@@ -263,75 +300,95 @@ def _distthresh_compact_kernel(d_ref, entries_ref, queries_t_ref,
         enter_ref[...] = jnp.zeros(enter_ref.shape, enter_ref.dtype)
         exit_ref[...] = jnp.zeros(exit_ref.shape, exit_ref.dtype)
         count_ref[0, 0] = 0
+        pruned_ref[0, 0] = 0
 
-    e_blk = entries_ref[...]                     # (cand_blk, 8), VMEM
-    q_blk = queries_t_ref[...]                   # (8, qry_blk), VMEM
-    d = d_ref[0, 0]
-    # Only the hit mask is live here — the dense (C, Q) interval tiles are
-    # dead code and never materialize; intervals are recomputed per hit in
-    # the append loop below (≈ 70 FLOPs each, on ≤ tile_hits pairs).
-    _, _, hit = _tile_intervals(e_blk, q_blk, d)
+    def _body():
+        e_blk = entries_ref[...]                 # (cand_blk, 8), VMEM
+        q_blk = queries_t_ref[...]               # (8, qry_blk), VMEM
+        d = d_ref[0, 0]
+        # Only the hit mask is live here — the dense (C, Q) interval tiles
+        # are dead code and never materialize; intervals are recomputed per
+        # hit in the append loop below (≈ 70 FLOPs each, on ≤ tile_hits
+        # pairs).
+        _, _, hit = _tile_intervals(e_blk, q_blk, d)
 
-    # Mask padding rows/cols (broadcast vectors, no full index tiles) so
-    # pad×pad pairs (identical zero segments at the pad time) never append.
-    row_ok = (jax.lax.broadcasted_iota(jnp.int32, (cand_blk, 1), 0)
-              + i * cand_blk) < valid_c
-    col_ok = (jax.lax.broadcasted_iota(jnp.int32, (1, qry_blk), 1)
-              + j * qry_blk) < valid_q
-    hit = hit & row_ok & col_ok
+        # Mask padding rows/cols (broadcast vectors, no full index tiles)
+        # so pad×pad pairs (identical zero segments at the pad time) never
+        # append.
+        row_ok = (jax.lax.broadcasted_iota(jnp.int32, (cand_blk, 1), 0)
+                  + i * cand_blk) < valid_c
+        col_ok = (jax.lax.broadcasted_iota(jnp.int32, (1, qry_blk), 1)
+                  + j * qry_blk) < valid_q
+        hit2 = hit & row_ok & col_ok
 
-    # Masked prefix sum over the row-major flattened tile: cum[f] is the
-    # number of hits at flat index <= f, so the k-th hit (k = 1..tile_hits)
-    # sits at the first f with cum[f] == k — a rank-selection gather moves
-    # the hits to the tile prefix in row-major order without any scatter:
-    # slot s reads flat index searchsorted(cum, s + 1).
-    cum = jnp.cumsum(hit.astype(jnp.int32).reshape(tile))
-    tile_hits = cum[-1]
-    offset = count_ref[0, 0]
+        # Masked prefix sum over the row-major flattened tile: cum[f] is
+        # the number of hits at flat index <= f, so the k-th hit
+        # (k = 1..tile_hits) sits at the first f with cum[f] == k — a
+        # rank-selection gather moves the hits to the tile prefix in
+        # row-major order without any scatter: slot s reads flat index
+        # searchsorted(cum, s + 1).
+        cum = jnp.cumsum(hit2.astype(jnp.int32).reshape(tile))
+        tile_hits = cum[-1]
+        offset = count_ref[0, 0]
 
-    # Append in APPEND_BLK-slot chunks, looping only ceil(tile_hits / blk)
-    # times: the work is O(hits · log tile), not O(tile) — in sparse
-    # workloads (the common case: α is small, paper §8.1.2) a tile pays the
-    # hit-mask math, one cumsum and at most one small chunk; zero-hit tiles
-    # skip the loop entirely.
-    blk = min(tile, APPEND_BLK)
-    zero = jnp.zeros((), enter_ref.dtype)
+        # Append in APPEND_BLK-slot chunks, looping only
+        # ceil(tile_hits / blk) times: the work is O(hits · log tile), not
+        # O(tile) — in sparse workloads (the common case: α is small, paper
+        # §8.1.2) a tile pays the hit-mask math, one cumsum and at most one
+        # small chunk; zero-hit tiles skip the loop entirely.
+        blk = min(tile, APPEND_BLK)
+        zero = jnp.zeros((), enter_ref.dtype)
 
-    def _append_chunk(k, carry):
-        base = k * blk
-        slot = base + jax.lax.broadcasted_iota(jnp.int32, (blk, 1), 0)[:, 0]
-        src = jnp.minimum(
-            jnp.searchsorted(cum, slot + 1, method="scan_unrolled"), tile - 1)
-        valid = slot < tile_hits                 # slots past the hit count
-        dst = offset + base
-        # local/global (entry row, query col) indices from the flat src
-        e_loc = src // qry_blk
-        q_loc = src % qry_blk
-        e_idx = jnp.where(valid, i * cand_blk + e_loc, -1)
-        q_idx = jnp.where(valid, j * qry_blk + q_loc, -1)
-        # per-pair interval recompute on small (blk, 8)/(8, blk) gathers —
-        # keeps the dense interval tiles out of the live set entirely
-        t_enter, t_exit, _ = _pair_intervals(e_blk[e_loc, :],
-                                             q_blk[:, q_loc], d)
+        def _append_chunk(k, carry):
+            base = k * blk
+            slot = base + jax.lax.broadcasted_iota(jnp.int32, (blk, 1),
+                                                   0)[:, 0]
+            src = jnp.minimum(
+                jnp.searchsorted(cum, slot + 1, method="scan_unrolled"),
+                tile - 1)
+            valid = slot < tile_hits             # slots past the hit count
+            dst = offset + base
+            # local/global (entry row, query col) indices from the flat src
+            e_loc = src // qry_blk
+            q_loc = src % qry_blk
+            e_idx = jnp.where(valid, i * cand_blk + e_loc, -1)
+            q_idx = jnp.where(valid, j * qry_blk + q_loc, -1)
+            # per-pair interval recompute on small (blk, 8)/(8, blk)
+            # gathers — keeps the dense interval tiles out of the live set
+            t_enter, t_exit, _ = _pair_intervals(e_blk[e_loc, :],
+                                                 q_blk[:, q_loc], d)
 
-        @pl.when(dst <= capacity)                # overflow: drop, keep count
-        def _():
-            e_idx_ref[pl.ds(dst, blk)] = e_idx
-            q_idx_ref[pl.ds(dst, blk)] = q_idx
-            enter_ref[pl.ds(dst, blk)] = jnp.where(valid, t_enter, zero)
-            exit_ref[pl.ds(dst, blk)] = jnp.where(valid, t_exit, zero)
+            @pl.when(dst <= capacity)            # overflow: drop, keep count
+            def _():
+                e_idx_ref[pl.ds(dst, blk)] = e_idx
+                q_idx_ref[pl.ds(dst, blk)] = q_idx
+                enter_ref[pl.ds(dst, blk)] = jnp.where(valid, t_enter, zero)
+                exit_ref[pl.ds(dst, blk)] = jnp.where(valid, t_exit, zero)
 
-        return carry
+            return carry
 
-    jax.lax.fori_loop(0, (tile_hits + blk - 1) // blk, _append_chunk, 0)
-    count_ref[0, 0] = offset + tile_hits
+        jax.lax.fori_loop(0, (tile_hits + blk - 1) // blk, _append_chunk, 0)
+        count_ref[0, 0] = offset + tile_hits
+
+    if prune_refs is None:
+        _body()
+        return
+    embr_ref, qmbr_ref, dprune_ref = prune_refs
+    live = _tile_mbr_live(embr_ref, qmbr_ref, dprune_ref)
+
+    @pl.when(jnp.logical_not(live))
+    def _skip():
+        pruned_ref[0, 0] = pruned_ref[0, 0] + 1
+
+    pl.when(live)(_body)
 
 
 def _distthresh_compact_rowloop_kernel(d_ref, entries_ref, queries_t_ref,
                                        e_idx_ref, q_idx_ref, enter_ref,
-                                       exit_ref, count_ref, *, cand_blk: int,
-                                       qry_blk: int, capacity: int,
-                                       valid_c: int, valid_q: int):
+                                       exit_ref, count_ref, pruned_ref, *,
+                                       cand_blk: int, qry_blk: int,
+                                       capacity: int, valid_c: int,
+                                       valid_q: int, prune_refs=None):
     """Gather-free fallback append: one ``pl.ds`` window per *entry row*.
 
     The chunked kernel above compacts each tile with rank-selection
@@ -357,56 +414,77 @@ def _distthresh_compact_rowloop_kernel(d_ref, entries_ref, queries_t_ref,
         enter_ref[...] = jnp.zeros(enter_ref.shape, enter_ref.dtype)
         exit_ref[...] = jnp.zeros(exit_ref.shape, exit_ref.dtype)
         count_ref[0, 0] = 0
+        pruned_ref[0, 0] = 0
 
-    e_blk = entries_ref[...]
-    q_blk = queries_t_ref[...]
-    d = d_ref[0, 0]
-    t_enter, t_exit, hit = _tile_intervals(e_blk, q_blk, d)
+    def _body():
+        e_blk = entries_ref[...]
+        q_blk = queries_t_ref[...]
+        d = d_ref[0, 0]
+        t_enter, t_exit, hit = _tile_intervals(e_blk, q_blk, d)
 
-    row_ok = (jax.lax.broadcasted_iota(jnp.int32, (cand_blk, 1), 0)
-              + i * cand_blk) < valid_c
-    col_ok = (jax.lax.broadcasted_iota(jnp.int32, (1, qry_blk), 1)
-              + j * qry_blk) < valid_q
-    hit = hit & row_ok & col_ok
+        row_ok = (jax.lax.broadcasted_iota(jnp.int32, (cand_blk, 1), 0)
+                  + i * cand_blk) < valid_c
+        col_ok = (jax.lax.broadcasted_iota(jnp.int32, (1, qry_blk), 1)
+                  + j * qry_blk) < valid_q
+        hit2 = hit & row_ok & col_ok
 
-    hit_i = hit.astype(jnp.int32)
-    row_cum = jnp.cumsum(hit_i, axis=1)          # (cand_blk, qry_blk)
-    offset = count_ref[0, 0]
+        hit_i = hit2.astype(jnp.int32)
+        row_cum = jnp.cumsum(hit_i, axis=1)      # (cand_blk, qry_blk)
+        offset = count_ref[0, 0]
 
-    # Per-slot and per-column index planes shared by every row iteration.
-    slot_plane = jax.lax.broadcasted_iota(jnp.int32, (qry_blk, qry_blk), 0)
-    col_plane = jax.lax.broadcasted_iota(jnp.int32, (qry_blk, qry_blk), 1)
-    slot_vec = jax.lax.broadcasted_iota(jnp.int32, (qry_blk, 1), 0)[:, 0]
-    zero = jnp.zeros((), enter_ref.dtype)
+        # Per-slot and per-column index planes shared by every row
+        # iteration.
+        slot_plane = jax.lax.broadcasted_iota(jnp.int32,
+                                              (qry_blk, qry_blk), 0)
+        col_plane = jax.lax.broadcasted_iota(jnp.int32,
+                                             (qry_blk, qry_blk), 1)
+        slot_vec = jax.lax.broadcasted_iota(jnp.int32, (qry_blk, 1), 0)[:, 0]
+        zero = jnp.zeros((), enter_ref.dtype)
 
-    def _row_body(r, dst):
-        rh = jax.lax.dynamic_slice(hit_i, (r, 0), (1, qry_blk))
-        rcum = jax.lax.dynamic_slice(row_cum, (r, 0), (1, qry_blk))
-        rent = jax.lax.dynamic_slice(t_enter, (r, 0), (1, qry_blk))
-        rext = jax.lax.dynamic_slice(t_exit, (r, 0), (1, qry_blk))
-        n_r = rcum[0, qry_blk - 1]
-        # sel[s, c] = 1 iff column c is the row's (s+1)-th hit: compaction
-        # becomes a masked reduction over columns — no gathers anywhere.
-        sel = (rcum == slot_plane + 1) & (rh > 0)
-        sel_f = sel.astype(rent.dtype)
-        comp_col = jnp.sum(jnp.where(sel, col_plane, 0), axis=1)
-        comp_ent = jnp.sum(sel_f * rent, axis=1)
-        comp_ext = jnp.sum(sel_f * rext, axis=1)
-        valid = slot_vec < n_r
-        e_val = jnp.where(valid, i * cand_blk + r, -1).astype(jnp.int32)
-        q_val = jnp.where(valid, j * qry_blk + comp_col, -1).astype(jnp.int32)
+        def _row_body(r, dst):
+            rh = jax.lax.dynamic_slice(hit_i, (r, 0), (1, qry_blk))
+            rcum = jax.lax.dynamic_slice(row_cum, (r, 0), (1, qry_blk))
+            rent = jax.lax.dynamic_slice(t_enter, (r, 0), (1, qry_blk))
+            rext = jax.lax.dynamic_slice(t_exit, (r, 0), (1, qry_blk))
+            n_r = rcum[0, qry_blk - 1]
+            # sel[s, c] = 1 iff column c is the row's (s+1)-th hit:
+            # compaction becomes a masked reduction over columns — no
+            # gathers anywhere.
+            sel = (rcum == slot_plane + 1) & (rh > 0)
+            sel_f = sel.astype(rent.dtype)
+            comp_col = jnp.sum(jnp.where(sel, col_plane, 0), axis=1)
+            comp_ent = jnp.sum(sel_f * rent, axis=1)
+            comp_ext = jnp.sum(sel_f * rext, axis=1)
+            valid = slot_vec < n_r
+            e_val = jnp.where(valid, i * cand_blk + r, -1).astype(jnp.int32)
+            q_val = jnp.where(valid, j * qry_blk + comp_col,
+                              -1).astype(jnp.int32)
 
-        @pl.when((n_r > 0) & (dst <= capacity))  # overflow: drop, keep count
-        def _():
-            e_idx_ref[pl.ds(dst, qry_blk)] = e_val
-            q_idx_ref[pl.ds(dst, qry_blk)] = q_val
-            enter_ref[pl.ds(dst, qry_blk)] = jnp.where(valid, comp_ent, zero)
-            exit_ref[pl.ds(dst, qry_blk)] = jnp.where(valid, comp_ext, zero)
+            @pl.when((n_r > 0) & (dst <= capacity))  # overflow: drop,
+            def _():                                  # keep count
+                e_idx_ref[pl.ds(dst, qry_blk)] = e_val
+                q_idx_ref[pl.ds(dst, qry_blk)] = q_val
+                enter_ref[pl.ds(dst, qry_blk)] = jnp.where(valid, comp_ent,
+                                                           zero)
+                exit_ref[pl.ds(dst, qry_blk)] = jnp.where(valid, comp_ext,
+                                                          zero)
 
-        return dst + n_r
+            return dst + n_r
 
-    end = jax.lax.fori_loop(0, cand_blk, _row_body, offset)
-    count_ref[0, 0] = end
+        end = jax.lax.fori_loop(0, cand_blk, _row_body, offset)
+        count_ref[0, 0] = end
+
+    if prune_refs is None:
+        _body()
+        return
+    embr_ref, qmbr_ref, dprune_ref = prune_refs
+    live = _tile_mbr_live(embr_ref, qmbr_ref, dprune_ref)
+
+    @pl.when(jnp.logical_not(live))
+    def _skip():
+        pruned_ref[0, 0] = pruned_ref[0, 0] + 1
+
+    pl.when(live)(_body)
 
 
 #: append strategies accepted by :func:`distthresh_compact_pallas`.
@@ -423,7 +501,10 @@ def distthresh_compact_pallas(entries: jnp.ndarray, queries_t: jnp.ndarray, d,
                               valid_c: int | None = None,
                               valid_q: int | None = None,
                               interpret: bool = True,
-                              append: str = "chunk"):
+                              append: str = "chunk",
+                              e_mbr: jnp.ndarray | None = None,
+                              q_mbr: jnp.ndarray | None = None,
+                              d_prune=None):
     """Fused distance-threshold kernel with in-kernel result compaction.
 
     Args:
@@ -438,16 +519,32 @@ def distthresh_compact_pallas(entries: jnp.ndarray, queries_t: jnp.ndarray, d,
         APPEND_BLK windows (the fast path; uses in-kernel gathers).
         ``"rowloop"`` — the gather-free per-row ``pl.ds`` append loop (the
         Mosaic-lowering escape hatch; same results, same determinism).
+      e_mbr / q_mbr / d_prune: the tile-level spatial early-out (PR 5).
+        ``e_mbr`` is (C/cand_blk, 8) — per entry tile ``(lo_xyz, hi_xyz,
+        0, 0)`` — and ``q_mbr`` (Q/qry_blk, 8) the same per query tile,
+        precomputed upstream of the ``pallas_call`` (``ops._tile_mbrs``;
+        on hardware these belong in SMEM / scalar prefetch — they are tiny
+        and read as scalars only).  A grid tile whose boxes are farther
+        apart than ``d_prune`` (the conservatively inflated threshold, see
+        ``repro.core.index.prune_limit``) skips all interval math and
+        increments the ``pruned`` counter.  All three must be given
+        together, or all omitted (no early-out).
 
-    Returns ``(entry_idx, query_idx, t_enter, t_exit, count)``: four
-    (capacity,) buffers — int32 indices (-1 pad) and interval endpoints
-    (0 pad) — plus the exact scalar int32 hit count.  Output order is
-    deterministic (and identical across append modes): tiles in grid order
-    (query tiles innermost), row-major within each tile.
+    Returns ``(entry_idx, query_idx, t_enter, t_exit, count, pruned)``:
+    four (capacity,) buffers — int32 indices (-1 pad) and interval
+    endpoints (0 pad) — plus the exact scalar int32 hit count and the
+    number of grid tiles the MBR early-out skipped (0 without pruning
+    inputs).  Output order is deterministic (and identical across append
+    modes *and* pruning on/off — pruned tiles contribute no rows): tiles
+    in grid order (query tiles innermost), row-major within each tile.
     """
     if append not in APPEND_MODES:
         raise ValueError(f"unknown append mode {append!r}; "
                          f"choose from {APPEND_MODES}")
+    prune = e_mbr is not None
+    if (q_mbr is None) == prune or (d_prune is None) == prune:
+        raise ValueError("e_mbr, q_mbr and d_prune must be given together "
+                         "(tile early-out armed) or all omitted")
     cc, eight = entries.shape
     assert eight == 8, entries.shape
     eight2, qq = queries_t.shape
@@ -466,30 +563,50 @@ def distthresh_compact_pallas(entries: jnp.ndarray, queries_t: jnp.ndarray, d,
     window = qry_blk if append == "rowloop" else min(tile, APPEND_BLK)
     cap_pad = capacity + window
     flat_spec = pl.BlockSpec((cap_pad,), lambda i, j: (0,))
+    scalar_spec = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
     out_shapes = (
         jax.ShapeDtypeStruct((cap_pad,), jnp.int32),
         jax.ShapeDtypeStruct((cap_pad,), jnp.int32),
         jax.ShapeDtypeStruct((cap_pad,), dtype),
         jax.ShapeDtypeStruct((cap_pad,), dtype),
         jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        jax.ShapeDtypeStruct((1, 1), jnp.int32),
     )
-    kernel_fn = (_distthresh_compact_rowloop_kernel if append == "rowloop"
-                 else _distthresh_compact_kernel)
-    kernel = functools.partial(
-        kernel_fn, cand_blk=cand_blk, qry_blk=qry_blk,
+    kernel_fn = functools.partial(
+        _distthresh_compact_rowloop_kernel if append == "rowloop"
+        else _distthresh_compact_kernel,
+        cand_blk=cand_blk, qry_blk=qry_blk,
         capacity=capacity, valid_c=valid_c, valid_q=valid_q)
-    e_idx, q_idx, t_enter, t_exit, count = pl.pallas_call(
+    in_specs = [
+        scalar_spec,                                        # d (scalar)
+        pl.BlockSpec((cand_blk, 8), lambda i, j: (i, 0)),   # entries
+        pl.BlockSpec((8, qry_blk), lambda i, j: (0, j)),    # queries
+    ]
+    if prune:
+        in_specs += [
+            pl.BlockSpec((1, 8), lambda i, j: (i, 0)),      # entry-tile MBR
+            pl.BlockSpec((1, 8), lambda i, j: (j, 0)),      # query-tile MBR
+            scalar_spec,                                    # inflated d
+        ]
+        args = (d_arr, entries, queries_t, e_mbr, q_mbr,
+                jnp.asarray(d_prune, dtype).reshape(1, 1))
+
+        def kernel(d_ref, entries_ref, queries_t_ref, embr_ref, qmbr_ref,
+                   dprune_ref, *out_refs):
+            kernel_fn(d_ref, entries_ref, queries_t_ref, *out_refs,
+                      prune_refs=(embr_ref, qmbr_ref, dprune_ref))
+    else:
+        args = (d_arr, entries, queries_t)
+        kernel = kernel_fn
+    e_idx, q_idx, t_enter, t_exit, count, pruned = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),          # d (scalar)
-            pl.BlockSpec((cand_blk, 8), lambda i, j: (i, 0)),   # entries
-            pl.BlockSpec((8, qry_blk), lambda i, j: (0, j)),    # queries
-        ],
+        in_specs=in_specs,
         out_specs=(flat_spec, flat_spec, flat_spec, flat_spec,
-                   pl.BlockSpec((1, 1), lambda i, j: (0, 0))),
+                   scalar_spec, scalar_spec),
         out_shape=out_shapes,
         interpret=interpret,
-    )(d_arr, entries, queries_t)
+    )(*args)
     return (e_idx[:capacity], q_idx[:capacity],
-            t_enter[:capacity], t_exit[:capacity], count[0, 0])
+            t_enter[:capacity], t_exit[:capacity], count[0, 0],
+            pruned[0, 0])

@@ -56,6 +56,7 @@ import warnings
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import distthresh as _dt
 from repro.kernels import ref
@@ -64,6 +65,13 @@ from repro.kernels.distthresh import (DEFAULT_CAND_BLK, DEFAULT_QRY_BLK,
 
 #: compaction strategies accepted by :func:`query_block`.
 COMPACTIONS = ("fused", "fused_rowloop", "dense")
+
+#: pruning strategies accepted by :func:`query_block` (PR 5): ``"spatial"``
+#: arms the fused kernels' tile-level MBR early-out; ``"none"`` disables
+#: it.  The dense two-phase path (and the jnp oracle) has no tile loop to
+#: skip, so pruning is a documented no-op there — it stays the validated
+#: unpruned baseline.
+PRUNINGS = ("spatial", "none")
 
 #: One-time fused→rowloop fallback state: ``tripped`` flips when the fused
 #: (gather) compaction path fails to lower/compile; every later
@@ -133,13 +141,107 @@ def _empty_block(capacity: int, dtype) -> dict:
             "query_idx": jnp.full((capacity,), -1, jnp.int32),
             "t_enter": jnp.zeros((capacity,), dtype),
             "t_exit": jnp.zeros((capacity,), dtype),
-            "count": jnp.zeros((), jnp.int32)}
+            "count": jnp.zeros((), jnp.int32),
+            "pruned_tiles": jnp.zeros((), jnp.int32),
+            "num_tiles": jnp.zeros((), jnp.int32)}
+
+
+def _host_tile_mbrs(packed: np.ndarray, blk: int) -> np.ndarray:
+    """Per-tile spatial MBRs of packed segments, host-side (numpy).
+
+    Returns ``(ceil(n/blk), 8)`` float32 rows ``(lo_xyz, hi_xyz, 0, 0)``
+    over each run of ``blk`` rows of the *to-be-padded* layout (padding
+    rows excluded; an all-padding tail tile would not exist since tiles
+    beyond ``ceil(n/blk)`` are never emitted — pad rows merely shorten the
+    last tile's membership).  A linearly moving segment never leaves the
+    box spanned by its endpoints, so the tile box bounds every member's
+    position over its whole temporal extent.
+    """
+    n = packed.shape[0]
+    nt = (max(n, 1) + blk - 1) // blk
+    lo = np.minimum(packed[:, 0:3], packed[:, 3:6]).astype(np.float64)
+    hi = np.maximum(packed[:, 0:3], packed[:, 3:6]).astype(np.float64)
+    starts = np.arange(0, nt * blk, blk)
+    starts = np.minimum(starts, max(n - 1, 0))
+    tlo = np.minimum.reduceat(lo, starts, axis=0)
+    thi = np.maximum.reduceat(hi, starts, axis=0)
+    out = np.zeros((nt, 8), np.float32)
+    out[:, 0:3] = tlo
+    out[:, 3:6] = thi
+    return out
+
+
+def _host_prune_threshold(d, entries: np.ndarray,
+                          queries: np.ndarray) -> float:
+    """The conservatively inflated tile-prune threshold at dispatch time:
+    ``repro.core.index.prune_limit`` (the one exactness-critical slack
+    formula) evaluated at this dispatch's largest coordinate magnitude."""
+    from repro.core.index import prune_limit
+    scale = max(float(np.abs(entries[:, 0:6]).max(initial=0.0)),
+                float(np.abs(queries[:, 0:6]).max(initial=0.0)), 1.0)
+    return prune_limit(float(d), scale)
+
+
+def _jit_tile_mbrs(packed: jnp.ndarray, blk: int, n_valid: int) -> jnp.ndarray:
+    """In-graph twin of :func:`_host_tile_mbrs` over the *padded* packed
+    array (used when ``query_block`` runs under an outer trace, e.g. the
+    ``shard_map`` pod step, where host gating is impossible).  Padding rows
+    are masked out; an all-padding tile gets the empty box (±inf) whose
+    gap is ``inf`` — always skipped."""
+    nt = packed.shape[0] // blk
+    r = packed.reshape(nt, blk, 8)
+    lo = jnp.minimum(r[..., 0:3], r[..., 3:6])
+    hi = jnp.maximum(r[..., 0:3], r[..., 3:6])
+    valid = (jnp.arange(nt * blk).reshape(nt, blk, 1)) < n_valid
+    lo = jnp.where(valid, lo, jnp.inf).min(axis=1)
+    hi = jnp.where(valid, hi, -jnp.inf).max(axis=1)
+    out = jnp.zeros((nt, 8), packed.dtype)
+    return out.at[:, 0:3].set(lo).at[:, 3:6].set(hi)
+
+
+def _jit_prune_threshold(d, entries: jnp.ndarray, queries: jnp.ndarray):
+    """In-graph twin of :func:`_host_prune_threshold` — must mirror
+    ``repro.core.index.prune_limit`` (traced values, so it cannot
+    delegate); tests pin the three-way agreement via the byte-identical
+    pruning-on/off acceptance suite."""
+    d = jnp.asarray(d, jnp.float32)
+    scale = jnp.maximum(jnp.maximum(jnp.max(jnp.abs(entries[:, 0:6])),
+                                    jnp.max(jnp.abs(queries[:, 0:6]))), 1.0)
+    err = 4e-6 * scale * scale
+    slack = jnp.minimum(err / jnp.maximum(2.0 * d, 1e-12), jnp.sqrt(err))
+    return d + 1e-5 * d + slack + 1e-9
+
+
+def _host_tile_prune(entries: np.ndarray, queries: np.ndarray, d,
+                     cand_blk: int, qry_blk: int):
+    """Host-side tile-prune preparation for one dispatch.
+
+    Computes the per-tile entry/query MBRs and the inflated threshold with
+    numpy (microseconds on dispatch-sized slices — the dispatch stays
+    async: no device work, no sync), evaluates the box test over every
+    tile pair, and returns ``(e_mbr, q_mbr, d_prune)`` **only when at
+    least one tile pair would actually be skipped** — otherwise ``None``,
+    and the caller dispatches the classic unarmed kernel.  This gating is
+    what keeps the early-out strictly profitable: on workloads with no
+    exploitable space/time structure (GALAXY/RANDWALK) the armed kernel's
+    per-tile predicate and extra operands are pure overhead (measurably so
+    in interpret mode), so they are only paid when tiles will be pruned.
+    """
+    from repro.core.index import mbr_gap2
+    e_mbr = _host_tile_mbrs(entries, cand_blk)
+    q_mbr = _host_tile_mbrs(queries, qry_blk)
+    d_prune = _host_prune_threshold(d, entries, queries)
+    gap2 = mbr_gap2(e_mbr[:, None, 0:3], e_mbr[:, None, 3:6],
+                    q_mbr[None, :, 0:3], q_mbr[None, :, 3:6])
+    if not np.any(gap2 > d_prune * d_prune):
+        return None
+    return e_mbr, q_mbr, np.float32(d_prune)
 
 
 def query_block(entries: jnp.ndarray, queries: jnp.ndarray, d, *,
                 capacity: int, use_pallas: bool = True, interpret: bool = True,
                 cand_blk: int = DEFAULT_CAND_BLK, qry_blk: int = DEFAULT_QRY_BLK,
-                compaction: str = "fused"):
+                compaction: str = "fused", pruning: str = "none"):
     """Interaction evaluation + deterministic compaction into flat buffers.
 
     Returns a dict with:
@@ -149,6 +251,9 @@ def query_block(entries: jnp.ndarray, queries: jnp.ndarray, d, *,
       ``t_exit``     (capacity,) f32
       ``count``      () int32 — true number of hits (may exceed capacity ⇒
                      caller retries with larger capacity)
+      ``pruned_tiles`` () int32 — grid tiles the spatial early-out skipped
+      ``num_tiles``  () int32 — grid tiles the dispatch comprised (both 0
+                     on paths without a tile loop — dense / jnp oracle)
 
     ``compaction="fused"`` routes through the in-kernel compaction kernel
     when ``use_pallas`` is set (the jnp oracle has no kernel to fuse into,
@@ -158,12 +263,37 @@ def query_block(entries: jnp.ndarray, queries: jnp.ndarray, d, *,
     docstring).  ``"fused_rowloop"`` selects that escape hatch explicitly;
     ``"dense"`` forces the two-phase fallback.  All orders are
     deterministic; see the module docstring for how they differ.
+
+    ``pruning="spatial"`` arms the fused kernels' tile-level MBR early-out:
+    per-tile entry/query bounding boxes and the (inflated — see
+    ``_host_prune_threshold``) threshold are precomputed host-side at
+    dispatch (numpy, no device work, dispatch stays async) and the armed
+    kernel is only used when the box test finds at least one skippable
+    tile pair — otherwise the classic kernel runs with zero overhead
+    (``_host_tile_prune``).  Inside an outer trace (``shard_map``) the
+    boxes are computed in-graph instead.  Pruning never changes the
+    result set, only the work; the dense path ignores it.
     """
     if compaction not in COMPACTIONS:
         raise ValueError(f"unknown compaction {compaction!r}; "
                          f"choose from {COMPACTIONS}")
+    if pruning not in PRUNINGS:
+        raise ValueError(f"unknown pruning {pruning!r}; "
+                         f"choose from {PRUNINGS}")
+    prune_arrays = {}
+    if (pruning == "spatial" and use_pallas
+            and compaction in ("fused", "fused_rowloop")
+            and isinstance(entries, np.ndarray)
+            and isinstance(queries, np.ndarray)
+            and entries.shape[0] and queries.shape[0]):
+        prep = _host_tile_prune(entries, queries, d, cand_blk, qry_blk)
+        if prep is None:
+            pruning = "none"           # nothing skippable: unarmed kernel
+        else:
+            prune_arrays = dict(zip(("e_mbr", "q_mbr", "d_prune"), prep))
     kw = dict(capacity=capacity, use_pallas=use_pallas, interpret=interpret,
-              cand_blk=cand_blk, qry_blk=qry_blk)
+              cand_blk=cand_blk, qry_blk=qry_blk, pruning=pruning,
+              **prune_arrays)
     if compaction == "fused" and use_pallas:
         if _fused_fallback["tripped"]:
             compaction = "fused_rowloop"
@@ -194,11 +324,18 @@ def query_block(entries: jnp.ndarray, queries: jnp.ndarray, d, *,
 
 @functools.partial(jax.jit, static_argnames=("capacity", "use_pallas",
                                              "interpret", "cand_blk",
-                                             "qry_blk", "compaction"))
+                                             "qry_blk", "compaction",
+                                             "pruning"))
 def _query_block_jit(entries: jnp.ndarray, queries: jnp.ndarray, d, *,
                      capacity: int, use_pallas: bool, interpret: bool,
-                     cand_blk: int, qry_blk: int, compaction: str):
-    """Jitted :func:`query_block` body for one *resolved* compaction."""
+                     cand_blk: int, qry_blk: int, compaction: str,
+                     pruning: str = "none", e_mbr=None, q_mbr=None,
+                     d_prune=None):
+    """Jitted :func:`query_block` body for one *resolved* compaction.
+    ``e_mbr``/``q_mbr``/``d_prune`` carry host-precomputed tile-prune
+    operands (see ``_host_tile_prune``); with ``pruning="spatial"`` and no
+    precomputed operands they are derived in-graph (outer-trace callers).
+    """
     c, q = entries.shape[0], queries.shape[0]
     compute_dtype = jnp.promote_types(entries.dtype, jnp.float32)
     if c == 0 or q == 0:
@@ -209,12 +346,24 @@ def _query_block_jit(entries: jnp.ndarray, queries: jnp.ndarray, d, *,
         ep = _pad_rows(entries, cand_blk, pad_t)
         qp = _pad_rows(queries, qry_blk, pad_t)
         append = "rowloop" if compaction == "fused_rowloop" else "chunk"
-        e_idx, q_idx, t_enter, t_exit, count = _dt.distthresh_compact_pallas(
+        prune_kw = {}
+        if e_mbr is not None:
+            prune_kw = dict(e_mbr=e_mbr, q_mbr=q_mbr, d_prune=d_prune)
+        elif pruning == "spatial":
+            prune_kw = dict(e_mbr=_jit_tile_mbrs(ep, cand_blk, c),
+                            q_mbr=_jit_tile_mbrs(qp, qry_blk, q),
+                            d_prune=_jit_prune_threshold(d, entries,
+                                                         queries))
+        (e_idx, q_idx, t_enter, t_exit, count,
+         pruned) = _dt.distthresh_compact_pallas(
             ep, qp.T, d, capacity=capacity, cand_blk=cand_blk,
             qry_blk=qry_blk, valid_c=c, valid_q=q, interpret=interpret,
-            append=append)
+            append=append, **prune_kw)
+        num_tiles = (ep.shape[0] // cand_blk) * (qp.shape[0] // qry_blk)
         return {"entry_idx": e_idx, "query_idx": q_idx,
-                "t_enter": t_enter, "t_exit": t_exit, "count": count}
+                "t_enter": t_enter, "t_exit": t_exit, "count": count,
+                "pruned_tiles": pruned,
+                "num_tiles": jnp.asarray(num_tiles, jnp.int32)}
 
     # Dense two-phase compaction (the pre-fusion path; EXPERIMENTS §Perf
     # galaxy-db): phase 1 materializes ONLY the dense int8 hit mask — XLA
@@ -249,7 +398,9 @@ def _query_block_jit(entries: jnp.ndarray, queries: jnp.ndarray, d, *,
     out_ent = jnp.where(valid, pair_enter, zero)
     out_ext = jnp.where(valid, pair_exit, zero)
     return {"entry_idx": out_e, "query_idx": out_q,
-            "t_enter": out_ent, "t_exit": out_ext, "count": count}
+            "t_enter": out_ent, "t_exit": out_ext, "count": count,
+            "pruned_tiles": jnp.zeros((), jnp.int32),
+            "num_tiles": jnp.zeros((), jnp.int32)}
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret",

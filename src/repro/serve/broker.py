@@ -46,12 +46,18 @@ loop body an async transport (HTTP handler, queue consumer) calls; the
 broker itself is not thread-safe.  It always executes groups through the
 pipelined executor — ``ExecutionPolicy.pipeline=False`` exists for the
 perf-model fits on ``db.query``, not for serving.
+
+Group selection is **earliest-deadline-first** (PR 5): each ``step()``
+pumps the pending ticket with the nearest absolute deadline, so a
+tight-deadline ticket overtakes queued loose-deadline work instead of
+waiting out a FIFO line; tickets without a deadline run after all
+deadlined ones, FIFO among themselves.  Within a ticket, groups still
+execute in order (slice concatenation stays a canonical prefix).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
 from typing import Callable
 
 import numpy as np
@@ -259,11 +265,16 @@ class QueryBroker:
         self.db = db
         self.backend = backend
         self.policy = policy or db.policy
+        if predict_seconds is None and getattr(db, "response_model",
+                                               None) is not None:
+            # One fitted §8 model feeds both planning (predict_hits via the
+            # facade's planner) and admission pricing here.
+            predict_seconds = db.response_model.predict_batch_seconds
         self.predict_seconds = predict_seconds
         self.admission_slack = float(admission_slack)
         self.max_inflight_interactions = max_inflight_interactions
         self.group_size = group_size
-        self._queue: deque[QueryTicket] = deque()
+        self._queue: list[QueryTicket] = []
         self._next_uid = 0
         self._inflight_interactions = 0
         self._inflight_predicted = 0.0
@@ -321,10 +332,13 @@ class QueryBroker:
         be = self.db.backend(backend, pol)
         qs, order = TrajectoryDB._sorted(queries)
         if be.needs_plan:
-            plan = self.db._make_plan(qs, pol, backend)
+            plan = self.db._make_plan(qs, pol, backend, d=d)
             interactions = plan.total_interactions
             gs = group_size if group_size is not None else self.group_size
-            groups = (make_groups(plan.num_batches, gs)
+            # Group along the plan's split runs: sibling batches of one
+            # pruned query range must share a slice for the concatenation
+            # to stay a canonical prefix.
+            groups = (make_groups(plan.num_batches, gs, runs=plan.runs)
                       if gs is not None else [list(g) for g in plan.groups])
             group_ints = [sum(plan.batches[i].num_ints for i in g)
                           for g in groups]
@@ -397,13 +411,24 @@ class QueryBroker:
         return _GroupRunner(dispatcher, plan)
 
     # -- the pump ---------------------------------------------------------
+    def _select(self) -> QueryTicket:
+        """Earliest-deadline-first ticket selection: nearest absolute
+        deadline wins; tickets without a deadline sort after every
+        deadlined one, FIFO (uid order) among ties."""
+        def key(t: QueryTicket):
+            dl = (t.submitted_at + t.deadline if t.deadline is not None
+                  else float("inf"))
+            return (dl, t.uid)
+        return min(self._queue, key=key)
+
     def step(self) -> bool:
         """Execute the next pending dispatch group (one pipelined two-phase
-        dispatch, ≤ 2 host syncs) and deliver its slice.  Returns ``False``
-        when nothing is pending — the serving loop's idle signal."""
+        dispatch, ≤ 2 host syncs) of the earliest-deadline pending ticket
+        and deliver its slice.  Returns ``False`` when nothing is pending —
+        the serving loop's idle signal."""
         if not self._queue:
             return False
-        ticket = self._queue[0]
+        ticket = self._select()
         if (ticket.deadline is not None
                 and time.perf_counter() - ticket.submitted_at
                 > ticket.deadline):
@@ -474,7 +499,7 @@ class QueryBroker:
             ticket._run_group = None
             ticket._order = None
             ticket._partial_cache = None
-            self._queue.popleft()
+            self._queue.remove(ticket)
             self.completed += 1
         if ticket.on_slice is not None:
             ticket.on_slice(ticket, slice_)

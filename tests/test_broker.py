@@ -191,6 +191,50 @@ def test_deadline_exceeded_mid_flight(world):
 
 
 # ----------------------------------------------------------------------
+# Earliest-deadline-first pump fairness (PR 5 satellite).
+# ----------------------------------------------------------------------
+def test_tight_deadline_ticket_overtakes_queued_loose_one(world):
+    """Regression: the pump is deadline-ordered, not FIFO — a
+    tight-deadline ticket submitted *after* a queued loose-deadline one is
+    served first."""
+    db, queries, d = world
+    broker = db.broker(backend="jnp")
+    order = []
+    loose = broker.submit(queries, d, deadline=3600.0, group_size=1,
+                          on_slice=lambda tk, sl: order.append(tk.uid))
+    tight = broker.submit(queries, d, deadline=600.0, group_size=1,
+                          on_slice=lambda tk, sl: order.append(tk.uid))
+    assert loose.num_groups >= 2            # loose has queued work left
+    assert broker.step()                    # first pump step
+    assert order == [tight.uid] or tight.groups_completed == 1
+    assert loose.groups_completed == 0      # overtaken
+    broker.run_until_idle()
+    assert tight.state == loose.state == "done"
+    # EDF finishes the tight ticket entirely before touching the loose one
+    assert order[:tight.num_groups] == [tight.uid] * tight.num_groups
+    _assert_identical(tight.result(), loose.result())
+
+
+def test_undeadlined_tickets_stay_fifo(world):
+    """Tickets without deadlines keep FIFO order among themselves but
+    yield to any deadlined ticket."""
+    db, queries, d = world
+    broker = db.broker(backend="jnp")
+    a = broker.submit(queries, d, group_size=1)
+    b = broker.submit(queries, d, group_size=1)
+    c = broker.submit(queries, d, deadline=3600.0, group_size=1)
+    broker.step()
+    assert c.groups_completed == 1 and a.groups_completed == 0
+    # drain c, then FIFO between a and b
+    for _ in range(c.num_groups - 1):
+        broker.step()
+    assert c.state == "done"
+    broker.step()
+    assert a.groups_completed == 1 and b.groups_completed == 0
+    broker.run_until_idle()
+
+
+# ----------------------------------------------------------------------
 # Error lifecycle.
 # ----------------------------------------------------------------------
 def test_errored_ticket_does_not_poison_the_queue(world):

@@ -98,3 +98,95 @@ class TestProperties:
         nonempty = idx.b_last >= idx.b_first
         total = int((idx.b_last[nonempty] - idx.b_first[nonempty] + 1).sum())
         assert total == len(db)
+
+
+class TestSpatialMBRs:
+    """The per-bin MBR layer (PR 5): containment, prefix/suffix unions,
+    and the coarse pricing estimate's conservatism."""
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000), num_bins=st.sampled_from([4, 33, 128]))
+    def test_bin_mbrs_contain_member_segments(self, seed, num_bins):
+        rng = np.random.default_rng(seed)
+        db = random_segments(rng, 200)
+        idx = TemporalBinIndex.build(db, num_bins=num_bins)
+        slo, shi = db.mbrs()
+        for j in range(num_bins):
+            f, l = int(idx.b_first[j]), int(idx.b_last[j])
+            if l < f:
+                assert np.all(np.isinf(idx.mbr_lo[j]))
+                continue
+            assert np.all(idx.mbr_lo[j] <= slo[f:l + 1].min(axis=0) + 1e-6)
+            assert np.all(idx.mbr_hi[j] >= shi[f:l + 1].max(axis=0) - 1e-6)
+
+    def test_prefix_suffix_are_running_unions(self):
+        rng = np.random.default_rng(1)
+        db = random_segments(rng, 300)
+        idx = TemporalBinIndex.build(db, num_bins=32)
+        want_lo = np.minimum.accumulate(idx.mbr_lo, axis=0)
+        np.testing.assert_array_equal(idx.prefix_lo, want_lo)
+        want_suf = np.maximum.accumulate(idx.mbr_hi[::-1], axis=0)[::-1]
+        np.testing.assert_array_equal(idx.suffix_hi, want_suf)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000), d=st.floats(0.5, 10.0))
+    def test_coarse_estimate_is_conservative(self, seed, d):
+        """The coarse pricing count never under-counts the exact pruned
+        candidates, and never exceeds the temporal-only count."""
+        rng = np.random.default_rng(seed)
+        db = random_segments(rng, 300)
+        queries = random_segments(rng, 16)
+        idx = TemporalBinIndex.build(db, num_bins=100)
+        qlo, qhi = queries.mbrs()
+        qt0 = queries.ts.astype(np.float64)
+        qt1 = queries.te.astype(np.float64)
+        est = idx.estimate_pruned_candidates_batch(qt0, qt1, qlo, qhi,
+                                                   float(d))
+        temporal = idx.num_candidates_batch(qt0, qt1)
+        for k in range(len(queries)):
+            exact = idx.pruned_num_candidates(float(qt0[k]), float(qt1[k]),
+                                              qlo[k], qhi[k], float(d))
+            assert exact <= est[k] <= temporal[k]
+
+    def test_estimate_equals_temporal_when_nothing_prunes(self):
+        """With a huge d the estimate reduces exactly to the temporal
+        count — pruning-aware pricing is a strict refinement."""
+        rng = np.random.default_rng(2)
+        db = random_segments(rng, 250)
+        queries = random_segments(rng, 20)
+        idx = TemporalBinIndex.build(db, num_bins=64)
+        qlo, qhi = queries.mbrs()
+        est = idx.estimate_pruned_candidates_batch(
+            queries.ts, queries.te, qlo, qhi, 1e9)
+        np.testing.assert_array_equal(
+            est, idx.num_candidates_batch(queries.ts, queries.te))
+
+    def test_subranges_subset_of_candidate_range(self):
+        rng = np.random.default_rng(3)
+        db = random_segments(rng, 400)
+        queries = random_segments(rng, 10)
+        idx = TemporalBinIndex.build(db, num_bins=50)
+        qlo, qhi = queries.mbrs()
+        for k in range(len(queries)):
+            qt0, qt1 = float(queries.ts[k]), float(queries.te[k])
+            first, last = idx.candidate_range(qt0, qt1)
+            for f, l in idx.candidate_subranges(qt0, qt1, qlo[k], qhi[k],
+                                                3.0):
+                assert first <= f <= l <= last
+
+    def test_max_subranges_cap_merges_smallest_gaps(self):
+        rng = np.random.default_rng(4)
+        db = random_segments(rng, 400)
+        idx = TemporalBinIndex.build(db, num_bins=200)
+        qlo, qhi = db.mbrs()
+        lo, hi = qlo.min(axis=0), qhi.max(axis=0)
+        subs = idx.candidate_subranges(0.0, 60.0, lo, hi, 0.5,
+                                       max_subranges=2)
+        assert len(subs) <= 2
+        uncapped = idx.candidate_subranges(0.0, 60.0, lo, hi, 0.5,
+                                           max_subranges=10**9)
+        # the capped ranges cover everything the uncapped ones do
+        def covered(ranges, i):
+            return any(f <= i <= l for f, l in ranges)
+        for f, l in uncapped:
+            assert covered(subs, f) and covered(subs, l)

@@ -83,3 +83,62 @@ class TestModelPick:
         t_small = dev.predict(256, 16, 1 / 3, 1 / 3, 1 / 3)
         t_big = dev.predict(4096, 256, 1 / 3, 1 / 3, 1 / 3)
         assert t_big > t_small > 0
+
+
+class TestModelWiring:
+    """PR 5 satellite: one fitted ResponseTimeModel feeds planning
+    (predict_hits) and serving admission (predict_seconds) end to end."""
+
+    def test_fit_response_model_wires_planner_and_broker(self, world):
+        from repro.api import ExecutionPolicy, TrajectoryDB
+        db_segs, queries, d = world
+        db = TrajectoryDB.from_segments(
+            db_segs, policy=ExecutionPolicy(num_bins=64, batching="periodic",
+                                            batch_params={"s": 16}))
+        assert db.response_model is None
+        model = db.fit_response_model(queries, d, s=16, quick=True,
+                                      num_epochs=6)
+        assert db.response_model is model
+        assert model.alphas is not None and model.alphas.shape == (6,)
+        # the planner's predict_hits is the model's batch-hit predictor
+        planner = db.planner(num_queries=len(queries))
+        assert planner.predict_hits == model.predict_batch_hits
+        # the broker defaults its admission predictor to the model
+        broker = db.broker(backend="jnp")
+        assert broker.predict_seconds == model.predict_batch_seconds
+        ticket = broker.submit(queries, d)
+        assert ticket.predicted_seconds is not None
+        assert ticket.predicted_seconds >= 0
+        ticket.result()
+        # per-batch predictions are finite/non-negative and track pruned
+        # num_ints (the plan's batches carry the pruned workload)
+        plan = db.plan(queries, d=d)
+        for b in plan.batches:
+            hits = model.predict_batch_hits(b)
+            assert 0 <= hits <= b.num_ints
+            assert model.predict_batch_seconds(b) >= 0.0
+        db.response_model = None
+        assert db.broker(backend="jnp").predict_seconds is None
+
+    def test_unfitted_model_raises_on_batch_prediction(self):
+        dev = benchmark_device_curves(c_values=(256, 512),
+                                      q_values=(16, 32), repeats=1)
+        from repro.core.perfmodel import HostTimeModel
+        model = ResponseTimeModel(dev, HostTimeModel(1e-4, 1.0, 1e9))
+        from repro.core.batching import QueryBatch
+        b = QueryBatch(0, 7, 0.0, 1.0, 0, 99, 800)
+        with pytest.raises(ValueError, match="fit_alphas"):
+            model.predict_batch_hits(b)
+
+    def test_alpha_estimation_pruned_denominator(self, world):
+        """With spatial pruning the α denominator shrinks to the pruned
+        interaction count, so pruned-α ≥ unpruned-α."""
+        db, queries, d = world
+        eng = DistanceThresholdEngine(db, num_bins=64)
+        a_none = estimate_alpha_by_epoch(eng, queries, d, s=16,
+                                         num_epochs=6, seed=0,
+                                         pruning="none")
+        a_spatial = estimate_alpha_by_epoch(eng, queries, d, s=16,
+                                            num_epochs=6, seed=0,
+                                            pruning="spatial")
+        assert np.all(a_spatial >= a_none - 1e-12)

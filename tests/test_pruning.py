@@ -1,0 +1,353 @@
+"""Two-level spatiotemporal candidate pruning (PR 5): per-bin MBR index,
+sub-range splitting, pruning-aware planning, the in-kernel tile early-out,
+and the exactness guarantee — pruning changes the work, never the result."""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings
+from _hypothesis_compat import strategies as st
+from conftest import random_segments
+from repro.api import BACKENDS, ExecutionPolicy, TrajectoryDB
+from repro.core.batching import ALGORITHMS
+from repro.core.index import TemporalBinIndex, mbr_gap2
+from repro.core.planner import QueryPlanner, make_groups
+from repro.core.segments import SegmentArray
+
+_FIELDS = ("entry_idx", "entry_traj", "entry_seg", "query_idx",
+           "t_enter", "t_exit")
+_IDX_FIELDS = ("entry_idx", "entry_traj", "entry_seg", "query_idx")
+
+
+@pytest.fixture(scope="module")
+def clustered_db():
+    """The spatially-clustered range-monitoring scenario (C1): a drifting
+    swarm database + static clustered sensor queries — the regime where
+    per-bin MBR pruning bites.  scale/seed are pinned where the Pallas
+    kernel and the jnp oracle agree on every borderline-f32 pair."""
+    policy = ExecutionPolicy(batching="periodic", batch_params={"s": 16},
+                             num_bins=300)
+    db = TrajectoryDB.from_scenario("C1", scale=0.02, policy=policy)
+    assert db.scenario_queries is not None
+    return db
+
+
+@pytest.fixture(scope="module")
+def s2_db():
+    """A paper scenario with no exploitable space-time correlation —
+    pruning must be a well-behaved no-op on it."""
+    policy = ExecutionPolicy(batching="periodic", batch_params={"s": 32},
+                             num_bins=200)
+    return TrajectoryDB.from_scenario("S2", scale=0.01, policy=policy)
+
+
+# ----------------------------------------------------------------------
+# Acceptance: 5-backend byte-identical equivalence, pruning on vs off.
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("scenario", ["clustered", "s2"])
+def test_five_backend_equivalence_pruning_on_off(scenario, clustered_db,
+                                                 s2_db, request):
+    db = clustered_db if scenario == "clustered" else s2_db
+    queries, d = db.scenario_queries, db.scenario_d
+    results = {}
+    for backend in BACKENDS:
+        for pruning in ("spatial", "none"):
+            results[(backend, pruning)] = db.query(queries, d,
+                                                   backend=backend,
+                                                   pruning=pruning)
+    base = results[("jnp", "spatial")]
+    assert len(base) > 0, "scenario produced no hits — adjust scale/d"
+    for (backend, pruning), res in results.items():
+        label = (scenario, backend, pruning)
+        assert len(res) == len(base), label
+        for f in _IDX_FIELDS:
+            np.testing.assert_array_equal(getattr(res, f), getattr(base, f),
+                                          err_msg=str(label))
+        # interval endpoints: exact within a backend across pruning (same
+        # per-pair math — asserted strictly below), f32-fusion-order
+        # tolerance across backends (C1's t/coordinate magnitudes make the
+        # endpoint round-off of borderline intervals a bit larger than
+        # S2's).
+        np.testing.assert_allclose(res.t_enter, base.t_enter,
+                                   rtol=1e-3, atol=5e-3, err_msg=str(label))
+        np.testing.assert_allclose(res.t_exit, base.t_exit,
+                                   rtol=1e-3, atol=5e-3, err_msg=str(label))
+    for backend in BACKENDS:
+        on, off = results[(backend, "spatial")], results[(backend, "none")]
+        for f in _FIELDS:
+            np.testing.assert_array_equal(
+                getattr(on, f), getattr(off, f),
+                err_msg=f"{backend}: pruning changed {f}")
+
+
+def test_pruning_actually_prunes_on_clustered(clustered_db):
+    """On the clustered scenario both pruning levels must fire: the
+    planner removes interactions (pruned sub-ranges) and the Pallas fused
+    kernel skips tiles — with the counters surfaced through the stats."""
+    db = clustered_db
+    queries, d = db.scenario_queries, db.scenario_d
+    on = db.query(queries, d, backend="jnp", pruning="spatial")
+    off = db.query(queries, d, backend="jnp", pruning="none")
+    assert off.plan.pruned_interactions == 0
+    assert on.plan.pruned_interactions > 0
+    assert (on.plan.total_interactions + on.plan.pruned_interactions
+            == off.plan.total_interactions)
+    # level 1 reaches the executor: dispatched interactions are the pruned
+    # ones, and the stats surface what was removed.
+    assert on.stats.total_interactions == on.plan.total_interactions
+    assert on.stats.pruned_interactions == on.plan.pruned_interactions
+    # With this fine bin index, level 1 already removed every far
+    # candidate, so the kernel's tile test finds nothing left to skip.
+    pal = db.query(queries, d, backend="pallas", pruning="spatial")
+    assert pal.stats.total_tiles > 0
+    assert pal.stats.num_syncs <= 2      # pipelined O(1)-sync shape holds
+    pal_off = db.query(queries, d, backend="pallas", pruning="none")
+    assert pal_off.stats.pruned_tiles == 0
+
+
+def test_tile_early_out_covers_for_coarse_bins():
+    """Level 2 (the in-kernel tile early-out) is complementary to level 1:
+    with a deliberately coarse bin index (fat per-bin boxes → little
+    planner pruning), the 256-segment kernel tiles — much finer boxes —
+    skip the distant work instead, with the counters in BatchStats."""
+    policy = ExecutionPolicy(batching="periodic", batch_params={"s": 16},
+                             num_bins=8)
+    db = TrajectoryDB.from_scenario("C1", scale=0.02, policy=policy)
+    queries, d = db.scenario_queries, db.scenario_d
+    pal = db.query(queries, d, backend="pallas", pruning="spatial")
+    assert pal.stats.pruned_tiles > 0
+    assert pal.stats.pruned_tiles <= pal.stats.total_tiles
+    assert any(b.pruned_tiles > 0 for b in pal.stats.batches)
+    # and the result is still the exact one (idx strict; endpoints get
+    # the usual cross-backend f32 tolerance)
+    base = db.query(queries, d, backend="jnp", pruning="none")
+    for f in _IDX_FIELDS:
+        np.testing.assert_array_equal(getattr(pal, f), getattr(base, f),
+                                      err_msg=f)
+    np.testing.assert_allclose(pal.t_enter, base.t_enter, rtol=1e-3,
+                               atol=5e-3)
+
+
+def test_broker_slices_canonical_with_pruning(clustered_db):
+    """GroupSlice concatenation stays a byte-identical canonical prefix
+    with pruning on — split sibling batches never straddle a slice."""
+    db = clustered_db
+    queries, d = db.scenario_queries, db.scenario_d
+    for backend in ("jnp", "shard"):
+        base = db.query(queries, d, backend=backend, pruning="spatial")
+        broker = db.broker(backend=backend)
+        ticket = broker.submit(queries, d, group_size=1)
+        broker.run_until_idle()
+        for f in _FIELDS:
+            concat = np.concatenate(
+                [getattr(s.result, f) for s in ticket.slices()])
+            np.testing.assert_array_equal(concat, getattr(base, f),
+                                          err_msg=(backend, f))
+        assert all(s.num_syncs <= 2 for s in ticket.slices())
+
+
+# ----------------------------------------------------------------------
+# Property: pruned sub-ranges never drop a true hit.
+# ----------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), d=st.floats(0.2, 12.0),
+       num_bins=st.sampled_from([5, 37, 200]))
+def test_subranges_never_drop_a_true_hit(seed, d, num_bins):
+    """For ANY db/query/d: every spatiotemporally hitting entry segment
+    lies inside one of the pruned sub-ranges (exactness of the MBR test
+    with the inflated threshold)."""
+    rng = np.random.default_rng(seed)
+    db = random_segments(rng, 250)
+    queries = random_segments(rng, 12)
+    idx = TemporalBinIndex.build(db, num_bins=num_bins)
+    qlo, qhi = queries.mbrs()
+    elo, ehi = db.mbrs()
+    for k in range(0, len(queries), 3):
+        qt0, qt1 = float(queries.ts[k]), float(queries.te[k])
+        subs = idx.candidate_subranges(qt0, qt1, qlo[k], qhi[k], float(d))
+        # disjoint + increasing
+        for (f1, l1), (f2, l2) in zip(subs, subs[1:]):
+            assert l1 < f2
+        # a hit needs temporal overlap AND a pair box gap <= d (necessary
+        # condition — the true interaction test is strictly stronger)
+        may_hit = ((db.ts <= qt1) & (db.te >= qt0)
+                   & (mbr_gap2(elo, ehi, qlo[k], qhi[k]) <= float(d) ** 2))
+        covered = np.zeros(len(db), bool)
+        for f, l in subs:
+            covered[f:l + 1] = True
+        missing = np.nonzero(may_hit & ~covered)[0]
+        assert missing.size == 0, (k, missing[:5], subs)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), d=st.floats(0.5, 8.0),
+       algo=st.sampled_from(["periodic", "greedysetsplit-min",
+                             "setsplit-max"]))
+def test_pruned_query_equals_brute_force(seed, d, algo):
+    """End-to-end randomized exactness: the pruned engine result equals
+    the all-pairs oracle for any batching algorithm."""
+    rng = np.random.default_rng(seed)
+    db = TrajectoryDB.from_segments(
+        random_segments(rng, 300),
+        policy=ExecutionPolicy(num_bins=64, batching=algo))
+    queries = random_segments(rng, 30)
+    got = db.query(queries, float(d), backend="jnp", pruning="spatial")
+    want = db.query(queries, float(d), backend="brute")
+    assert len(got) == len(want)
+    for f in _IDX_FIELDS:
+        np.testing.assert_array_equal(getattr(got, f), getattr(want, f))
+
+
+# ----------------------------------------------------------------------
+# Degenerate / edge cases.
+# ----------------------------------------------------------------------
+class TestDegenerate:
+    def _single_instant_db(self):
+        n = 8
+        z = np.linspace(0.0, 7.0, n).astype(np.float32)
+        t = np.full(n, 3.0, np.float32)
+        return SegmentArray(z, z.copy(), z.copy(), z.copy(), z.copy(),
+                            z.copy(), t, t.copy(),
+                            np.arange(n, dtype=np.int32),
+                            np.zeros(n, np.int32))
+
+    def test_single_instant_db(self):
+        db = self._single_instant_db()
+        idx = TemporalBinIndex.build(db, num_bins=16)
+        subs = idx.candidate_subranges(2.0, 4.0, np.zeros(3), np.zeros(3),
+                                       2.0)
+        assert subs and subs[0][0] == 0
+        # far away in space: everything pruned
+        far = np.full(3, 1e6)
+        assert idx.candidate_subranges(2.0, 4.0, far, far, 2.0) == []
+
+    def test_zero_extent_query_mbr(self):
+        """A zero-extent (point) query box works; an inverted/empty query
+        box (lo=+inf, hi=-inf) prunes everything."""
+        rng = np.random.default_rng(3)
+        db = random_segments(rng, 100)
+        idx = TemporalBinIndex.build(db, num_bins=32)
+        point = np.asarray(db.mbrs()[0][0])
+        assert idx.candidate_subranges(0.0, 50.0, point, point, 1.0)
+        empty_lo = np.full(3, np.inf)
+        empty_hi = np.full(3, -np.inf)
+        assert idx.candidate_subranges(0.0, 50.0, empty_lo, empty_hi,
+                                       1.0) == []
+
+    def test_fully_pruned_query_returns_empty(self):
+        """A query spatially far from everything returns the empty result
+        (and a plan whose batches are all empty) — on every backend."""
+        rng = np.random.default_rng(5)
+        db = TrajectoryDB.from_segments(random_segments(rng, 200),
+                                        policy=ExecutionPolicy(num_bins=32))
+        q = random_segments(rng, 10)
+        far = SegmentArray(q.xs + 1e5, q.ys + 1e5, q.zs + 1e5,
+                           q.xe + 1e5, q.ye + 1e5, q.ze + 1e5,
+                           q.ts, q.te, q.seg_id, q.traj_id)
+        for backend in BACKENDS:
+            res = db.query(far, 2.0, backend=backend, pruning="spatial")
+            assert len(res) == 0, backend
+        plan = db.plan(far, d=2.0)
+        assert plan.total_interactions == 0
+        assert plan.pruned_interactions > 0
+
+    def test_empty_bin_boxes_are_inert(self):
+        """Empty bins carry the empty box (±inf) — gap inf, never kept,
+        and never corrupting the prefix/suffix unions."""
+        rng = np.random.default_rng(7)
+        db = random_segments(rng, 50)
+        idx = TemporalBinIndex.build(db, num_bins=500)   # mostly empty bins
+        nonempty = idx.b_last >= idx.b_first
+        assert np.all(np.isinf(idx.mbr_lo[~nonempty]))
+        assert np.all(np.isfinite(idx.prefix_lo[-1]))
+        assert np.all(np.isfinite(idx.suffix_lo[0]))
+
+
+# ----------------------------------------------------------------------
+# Satellite: interaction-count accounting is consistent end to end.
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("pruning", ["spatial", "none"])
+@pytest.mark.parametrize("algo,params", [
+    ("periodic", {"s": 8}),
+    ("greedysetsplit-min", {"bound": 8}),
+    ("setsplit-max", {"max_size": 16}),
+    ("setsplit-fixed", {"num_batches": 4}),
+])
+def test_plan_interactions_match_executor_dispatch(algo, params, pruning):
+    """The batching algorithms' total_interactions equals the executor's
+    dispatched interaction count — including for queries that outlast the
+    database extent (candidate ranges clamp to [0, n_segments))."""
+    rng = np.random.default_rng(11)
+    db = TrajectoryDB.from_segments(
+        random_segments(rng, 200, t_span=(0.0, 20.0)),
+        policy=ExecutionPolicy(num_bins=48, batching=algo,
+                               batch_params=params))
+    # queries extend far beyond the db's temporal extent on both sides
+    q = random_segments(rng, 24, t_span=(-30.0, 60.0), max_len=50.0)
+    res = db.query(q, 3.0, backend="jnp", pruning=pruning)
+    assert res.plan.total_interactions == res.stats.total_interactions
+    n = len(db.segments)
+    for b in res.plan.batches:
+        assert 0 <= b.cand_first <= max(b.cand_last, 0) <= n - 1 \
+            or b.cand_last < b.cand_first          # empty encoding
+        assert b.num_ints == b.size * b.num_candidates
+
+
+def test_candidate_range_batch_clamped():
+    rng = np.random.default_rng(13)
+    db = random_segments(rng, 120, t_span=(0.0, 10.0))
+    idx = TemporalBinIndex.build(db, num_bins=16)
+    qt0 = np.array([-100.0, 0.0, 9.0, 100.0])
+    qt1 = np.array([200.0, 500.0, 9.5, 200.0])
+    first, last = idx.candidate_range_batch(qt0, qt1)
+    assert np.all(first >= 0)
+    assert np.all(last <= len(db) - 1)
+
+
+# ----------------------------------------------------------------------
+# Run-aligned dispatch grouping.
+# ----------------------------------------------------------------------
+class TestRunAlignedGroups:
+    def test_groups_never_split_runs(self):
+        runs = [3, 1, 2, 4, 1]
+        groups = make_groups(sum(runs), 2, runs=runs)
+        assert [i for g in groups for i in g] == list(range(sum(runs)))
+        starts = set(np.cumsum([0] + runs).tolist())
+        for g in groups:
+            assert g[0] in starts        # every group begins a run
+        assert make_groups(sum(runs), None, runs=runs) == [
+            list(range(sum(runs)))]
+
+    def test_planner_emits_runs_when_split(self, clustered_db):
+        db = clustered_db
+        queries, d = db.scenario_queries, db.scenario_d
+        plan = db.plan(queries, d=d)
+        assert plan.runs is not None
+        assert sum(plan.runs) == plan.num_batches
+        # at least one batch was split on the clustered workload
+        assert max(plan.runs) > 1
+        # siblings share the query range and have disjoint increasing
+        # candidate ranges
+        i = 0
+        for r in plan.runs:
+            sibs = plan.batches[i:i + r]
+            i += r
+            assert len({(b.q_first, b.q_last) for b in sibs}) == 1
+            for a, b in zip(sibs, sibs[1:]):
+                if a.num_candidates and b.num_candidates:
+                    assert a.cand_last < b.cand_first
+
+
+# ----------------------------------------------------------------------
+# Pruning-aware batch pricing.
+# ----------------------------------------------------------------------
+def test_pruning_aware_merges_keep_spatial_coherence(clustered_db):
+    """With pruned pricing, merging spatially distant sensor clusters has
+    positive cost, so the merge algorithms keep (cheaper) coherent
+    batches: the planned workload never exceeds the temporal-only one."""
+    db = clustered_db
+    queries, d = db.scenario_queries, db.scenario_d
+    pol = db.policy.with_(batching="greedysetsplit-min",
+                          batch_params={"bound": 8})
+    pruned = db.plan(queries, pol, d=d)
+    temporal = db.plan(queries, pol.with_(pruning="none"), d=d)
+    assert pruned.total_interactions < temporal.total_interactions
