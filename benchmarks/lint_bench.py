@@ -1,0 +1,106 @@
+"""PR 6 linter benchmark: ``repro.lint`` over the full source tree.
+
+The linter runs in CI on every commit, so its own wall time is a budgeted
+quantity: a full ``src/`` + ``tests/`` + ``benchmarks/`` pass must stay
+under ``BUDGET_SECONDS`` (5 s) or it starts dominating the fast feedback
+loop it exists to protect.  ``BENCH_PR6.json`` records, per linted root:
+wall seconds (best of ``repeats``), files/KLoC throughput, and the
+violation counts — plus the CLI end-to-end time (config load + JSON
+emission included).
+
+Run directly::
+
+    PYTHONPATH=src python -m benchmarks.lint_bench [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+BUDGET_SECONDS = 5.0
+
+
+def _tree_stats(paths):
+    from repro.lint import _expand
+    files = _expand(paths)
+    lines = 0
+    for fname in files:
+        try:
+            with open(fname, encoding="utf-8") as fh:
+                lines += sum(1 for _ in fh)
+        except OSError:
+            pass
+    return len(files), lines
+
+
+def run(repeats: int = 3) -> dict:
+    from repro.lint import lint_paths, summarize
+    from repro.lint.__main__ import main as lint_main
+
+    sections = {}
+    for label, paths in (("src", ["src"]),
+                         ("full_tree", ["src", "tests", "benchmarks"])):
+        n_files, n_lines = _tree_stats(paths)
+        best = float("inf")
+        violations = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            violations = lint_paths(paths)
+            best = min(best, time.perf_counter() - t0)
+        counts = summarize(violations)
+        sections[label] = {
+            "paths": paths,
+            "files": n_files,
+            "lines": n_lines,
+            "seconds": best,
+            "kloc_per_second": (n_lines / 1000.0) / best if best else None,
+            "errors": counts["error"],
+            "warnings": counts["warn"],
+        }
+
+    # CLI end to end (argparse + config discovery + JSON serialization),
+    # stdout swallowed — this is the number CI actually pays
+    import contextlib
+    import io
+    t0 = time.perf_counter()
+    with contextlib.redirect_stdout(io.StringIO()):
+        code = lint_main(["src", "--format=json"])
+    cli_seconds = time.perf_counter() - t0
+
+    return {
+        "bench": "lint",
+        "budget_seconds": BUDGET_SECONDS,
+        "within_budget": sections["full_tree"]["seconds"] <= BUDGET_SECONDS,
+        "cli_seconds": cli_seconds,
+        "cli_exit_code": code,
+        "sections": sections,
+    }
+
+
+def print_rows(report: dict) -> None:
+    print("root,files,lines,seconds,kloc_per_s,errors,warnings")
+    for label, s in report["sections"].items():
+        print(f"{label},{s['files']},{s['lines']},{s['seconds']:.3f},"
+              f"{s['kloc_per_second']:.1f},{s['errors']},{s['warnings']}")
+    print(f"cli_end_to_end,,,{report['cli_seconds']:.3f},,,")
+    print(f"# budget {report['budget_seconds']:.1f}s — "
+          f"{'OK' if report['within_budget'] else 'OVER BUDGET'}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, help="also write a JSON report")
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args(argv)
+    report = run(repeats=args.repeats)
+    print_rows(report)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+    return 0 if report["within_budget"] and report["cli_exit_code"] == 0 else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

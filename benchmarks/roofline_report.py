@@ -1,6 +1,6 @@
 """Aggregate dry-run cell records into the §Roofline table.
 
-Reads the JSON records produced by ``repro.launch.dryrun --all`` and emits
+Reads the JSON cell records under ``results/dryrun`` and emits
 the per-(arch × shape × mesh) roofline table as CSV/markdown: the three
 terms in seconds, dominant bottleneck, MODEL_FLOPS/HLO_FLOPs ratio, and
 per-device memory.

@@ -32,6 +32,11 @@ The ``bench_pr5`` entry writes ``BENCH_PR5.json`` (see
 ``BENCH_PR4.json``), the spatiotemporal-pruning comparison on the
 clustered C1 scenario (pruning on vs off: wall, interactions, pruned-tile
 fraction, speedup) and the spatial-selectivity sweep over ``d``.
+
+The ``bench_pr6`` entry writes ``BENCH_PR6.json`` (see
+``benchmarks.lint_bench``): ``repro.lint`` wall time over ``src/`` and the
+full tree (files, KLoC/s, violation counts) plus the CLI end-to-end time,
+checked against the 5 s CI budget.
 """
 from __future__ import annotations
 
@@ -55,6 +60,8 @@ def main(argv=None) -> int:
                     help="path for the bench_pr4 JSON report")
     ap.add_argument("--bench-out5", default="BENCH_PR5.json",
                     help="path for the bench_pr5 JSON report")
+    ap.add_argument("--bench-out6", default="BENCH_PR6.json",
+                    help="path for the bench_pr6 JSON report")
     ap.add_argument("--baseline", default="BENCH_PR2.json",
                     help="baseline report bench_pr3 compares against")
     ap.add_argument("--baseline4", default="BENCH_PR3.json",
@@ -64,8 +71,9 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (broker_bench, fig3_interactions, kernel_bench,
-                            prune_bench, roofline_report, speedup_vs_rtree,
-                            table2_batching, table3_perfmodel)
+                            lint_bench, prune_bench, roofline_report,
+                            speedup_vs_rtree, table2_batching,
+                            table3_perfmodel)
 
     def bench_pr2():
         report = kernel_bench.canonical_report(quick=not args.full)
@@ -125,6 +133,18 @@ def main(argv=None) -> int:
             print(f"# baseline {args.baseline5} not found — no comparison")
         print(f"# bench_pr5 report -> {args.bench_out5}")
 
+    def bench_pr6():
+        report = lint_bench.run(repeats=3 if args.full else 2)
+        with open(args.bench_out6, "w") as f:
+            json.dump(report, f, indent=2)
+        lint_bench.print_rows(report)
+        if not report["within_budget"]:
+            raise RuntimeError(
+                f"lint over the full tree took "
+                f"{report['sections']['full_tree']['seconds']:.2f}s — over "
+                f"the {lint_bench.BUDGET_SECONDS:.1f}s CI budget")
+        print(f"# bench_pr6 report -> {args.bench_out6}")
+
     benches = {
         "fig3": lambda: fig3_interactions.main(),
         "table2": lambda: table2_batching.main(),
@@ -137,6 +157,7 @@ def main(argv=None) -> int:
         "bench_pr3": bench_pr3,
         "bench_pr4": bench_pr4,
         "bench_pr5": bench_pr5,
+        "bench_pr6": bench_pr6,
         "roofline": lambda: roofline_report.main(),
     }
     only = set(args.only.split(",")) if args.only else None

@@ -697,6 +697,10 @@ class DistributedEngine:
             e = np.concatenate([e, rows], axis=0)
         out = self._fn(jnp.asarray(e), jnp.asarray(queries_packed),
                        np.float32(d))
+        # One explicit sync for the whole shard-mapped batch; every host
+        # read below is then a cheap copy of a ready buffer instead of a
+        # hidden stall inside np.asarray (caught by SYNC001 otherwise).
+        out = jax.block_until_ready(out)
         counts = np.asarray(out["count"])
         if np.any(counts > self.capacity):
             raise RuntimeError("per-shard result capacity overflow; retry "

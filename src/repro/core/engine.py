@@ -192,7 +192,7 @@ class DistanceThresholdEngine:
 # Brute-force oracle (for tests): all pairs, no index, chunked.
 # ----------------------------------------------------------------------
 def brute_force(db: SegmentArray, queries: SegmentArray, d: float,
-                chunk: int = 2048) -> ResultSet:
+                chunk: int = 2048) -> ResultSet:  # lint: ignore[SYNC001] — synchronous oracle; per-chunk host reads are its contract, not a pipeline leak
     """All-pairs reference: compares every entry to every query segment."""
     db_packed = db.packed()
     q_packed = queries.packed()

@@ -226,6 +226,11 @@ def _host_tile_prune(entries: np.ndarray, queries: np.ndarray, d,
     exploitable space/time structure (GALAXY/RANDWALK) the armed kernel's
     per-tile predicate and extra operands are pure overhead (measurably so
     in interpret mode), so they are only paid when tiles will be pruned.
+
+    Sync audit: ``entries``/``queries`` here are the planner's packed
+    *numpy* slices (pre-upload), never device arrays — ``query_block``
+    gates on that, so nothing in this helper can block on the device and
+    SYNC001 has no purchase on it.
     """
     from repro.core.index import mbr_gap2
     e_mbr = _host_tile_mbrs(entries, cand_blk)

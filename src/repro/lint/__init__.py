@@ -1,0 +1,153 @@
+"""``repro.lint`` — invariant-aware static analysis for this repository.
+
+The engine's §5 performance claim (O(1) host syncs per dispatch group) and
+its kernel/BlockSpec contracts are *invariants*, not emergent properties —
+so they are checked statically on every commit instead of hoped-for at
+runtime.  Four rule families (see ``repro.lint.rules``):
+
+==========  ========  =====================================================
+rule        severity  checks
+==========  ========  =====================================================
+SYNC001     error     implicit device→host materialization (``np.asarray``,
+                      ``int()``/``float()``/``bool()``, ``.item()``,
+                      ``.tolist()``) before the dispatch group's
+                      ``block_until_ready`` on the pipelined path
+SYNC002     error     element-wise iteration over a device array there
+KERN001     error     BlockSpec index_map arity == grid rank
+KERN002     error     kernel positional params == in_specs + out_specs
+KERN003     warn      ``A // B`` grid dims without an ``A % B == 0`` assert
+KERN004     error     revisited (constant-index_map) output blocks without
+                      ``pl.when``-guarded writes
+KERN005     warn      static VMEM footprint estimate over budget
+TRACE001    error     Python ``if``/``while``/``assert`` on traced values
+TRACE002    error     impure calls (time/datetime/random) under trace
+TRACE003    error     captured host state mutated under trace
+DEAD001     warn      modules unreachable from repro.api / repro.serve /
+                      tests / benchmarks
+==========  ========  =====================================================
+
+Suppression: ``# lint: ignore[RULE]`` (comma-separated ids or ``*``) on
+the offending line, or on a ``def`` line to cover the whole function;
+``# lint: sync-point`` marks a line as a deliberate, audited host sync
+(it also makes every later read in that function post-sync).
+
+Use as a library (tests do)::
+
+    from repro.lint import lint_paths, lint_sources
+    violations = lint_paths(["src"])                   # files / dirs
+    violations = lint_sources([(path, source_text)])   # in-memory
+
+or as a tool: ``python -m repro.lint [paths] [--format=json|text]
+[--select RULE,...] [--ignore RULE,...]`` — exit code 1 iff any
+error-severity violation survives filtering.
+
+``repro.lint.sentinel`` is the runtime counterpart: it monkeypatches
+jax's device→host transfer points to *count actual transfers* and lets
+tests pin the measured number against ``ExecStats.num_syncs`` — closing
+the loop between the static SYNC rules and the runtime claim.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.lint.astutils import FileContext
+from repro.lint.config import LintConfig, load_config
+from repro.lint.rules import ERROR, RULES, WARN, Rule, Violation
+
+__all__ = [
+    "ERROR", "WARN", "RULES", "Rule", "Violation", "LintConfig",
+    "load_config", "lint_paths", "lint_sources",
+]
+
+_SKIP_DIRS = {"__pycache__", ".git", ".venv", "node_modules", ".claude"}
+
+
+def _expand(paths) -> list:
+    files: list[str] = []
+    for path in paths:
+        if os.path.isdir(path):
+            for dirpath, dirnames, filenames in os.walk(path):
+                dirnames[:] = sorted(d for d in dirnames
+                                     if d not in _SKIP_DIRS
+                                     and not d.startswith("."))
+                for fname in sorted(filenames):
+                    if fname.endswith(".py"):
+                        files.append(os.path.join(dirpath, fname))
+        elif path.endswith(".py"):
+            files.append(path)
+    return files
+
+
+def _rule_enabled(rule: Rule, cfg: LintConfig, select, ignore) -> bool:
+    sel = tuple(select) if select else cfg.select
+    ign = tuple(ignore) if ignore else cfg.ignore
+    if sel and rule.id not in sel:
+        return False
+    if rule.id in ign:
+        return False
+    return True
+
+
+def _run(ctxs, cfg, select, ignore, root) -> list:
+    violations: list[Violation] = []
+    for rule in RULES.values():
+        if not _rule_enabled(rule, cfg, select, ignore):
+            continue
+        if rule.project:
+            violations.extend(rule.check(ctxs, cfg, root))
+        else:
+            for ctx in ctxs:
+                violations.extend(rule.check(ctx, cfg))
+    violations.sort(key=lambda v: (v.path, v.line, v.col, v.rule))
+    return violations
+
+
+def lint_sources(items, *, config: LintConfig | None = None,
+                 select=(), ignore=(), root: str | None = None) -> list:
+    """Lint in-memory ``(path, source)`` pairs.
+
+    ``path`` is only used for rule scoping (the SYNC/KERN families match
+    on configured path suffixes) and for reporting — tests hand in real
+    file contents under synthetic paths, or mutated copies of real files.
+    Files that fail to parse surface as an error-severity ``PARSE``
+    pseudo-violation instead of raising.
+    """
+    cfg = config or LintConfig()
+    ctxs, violations = [], []
+    for path, source in items:
+        try:
+            ctxs.append(FileContext.parse(path.replace("\\", "/"), source))
+        except SyntaxError as exc:
+            violations.append(Violation(
+                "PARSE", ERROR, path, exc.lineno or 1, exc.offset or 0,
+                f"syntax error: {exc.msg}"))
+    violations.extend(_run(ctxs, cfg, select, ignore,
+                           root or os.getcwd()))
+    return violations
+
+
+def lint_paths(paths, *, config: LintConfig | None = None,
+               select=(), ignore=(), root: str | None = None) -> list:
+    """Lint files/directories on disk (the CLI entrypoint's engine).
+
+    ``config`` defaults to :func:`repro.lint.config.load_config`, i.e. the
+    ``[tool.repro-lint]`` table of the nearest pyproject.toml.
+    """
+    cfg = config if config is not None else load_config(root)
+    items = []
+    for fname in _expand(paths):
+        try:
+            with open(fname, encoding="utf-8") as fh:
+                items.append((os.path.relpath(fname, root or os.getcwd()),
+                              fh.read()))
+        except OSError:
+            continue
+    return lint_sources(items, config=cfg, select=select, ignore=ignore,
+                        root=root)
+
+
+def summarize(violations) -> dict:
+    counts = {"error": 0, "warn": 0}
+    for v in violations:
+        counts[v.severity] = counts.get(v.severity, 0) + 1
+    return counts

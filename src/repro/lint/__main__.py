@@ -1,0 +1,76 @@
+"""CLI for ``repro.lint``: ``python -m repro.lint [paths] [options]``.
+
+Exit status is 1 iff any **error**-severity violation survives
+select/ignore filtering and per-line suppressions — warnings are reported
+(and counted in the JSON) but never fatal, so advisory rules (DEAD001,
+the VMEM estimate) cannot block CI by themselves.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.lint import RULES, lint_paths, load_config, summarize
+
+_JSON_SCHEMA_VERSION = 1
+
+
+def _split_ids(values) -> tuple:
+    out = []
+    for value in values or ():
+        out.extend(p.strip() for p in value.split(",") if p.strip())
+    return tuple(out)
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="Invariant-aware static analysis: sync discipline, "
+                    "Pallas kernel contracts, tracer safety, import-graph "
+                    "reachability.")
+    parser.add_argument("paths", nargs="*", default=["src"],
+                        help="files or directories to lint (default: src)")
+    parser.add_argument("--format", choices=("text", "json"),
+                        default="text", help="output format")
+    parser.add_argument("--select", action="append", metavar="RULE[,RULE]",
+                        help="only run these rule ids")
+    parser.add_argument("--ignore", action="append", metavar="RULE[,RULE]",
+                        help="skip these rule ids")
+    parser.add_argument("--root", default=None,
+                        help="project root (pyproject.toml lookup + "
+                             "DEAD001 test/benchmark roots); default: cwd")
+    parser.add_argument("--rules", action="store_true",
+                        help="list registered rules and exit")
+    args = parser.parse_args(argv)
+
+    if args.rules:
+        for rule in sorted(RULES.values(), key=lambda r: r.id):
+            print(f"{rule.id:9s} {rule.severity:5s} {rule.summary}")
+        return 0
+
+    cfg = load_config(args.root)
+    violations = lint_paths(args.paths, config=cfg,
+                            select=_split_ids(args.select),
+                            ignore=_split_ids(args.ignore), root=args.root)
+    counts = summarize(violations)
+
+    if args.format == "json":
+        print(json.dumps({
+            "tool": "repro-lint",
+            "schema_version": _JSON_SCHEMA_VERSION,
+            "paths": list(args.paths),
+            "counts": counts,
+            "violations": [v.to_json() for v in violations],
+        }, indent=2))
+    else:
+        for v in violations:
+            print(v.format())
+        total = counts["error"] + counts["warn"]
+        print(f"{total} violation(s): {counts['error']} error(s), "
+              f"{counts['warn']} warning(s)")
+    return 1 if counts["error"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,528 @@
+"""Shared AST machinery for ``repro.lint``: parsing, suppression comments,
+the device-taint engine, traced-scope discovery and a small symbolic
+resolver for kernel-contract checks.
+
+Taint model (SYNC/TRACE rules)
+------------------------------
+A value is *device-tainted* when it (transitively) comes from a jax
+computation: a ``jnp.*`` / ``jax.*`` / ``pl.*`` call, a call to one of the
+configured ``device_calls`` (e.g. ``ops.query_block``, a dispatcher's
+``dispatch``), or an attribute named in ``device_attrs`` (``Dispatch.out``).
+Taint propagates through names, subscripts, arithmetic and attribute access;
+it is dropped by shape/metadata reads (``.shape``, ``.ndim``, ``.dtype``),
+identity comparisons (``x is None``) and by the host materializers
+themselves (the result of ``np.asarray(x)`` is a host array).
+
+The engine is a deliberately simple lexical pass: statements are visited in
+source order per function, which matches how the executors are written
+(phase A dispatches first, phase B blocks then reads).  Loops are not
+fixpointed — a taint introduced on a later line does not flow back to an
+earlier one — which keeps the rules predictable enough to annotate.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+
+SUPPRESS_RE = re.compile(r"#\s*lint:\s*ignore\[([A-Za-z0-9_*,\s]+)\]")
+SYNC_POINT_RE = re.compile(r"#\s*lint:\s*sync-point")
+
+#: attribute reads that yield host metadata, never a device buffer
+UNTAINT_ATTRS = frozenset({
+    "shape", "ndim", "dtype", "size", "nbytes", "sharding", "device",
+    "devices", "aval", "weak_type", "itemsize",
+})
+
+#: jax namespaces whose call results are device values
+_DEVICE_NAMESPACES = ("jnp", "jax", "lax", "pl", "plgpu", "pltpu")
+
+#: host materializers: builtins / np functions that force a device→host
+#: transfer of their (array) argument
+MATERIALIZER_BUILTINS = frozenset({"int", "float", "bool", "complex"})
+MATERIALIZER_NP_FUNCS = frozenset({
+    "asarray", "array", "asanyarray", "ascontiguousarray", "copy",
+})
+MATERIALIZER_METHODS = frozenset({"item", "tolist", "__array__"})
+
+#: calls that *explicitly* synchronize (the sanctioned phase-B sync point)
+SYNC_CALLS = frozenset({"block_until_ready"})
+
+
+# ----------------------------------------------------------------------
+# File context.
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class FileContext:
+    """One parsed file plus its suppression/sync-point annotations."""
+
+    path: str                 # display path (posix-ish, repo-relative)
+    source: str
+    tree: ast.Module
+    suppressions: dict       # line -> set of rule ids ("*" = all)
+    sync_points: set         # lines annotated ``# lint: sync-point``
+    func_suppressions: list  # (start, end, set of rule ids) for def-line ignores
+
+    @classmethod
+    def parse(cls, path: str, source: str) -> "FileContext":
+        tree = ast.parse(source, filename=path)
+        suppressions: dict[int, set] = {}
+        sync_points: set[int] = set()
+        for lineno, text in enumerate(source.splitlines(), start=1):
+            m = SUPPRESS_RE.search(text)
+            if m:
+                rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+                suppressions.setdefault(lineno, set()).update(rules)
+            if SYNC_POINT_RE.search(text):
+                sync_points.add(lineno)
+        # An ignore anywhere on a ``def`` signature (which may span lines)
+        # or one of its decorator lines suppresses the rule for the whole
+        # function body.
+        func_suppressions = []
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                sig_end = (node.body[0].lineno - 1 if node.body
+                           else node.lineno)
+                head_lines = (list(range(node.lineno, sig_end + 1))
+                              + [d.lineno for d in node.decorator_list])
+                rules: set = set()
+                for ln in head_lines:
+                    rules |= suppressions.get(ln, set())
+                if rules:
+                    func_suppressions.append(
+                        (node.lineno, node.end_lineno or node.lineno, rules))
+        return cls(path, source, tree, suppressions, sync_points,
+                   func_suppressions)
+
+    def is_suppressed(self, rule: str, line: int) -> bool:
+        direct = self.suppressions.get(line, set())
+        if rule in direct or "*" in direct:
+            return True
+        for start, end, rules in self.func_suppressions:
+            if start <= line <= end and (rule in rules or "*" in rules):
+                return True
+        return False
+
+    def matches(self, suffixes) -> bool:
+        """Does this file's path end with any of the configured
+        module-relative suffixes (e.g. ``repro/core/executor.py``)?"""
+        p = self.path.replace("\\", "/")
+        return any(p.endswith(s) for s in suffixes)
+
+
+def iter_functions(tree: ast.Module):
+    """Yield every (async) function def with its dotted qualname."""
+    def walk(node, prefix):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                name = f"{prefix}{child.name}"
+                yield child, name
+                yield from walk(child, f"{name}.")
+            elif isinstance(child, ast.ClassDef):
+                yield from walk(child, f"{prefix}{child.name}.")
+            else:
+                yield from walk(child, prefix)
+    yield from walk(tree, "")
+
+
+# ----------------------------------------------------------------------
+# Call-name helpers.
+# ----------------------------------------------------------------------
+def call_name(call: ast.Call) -> str | None:
+    """Terminal name of a call target: ``ops.query_block(...)`` →
+    ``query_block``; ``self.engine._fn(cap)(...)`` → ``_fn`` (the inner
+    call is unwrapped — its result is what is being called)."""
+    func = call.func
+    while isinstance(func, ast.Call):
+        func = func.func
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return None
+
+
+def call_root(call: ast.Call) -> str | None:
+    """Leftmost name of a dotted call target: ``np.asarray`` → ``np``."""
+    func = call.func
+    while isinstance(func, ast.Call):
+        func = func.func
+    while isinstance(func, ast.Attribute):
+        func = func.value
+    if isinstance(func, ast.Name):
+        return func.id
+    return None
+
+
+def is_sync_call(node: ast.Call) -> bool:
+    return call_name(node) in SYNC_CALLS
+
+
+# ----------------------------------------------------------------------
+# Taint engine.
+# ----------------------------------------------------------------------
+class TaintEnv:
+    """Name → device-taint map for one function, driven lexically."""
+
+    def __init__(self, device_calls, device_attrs):
+        self.names: set[str] = set()
+        self.device_calls = frozenset(device_calls)
+        self.device_attrs = frozenset(device_attrs)
+
+    # -- expression taint ----------------------------------------------
+    def tainted(self, node) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.names
+        if isinstance(node, ast.Call):
+            return self._call_tainted(node)
+        if isinstance(node, ast.Attribute):
+            if node.attr in UNTAINT_ATTRS:
+                return False
+            if node.attr in self.device_attrs:
+                return True
+            return self.tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.tainted(node.value)
+        if isinstance(node, ast.BinOp):
+            return self.tainted(node.left) or self.tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.tainted(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return any(self.tainted(v) for v in node.values)
+        if isinstance(node, ast.Compare):
+            # identity checks are host-safe on tracers and device arrays
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False
+            return (self.tainted(node.left)
+                    or any(self.tainted(c) for c in node.comparators))
+        if isinstance(node, ast.IfExp):
+            return self.tainted(node.body) or self.tainted(node.orelse)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.tainted(e) for e in node.elts)
+        if isinstance(node, ast.Starred):
+            return self.tainted(node.value)
+        if isinstance(node, ast.NamedExpr):
+            return self.tainted(node.value)
+        return False
+
+    def _call_tainted(self, node: ast.Call) -> bool:
+        name = call_name(node)
+        root = call_root(node)
+        if root in _DEVICE_NAMESPACES:
+            return True
+        if name in self.device_calls:
+            return True
+        if name in MATERIALIZER_METHODS or name in MATERIALIZER_BUILTINS:
+            return False          # a materializer's result lives on host
+        if root == "np" or root == "numpy":
+            return False
+        # method call on a tainted object keeps the taint (e.g.
+        # ``hit.astype(...)`` on a device array)
+        func = node.func
+        if isinstance(func, ast.Attribute):
+            return self.tainted(func.value)
+        return False
+
+    # -- statement-driven updates --------------------------------------
+    def assign(self, target, value_tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            if value_tainted:
+                self.names.add(target.id)
+            else:
+                self.names.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self.assign(elt, value_tainted)
+        elif isinstance(target, ast.Subscript):
+            # writing a device value into a container taints the container
+            if value_tainted and isinstance(target.value, ast.Name):
+                self.names.add(target.value.id)
+        elif isinstance(target, ast.Starred):
+            self.assign(target.value, value_tainted)
+        # attribute targets (self.x = ...) are not tracked per-name
+
+
+# ----------------------------------------------------------------------
+# Traced-scope discovery (shared by the TRACE and SYNC rules).
+# ----------------------------------------------------------------------
+_TRACING_WRAPPERS = frozenset({
+    "shard_map", "_shard_map", "pmap", "vmap", "grad", "value_and_grad",
+    "checkify",
+})
+_LOOP_BODY_CALLS = {
+    # call name -> positional indices whose argument is a traced callable
+    "fori_loop": (2,),
+    "while_loop": (0, 1),
+    "scan": (0,),
+    "cond": (1, 2, 3),
+    "switch": (1,),
+    "associated_scan": (0,),
+}
+
+
+@dataclasses.dataclass
+class TracedScope:
+    """One function the linter believes runs under a jax trace."""
+
+    node: object                  # the FunctionDef / Lambda
+    qualname: str
+    static_params: frozenset     # parameter names that stay python-level
+    reason: str                   # "jit" | "shard_map" | "loop_body" | ...
+
+
+def _jit_static_argnames(deco: ast.expr) -> frozenset | None:
+    """``@jax.jit`` / ``@functools.partial(jax.jit, static_argnames=...)``
+    → the static parameter-name set, or None if not a jit decorator."""
+    def is_jit(node) -> bool:
+        return (isinstance(node, ast.Attribute) and node.attr == "jit") or (
+            isinstance(node, ast.Name) and node.id == "jit")
+
+    if is_jit(deco):
+        return frozenset()
+    if isinstance(deco, ast.Call):
+        if is_jit(deco.func):
+            names = _kwarg(deco, "static_argnames")
+            return frozenset(_str_elements(names))
+        if (call_name(deco) == "partial" and deco.args
+                and is_jit(deco.args[0])):
+            names = _kwarg(deco, "static_argnames")
+            return frozenset(_str_elements(names))
+    return None
+
+
+def _kwarg(call: ast.Call, name: str):
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _str_elements(node) -> list:
+    if node is None:
+        return []
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)]
+    return []
+
+
+def find_traced_scopes(tree: ast.Module) -> list:
+    """Functions that run under a jax trace: jit-decorated defs, callables
+    handed to ``shard_map``/``pmap``/..., and ``lax`` loop/cond bodies."""
+    scopes: list[TracedScope] = []
+    seen: set[int] = set()
+    by_name: dict[int, dict[str, ast.AST]] = {}
+
+    def add(node, qualname, static, reason):
+        if id(node) in seen:
+            return
+        seen.add(id(node))
+        scopes.append(TracedScope(node, qualname, frozenset(static), reason))
+
+    funcs = list(iter_functions(tree))
+    qualnames = {id(f): q for f, q in funcs}
+
+    # innermost enclosing function of every node (callable references are
+    # resolved in *their* scope — three sibling functions each defining a
+    # nested ``local`` must not all resolve to the first one)
+    enclosing: dict[int, ast.AST] = {}
+    for fn, _qual in funcs:              # outer functions yield first, so
+        for child in ast.walk(fn):       # inner walks overwrite with the
+            enclosing[id(child)] = fn    # innermost scope
+        enclosing[id(fn)] = enclosing.get(id(fn), tree)
+
+    # 1. jit-decorated functions
+    for fn, qual in funcs:
+        for deco in fn.decorator_list:
+            static = _jit_static_argnames(deco)
+            if static is not None:
+                add(fn, qual, static, "jit")
+
+    # local def index per scope, for resolving callables by name
+    def local_defs(scope_node):
+        defs = by_name.get(id(scope_node))
+        if defs is None:
+            defs = {}
+            for child in ast.walk(scope_node):
+                if (isinstance(child, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef))
+                        and child is not scope_node):
+                    defs.setdefault(child.name, child)
+            by_name[id(scope_node)] = defs
+        return defs
+
+    def resolve_callable(node, scope_node):
+        if isinstance(node, ast.Lambda):
+            return node, "<lambda>"
+        if isinstance(node, ast.Name):
+            target = local_defs(scope_node).get(node.id)
+            if target is not None:
+                return target, qualnames.get(id(target), node.id)
+        return None, None
+
+    # 2. callables handed to tracing wrappers / lax loop builders
+    for call in ast.walk(tree):
+        if not isinstance(call, ast.Call):
+            continue
+        name = call_name(call)
+        scope = enclosing.get(id(call), tree)
+        if name in _TRACING_WRAPPERS and call.args:
+            fn, qual = resolve_callable(call.args[0], scope)
+            if fn is not None:
+                add(fn, qual, (), name.lstrip("_"))
+        elif name in _LOOP_BODY_CALLS:
+            for idx in _LOOP_BODY_CALLS[name]:
+                if idx < len(call.args):
+                    fn, qual = resolve_callable(call.args[idx], scope)
+                    if fn is not None:
+                        add(fn, qual, (), "loop_body")
+    return scopes
+
+
+def traced_function_nodes(tree: ast.Module) -> set:
+    """ids of function nodes that are traced scopes (or live inside one) —
+    the SYNC rules skip these (device-side code cannot host-sync; tracer
+    misuse there is the TRACE family's concern)."""
+    out: set[int] = set()
+    for scope in find_traced_scopes(tree):
+        for node in ast.walk(scope.node):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                out.add(id(node))
+    return out
+
+
+# ----------------------------------------------------------------------
+# Small symbolic resolver (KERN rules).
+# ----------------------------------------------------------------------
+class SymbolEnv:
+    """Name → candidate AST value(s) within one function (plus the module
+    scope).  Conditional re-binding and ``lst += [...]`` extension produce
+    *multiple* candidates; contract checks pass when any candidate
+    combination is consistent, so unresolvable dynamism never yields a
+    false positive."""
+
+    def __init__(self, module: ast.Module, func=None):
+        self.values: dict[str, list] = {}
+        self.func_defs: dict[str, ast.AST] = {}
+        for node in module.body:
+            self._bind_stmt(node)
+        for node in ast.walk(module):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.func_defs.setdefault(node.name, node)
+        if func is not None:
+            for node in ast.walk(func):
+                if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                    self._bind_stmt(node)
+            # parameter defaults resolve keyword knobs like cand_blk=256
+            args = func.args
+            pos = args.posonlyargs + args.args
+            for arg, default in zip(pos[len(pos) - len(args.defaults):],
+                                    args.defaults):
+                self.values.setdefault(arg.arg, []).append(default)
+            for arg, default in zip(args.kwonlyargs, args.kw_defaults):
+                if default is not None:
+                    self.values.setdefault(arg.arg, []).append(default)
+
+    def _bind_stmt(self, node) -> None:
+        if isinstance(node, ast.Assign):
+            for target in node.targets:
+                if isinstance(target, ast.Name):
+                    self.values.setdefault(target.id, []).append(node.value)
+        elif isinstance(node, ast.AnnAssign):
+            if isinstance(node.target, ast.Name) and node.value is not None:
+                self.values.setdefault(node.target.id, []).append(node.value)
+        elif isinstance(node, ast.AugAssign):
+            if (isinstance(node.target, ast.Name)
+                    and isinstance(node.op, ast.Add)):
+                # ``specs += [...]``: every existing candidate also exists
+                # in an extended variant
+                name = node.target.id
+                extended = [ast.BinOp(left=c, op=ast.Add(), right=node.value)
+                            for c in self.values.get(name, [])]
+                self.values.setdefault(name, []).extend(extended)
+
+    def candidates(self, node, depth: int = 0) -> list:
+        """Resolve an expression to candidate value nodes (Name chains
+        followed, one level of ``a + b`` list concatenation flattened)."""
+        if depth > 6:
+            return []
+        if isinstance(node, ast.Name):
+            bindings = self.values.get(node.id, [])
+            if not bindings:
+                # no assignment in scope — the name itself is the candidate
+                # (a bare `def`-bound kernel resolves via func_defs later)
+                return [node]
+            out = []
+            for value in bindings:
+                out.extend(self.candidates(value, depth + 1) or [value])
+            return out
+        return [node]
+
+    def sequence_candidates(self, node) -> list:
+        """Resolve to candidate *element lists* for list/tuple-valued
+        expressions (``in_specs``, ``out_specs``); [] when unresolvable."""
+        out = []
+        for cand in self.candidates(node):
+            if isinstance(cand, (ast.List, ast.Tuple)):
+                out.append(list(cand.elts))
+            elif isinstance(cand, ast.BinOp) and isinstance(cand.op, ast.Add):
+                lefts = self.sequence_candidates(cand.left)
+                rights = self.sequence_candidates(cand.right)
+                for lhs in lefts:
+                    for rhs in rights:
+                        out.append(lhs + rhs)
+        return out
+
+    def resolve_int(self, node, depth: int = 0):
+        """Best-effort constant folding for block-shape arithmetic."""
+        if depth > 8 or node is None:
+            return None
+        if isinstance(node, ast.Constant) and isinstance(node.value, int):
+            return node.value
+        if isinstance(node, ast.Name):
+            for cand in self.values.get(node.id, []):
+                val = self.resolve_int(cand, depth + 1)
+                if val is not None:
+                    return val
+            return None
+        if isinstance(node, ast.BinOp):
+            lhs = self.resolve_int(node.left, depth + 1)
+            rhs = self.resolve_int(node.right, depth + 1)
+            if lhs is None or rhs is None:
+                return None
+            try:
+                if isinstance(node.op, ast.Add):
+                    return lhs + rhs
+                if isinstance(node.op, ast.Sub):
+                    return lhs - rhs
+                if isinstance(node.op, ast.Mult):
+                    return lhs * rhs
+                if isinstance(node.op, ast.FloorDiv):
+                    return lhs // rhs
+                if isinstance(node.op, ast.Mod):
+                    return lhs % rhs
+            except (ZeroDivisionError, OverflowError):
+                return None
+            return None
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id in ("min", "max") and node.args:
+            vals = [self.resolve_int(a, depth + 1) for a in node.args]
+            if any(v is None for v in vals):
+                return None
+            return min(vals) if node.func.id == "min" else max(vals)
+        return None
+
+
+def lambda_arity(node) -> int | None:
+    """Number of required (non-defaulted) parameters of a lambda/def —
+    index maps routinely smuggle closure values via defaulted params
+    (``lambda b, i, g=g: ...``), which must not count toward grid rank."""
+    if not isinstance(node, (ast.Lambda, ast.FunctionDef,
+                             ast.AsyncFunctionDef)):
+        return None
+    args = node.args
+    pos = args.posonlyargs + args.args
+    return len(pos) - len(args.defaults)

@@ -1,0 +1,332 @@
+"""KERN rules: static Pallas kernel/BlockSpec contract checks.
+
+A ``pl.pallas_call`` site binds four things that must agree — the grid,
+the Block­Specs' index maps, the kernel's parameter list and the operand
+shapes — and every one of them fails at *lowering* time (or worse, on
+hardware only) when they drift.  These rules re-derive the contracts from
+the AST of the configured kernel modules:
+
+* ``KERN001`` (error) — every index_map takes exactly ``len(grid)``
+  required parameters.  Defaulted lambda params (the closure-smuggling
+  idiom ``lambda b, i, g=g: ...``) do not count.
+* ``KERN002`` (error) — the kernel's positional parameter count equals
+  ``len(in_specs) + len(out_specs)`` (``functools.partial``-bound and
+  keyword-only params excluded; a ``*refs`` vararg absorbs the rest).
+* ``KERN003`` (warn) — a grid dimension computed as ``A // B`` should be
+  guarded by an ``assert A % B == 0`` in the same function (silent
+  truncation drops trailing blocks).
+* ``KERN004`` (error) — kernels with *revisited* output blocks (constant
+  index maps — the running-counter compaction pattern) must guard their
+  initialization with ``pl.when``: an unguarded write re-initializes the
+  accumulator on every grid step.
+* ``KERN005`` (warn) — a static VMEM footprint estimate (sum of resolvable
+  block shapes × 4 B × a live-copy multiplier) must stay under the
+  configured budget.
+
+Resolution is *candidate-based*: conditionally rebound names (``in_specs
++= [...]``, ``kernel = a if flag else b``) produce several candidates and
+a contract passes when **any** combination is consistent — unresolvable
+dynamism is skipped, never guessed, so the rules cannot false-positive on
+code they do not understand.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.lint import astutils
+from repro.lint.astutils import SymbolEnv, lambda_arity
+from repro.lint.rules import ERROR, WARN, Violation, rule
+
+
+# ----------------------------------------------------------------------
+# pallas_call site model
+# ----------------------------------------------------------------------
+class _Site:
+    """One ``pl.pallas_call(...)`` occurrence, symbolically resolved."""
+
+    def __init__(self, call: ast.Call, func, module: ast.Module):
+        self.call = call
+        self.env = SymbolEnv(module, func)
+        self.kernel_expr = call.args[0] if call.args else None
+        self.grid_expr = astutils._kwarg(call, "grid")
+        self.in_specs_expr = astutils._kwarg(call, "in_specs")
+        self.out_specs_expr = astutils._kwarg(call, "out_specs")
+        self.out_shape_expr = astutils._kwarg(call, "out_shape")
+
+    # -- grid ----------------------------------------------------------
+    def grid_dims(self) -> list | None:
+        """The grid's element expressions, or None if unresolvable."""
+        if self.grid_expr is None:
+            return None
+        for cand in self.env.candidates(self.grid_expr):
+            if isinstance(cand, (ast.Tuple, ast.List)):
+                return list(cand.elts)
+        return None
+
+    # -- specs ---------------------------------------------------------
+    def _spec_nodes(self, expr) -> list:
+        """All distinct BlockSpec call nodes reachable from a specs
+        expression (through name candidates and ``+=`` extension)."""
+        if expr is None:
+            return []
+        seqs = self.env.sequence_candidates(expr)
+        if not seqs and isinstance(expr, ast.Call):
+            seqs = [[expr]]
+        seen: dict[int, ast.AST] = {}
+        for seq in seqs:
+            for element in seq:
+                for cand in self.env.candidates(element):
+                    if (isinstance(cand, ast.Call)
+                            and astutils.call_name(cand) == "BlockSpec"):
+                        seen.setdefault(id(cand), cand)
+        return list(seen.values())
+
+    def in_spec_counts(self) -> list:
+        return sorted({len(s) for s in
+                       self.env.sequence_candidates(self.in_specs_expr)})
+
+    def out_count(self) -> int | None:
+        for expr in (self.out_specs_expr, self.out_shape_expr):
+            if expr is None:
+                continue
+            for cand in self.env.candidates(expr):
+                if isinstance(cand, (ast.Tuple, ast.List)):
+                    return len(cand.elts)
+            if isinstance(expr, ast.Call):
+                return 1
+        return None
+
+    def all_specs(self) -> list:
+        return (self._spec_nodes(self.in_specs_expr)
+                + self._spec_nodes(self.out_specs_expr))
+
+    def out_spec_nodes(self) -> list:
+        return self._spec_nodes(self.out_specs_expr)
+
+    # -- kernels -------------------------------------------------------
+    def kernel_candidates(self) -> list:
+        """Candidate kernel functions as (func_def, n_bound_positional,
+        has_vararg) triples; partial() chains unwrapped."""
+        out = []
+        for cand in self.env.candidates(self.kernel_expr):
+            out.extend(self._unwrap_kernel(cand, 0))
+        return out
+
+    def _unwrap_kernel(self, node, bound, depth=0):
+        if depth > 4:
+            return []
+        if isinstance(node, ast.Call) and astutils.call_name(node) == "partial":
+            if not node.args:
+                return []
+            extra = len(node.args) - 1     # positional args bound by partial
+            results = []
+            for inner in self.env.candidates(node.args[0]):
+                results.extend(self._unwrap_kernel(inner, bound + extra,
+                                                   depth + 1))
+            return results
+        if isinstance(node, ast.Name):
+            target = self.env.func_defs.get(node.id)
+            if target is not None:
+                return [(target, bound,
+                         target.args.vararg is not None)]
+            return []
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return [(node, bound, node.args.vararg is not None)]
+        if isinstance(node, ast.IfExp):
+            return (self._unwrap_kernel(node.body, bound, depth + 1)
+                    + self._unwrap_kernel(node.orelse, bound, depth + 1))
+        return []
+
+
+def _index_map(spec: ast.Call):
+    """The BlockSpec's index_map expression (2nd positional or kwarg)."""
+    if len(spec.args) >= 2:
+        return spec.args[1]
+    return astutils._kwarg(spec, "index_map")
+
+
+def _block_shape(spec: ast.Call):
+    if spec.args:
+        return spec.args[0]
+    return astutils._kwarg(spec, "block_shape")
+
+
+def _sites(ctx, cfg):
+    if not ctx.matches(cfg.kern_modules):
+        return
+    for func, qualname in astutils.iter_functions(ctx.tree):
+        for node in ast.walk(func):
+            if (isinstance(node, ast.Call)
+                    and astutils.call_name(node) == "pallas_call"):
+                yield _Site(node, func, ctx.tree), func, qualname
+
+
+def _emit(out, ctx, rule_id, severity, node, message):
+    if ctx.is_suppressed(rule_id, node.lineno):
+        return
+    out.append(Violation(rule_id, severity, ctx.path, node.lineno,
+                         node.col_offset, message))
+
+
+@rule("KERN001", ERROR, "BlockSpec index_map arity must equal grid rank")
+def check_kern001(ctx, cfg):
+    out: list[Violation] = []
+    for site, func, qualname in _sites(ctx, cfg):
+        dims = site.grid_dims()
+        if dims is None:
+            continue
+        rank = len(dims)
+        for spec in site.all_specs():
+            imap = _index_map(spec)
+            if imap is None:
+                continue
+            arity = None
+            if isinstance(imap, ast.Lambda):
+                arity = lambda_arity(imap)
+            elif isinstance(imap, ast.Name):
+                target = site.env.func_defs.get(imap.id)
+                if target is not None:
+                    arity = lambda_arity(target)
+            if arity is not None and arity != rank:
+                _emit(out, ctx, "KERN001", ERROR, imap,
+                      f"in {qualname}: index_map takes {arity} required "
+                      f"arg(s) but the grid has rank {rank} — every grid "
+                      "axis indexes every BlockSpec")
+    return out
+
+
+@rule("KERN002", ERROR,
+      "kernel parameter count must match in_specs + out_specs")
+def check_kern002(ctx, cfg):
+    out: list[Violation] = []
+    for site, func, qualname in _sites(ctx, cfg):
+        n_ins = site.in_spec_counts()
+        n_out = site.out_count()
+        kernels = site.kernel_candidates()
+        if not n_ins or n_out is None or not kernels:
+            continue
+        ok = False
+        attempts = []
+        for kfn, bound, vararg in kernels:
+            args = kfn.args
+            n_pos = len(args.posonlyargs) + len(args.args) - bound
+            for n_in in n_ins:
+                want = n_in + n_out
+                if (n_pos <= want) if vararg else (n_pos == want):
+                    ok = True
+                attempts.append((kfn.name, n_pos, want))
+        if not ok:
+            name, n_pos, want = attempts[0]
+            _emit(out, ctx, "KERN002", ERROR, site.call,
+                  f"in {qualname}: kernel {name!r} takes {n_pos} positional "
+                  f"ref(s) but in_specs + out_specs supply {want}")
+    return out
+
+
+@rule("KERN003", WARN,
+      "grid dims built with // should assert divisibility")
+def check_kern003(ctx, cfg):
+    out: list[Violation] = []
+    for site, func, qualname in _sites(ctx, cfg):
+        dims = site.grid_dims()
+        if not dims:
+            continue
+        # every `X % Y` that appears under an assert in this function
+        guarded = set()
+        for node in ast.walk(func):
+            if isinstance(node, ast.Assert):
+                for sub in ast.walk(node.test):
+                    if isinstance(sub, ast.BinOp) and isinstance(sub.op,
+                                                                 ast.Mod):
+                        guarded.add((ast.dump(sub.left),
+                                     ast.dump(sub.right)))
+        for dim in dims:
+            if not (isinstance(dim, ast.BinOp)
+                    and isinstance(dim.op, ast.FloorDiv)):
+                continue
+            key = (ast.dump(dim.left), ast.dump(dim.right))
+            if key in guarded:
+                continue
+            _emit(out, ctx, "KERN003", WARN, dim,
+                  f"in {qualname}: grid dim `{ast.unparse(dim)}` floors — "
+                  "assert the operand divides the block "
+                  f"(`assert {ast.unparse(dim.left)} % "
+                  f"{ast.unparse(dim.right)} == 0`) or trailing rows are "
+                  "silently dropped")
+    return out
+
+
+def _uses_pl_when(fn) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and astutils.call_name(node) == "when":
+            return True
+    return False
+
+
+@rule("KERN004", ERROR,
+      "revisited output blocks need pl.when-guarded initialization")
+def check_kern004(ctx, cfg):
+    out: list[Violation] = []
+    for site, func, qualname in _sites(ctx, cfg):
+        dims = site.grid_dims()
+        if dims is None or len(dims) == 0:
+            continue
+        revisited = []
+        for spec in site.out_spec_nodes():
+            imap = _index_map(spec)
+            if not isinstance(imap, ast.Lambda):
+                continue
+            params = {a.arg for a in (imap.args.posonlyargs
+                                      + imap.args.args)}
+            used = {n.id for n in ast.walk(imap.body)
+                    if isinstance(n, ast.Name)}
+            if params and not (params & used):
+                revisited.append(spec)
+        if not revisited:
+            continue
+        kernels = site.kernel_candidates()
+        if not kernels:
+            continue
+        if any(_uses_pl_when(kfn) for kfn, _b, _v in kernels):
+            continue
+        _emit(out, ctx, "KERN004", ERROR, site.call,
+              f"in {qualname}: {len(revisited)} output BlockSpec(s) use a "
+              "constant index_map (block revisited every grid step) but the "
+              "kernel never guards writes with pl.when — unguarded stores "
+              "re-initialize the running state each step")
+    return out
+
+
+@rule("KERN005", WARN, "static VMEM footprint estimate over budget")
+def check_kern005(ctx, cfg):
+    out: list[Violation] = []
+    budget = cfg.vmem_budget_mib * (1 << 20)
+    for site, func, qualname in _sites(ctx, cfg):
+        total = 0
+        unresolved = 0
+        for spec in site.all_specs():
+            shape = _block_shape(spec)
+            elems = None
+            for cand in site.env.candidates(shape):
+                if not isinstance(cand, (ast.Tuple, ast.List)):
+                    continue
+                vals = [site.env.resolve_int(e) for e in cand.elts]
+                if all(v is not None for v in vals):
+                    elems = 1
+                    for v in vals:
+                        elems *= v
+                    break
+            if elems is None:
+                unresolved += 1
+            else:
+                total += elems * 4              # f32 until proven otherwise
+        estimate = total * cfg.vmem_multiplier
+        if estimate > budget:
+            _emit(out, ctx, "KERN005", WARN, site.call,
+                  f"in {qualname}: resolvable block footprint ≈ "
+                  f"{estimate / (1 << 20):.1f} MiB × (live-copy multiplier "
+                  f"{cfg.vmem_multiplier} applied) exceeds the "
+                  f"{cfg.vmem_budget_mib} MiB VMEM budget"
+                  + (f" ({unresolved} spec(s) unresolved and uncounted)"
+                     if unresolved else ""))
+    return out

@@ -1,0 +1,215 @@
+"""SYNC rules: host↔device sync discipline on the pipelined dispatch path.
+
+The engine's §5 batching claim — O(1) host round-trips per dispatch group
+(``ExecStats.num_syncs`` ≤ 2) — dies the moment someone reads a device
+value mid-phase-A: ``np.asarray``, ``int()``, ``.item()``, ``.tolist()``
+and array iteration all silently block until the device catches up,
+turning the async pipeline back into a per-batch sync loop without
+changing a single test result.  These rules make that a *static* error on
+the configured dispatch modules.
+
+A host materialization of a device-tainted value is allowed only when:
+
+* it is lexically **after** a ``block_until_ready`` call in the same
+  function (the executors' phase B), or
+* its line carries a ``# lint: sync-point`` annotation (an explicit,
+  audited sync), or
+* it lives in one of the dispatcher-protocol *post-sync* methods
+  (``count`` / ``marshal`` / ``tile_stats`` / ``retry_capacity``), which
+  the executor contract only invokes after blocking on ``Dispatch.out``.
+
+Functions the linter identifies as jax-traced scopes are skipped — code
+under trace runs on device and cannot host-sync (tracer misuse there is
+the TRACE family's concern).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.lint import astutils
+from repro.lint.astutils import (MATERIALIZER_BUILTINS, MATERIALIZER_METHODS,
+                                 MATERIALIZER_NP_FUNCS, TaintEnv)
+from repro.lint.rules import ERROR, Violation, rule
+
+#: jax API calls that return host metadata, not device buffers
+_HOST_JAX_CALLS = frozenset({
+    "devices", "local_devices", "device_count", "local_device_count",
+    "process_index", "process_count", "default_backend", "make_mesh",
+})
+
+
+def _materializations(expr, env: TaintEnv):
+    """Yield (node, rule_id, description) for device→host transfers inside
+    one expression tree (nested function bodies excluded)."""
+    skip: set = set()
+    for node in ast.walk(expr):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)) and node is not expr:
+            for sub in ast.walk(node):
+                skip.add(id(sub))
+    for node in ast.walk(expr):
+        if id(node) in skip:
+            continue
+        if isinstance(node, ast.Call):
+            name = astutils.call_name(node)
+            root = astutils.call_root(node)
+            func = node.func
+            if (root in ("np", "numpy") and name in MATERIALIZER_NP_FUNCS
+                    and node.args and env.tainted(node.args[0])):
+                yield node, "SYNC001", f"np.{name}() on a device value"
+            elif (isinstance(func, ast.Name)
+                    and func.id in MATERIALIZER_BUILTINS
+                    and node.args and env.tainted(node.args[0])):
+                yield node, "SYNC001", f"{func.id}() on a device value"
+            elif (isinstance(func, ast.Attribute)
+                    and func.attr in MATERIALIZER_METHODS
+                    and env.tainted(func.value)):
+                yield node, "SYNC001", f".{func.attr}() on a device value"
+            elif (isinstance(func, ast.Name) and func.id in ("list", "tuple")
+                    and node.args and env.tainted(node.args[0])):
+                yield node, "SYNC002", (f"{func.id}() materializes a device "
+                                        "array element-wise")
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                               ast.GeneratorExp)):
+            for gen in node.generators:
+                if env.tainted(gen.iter):
+                    yield node, "SYNC002", "comprehension over a device array"
+
+
+def _has_sync_call(stmt) -> bool:
+    return any(isinstance(n, ast.Call) and astutils.is_sync_call(n)
+               for n in ast.walk(stmt))
+
+
+class _FunctionScan:
+    """Lexical single pass over one function: taint + sync state."""
+
+    def __init__(self, ctx, cfg, func, report):
+        self.ctx = ctx
+        self.cfg = cfg
+        self.report = report
+        self.env = TaintEnv(cfg.device_calls, cfg.device_attrs)
+        self.synced = False
+        for stmt in func.body:
+            self.visit(stmt)
+
+    # -- taint-aware expression evaluation ------------------------------
+    def _value_tainted(self, node) -> bool:
+        if (isinstance(node, ast.Call)
+                and astutils.call_name(node) in _HOST_JAX_CALLS):
+            return False
+        return self.env.tainted(node)
+
+    def _check_expr(self, expr, anchor_line: int) -> None:
+        if expr is None or self.synced:
+            return
+        for node, rule_id, what in _materializations(expr, self.env):
+            line = getattr(node, "lineno", anchor_line)
+            if line in self.ctx.sync_points:
+                continue
+            self.report(rule_id, line, getattr(node, "col_offset", 0),
+                        f"{what} before the dispatch group's "
+                        "block_until_ready — an implicit host sync on the "
+                        "pipelined path (annotate '# lint: sync-point' if "
+                        "this sync is deliberate)")
+
+    def _walrus(self, expr) -> None:
+        for node in ast.walk(expr):
+            if isinstance(node, ast.NamedExpr):
+                self.env.assign(node.target, self._value_tainted(node.value))
+
+    def visit(self, stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return                       # analyzed as their own functions
+        # Compound statements: check only their header expressions here —
+        # body statements recurse below, so the sync state they see is the
+        # one in effect at *their* position, not at the block's entry.
+        if isinstance(stmt, ast.For):
+            self._check_expr(stmt.iter, stmt.lineno)
+            if not self.synced and self._value_tainted(stmt.iter) \
+                    and stmt.lineno not in self.ctx.sync_points:
+                self.report("SYNC002", stmt.lineno, stmt.col_offset,
+                            "iteration over a device array before the "
+                            "dispatch group's block_until_ready — an "
+                            "implicit host sync on the pipelined path")
+            self._walrus(stmt.iter)
+            self.env.assign(stmt.target, self._value_tainted(stmt.iter))
+            for s in stmt.body + stmt.orelse:
+                self.visit(s)
+            return
+        if isinstance(stmt, (ast.While, ast.If)):
+            self._check_expr(stmt.test, stmt.lineno)
+            self._walrus(stmt.test)
+            for s in stmt.body + stmt.orelse:
+                self.visit(s)
+            return
+        if isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self._check_expr(item.context_expr, stmt.lineno)
+                self._walrus(item.context_expr)
+                if item.optional_vars is not None:
+                    self.env.assign(item.optional_vars,
+                                    self._value_tainted(item.context_expr))
+            for s in stmt.body:
+                self.visit(s)
+            return
+        if isinstance(stmt, ast.Try):
+            for s in (stmt.body + [h for handler in stmt.handlers
+                                   for h in handler.body]
+                      + stmt.orelse + stmt.finalbody):
+                self.visit(s)
+            return
+        # Simple statements: full expression scan, then state updates.
+        self._check_expr(stmt, stmt.lineno)
+        if _has_sync_call(stmt) or stmt.lineno in self.ctx.sync_points:
+            self.synced = True
+        if isinstance(stmt, ast.Assign):
+            tainted = self._value_tainted(stmt.value)
+            for target in stmt.targets:
+                self.env.assign(target, tainted)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self.env.assign(stmt.target, self._value_tainted(stmt.value))
+        elif isinstance(stmt, ast.AugAssign):
+            if self._value_tainted(stmt.value):
+                self.env.assign(stmt.target, True)
+        self._walrus(stmt)
+
+
+def _scan_file(ctx, cfg, rule_id):
+    if not ctx.matches(cfg.sync_modules):
+        return
+    traced = astutils.traced_function_nodes(ctx.tree)
+    out: list[Violation] = []
+
+    for func, qualname in astutils.iter_functions(ctx.tree):
+        if id(func) in traced:
+            continue
+        short = qualname.rsplit(".", 1)[-1]
+        if short in cfg.post_sync_functions:
+            # dispatcher post-sync protocol method: reads are post-sync by
+            # the executor contract (BatchDispatcher docstring)
+            continue
+
+        def report(rid, line, col, message, _q=qualname):
+            if rid != rule_id:
+                return
+            if ctx.is_suppressed(rid, line):
+                return
+            out.append(Violation(rid, ERROR, ctx.path, line, col,
+                                 f"in {_q}: {message}"))
+
+        _FunctionScan(ctx, cfg, func, report)
+    return out
+
+
+@rule("SYNC001", ERROR,
+      "implicit device→host materialization before the group's sync point")
+def check_sync001(ctx, cfg):
+    return _scan_file(ctx, cfg, "SYNC001") or []
+
+
+@rule("SYNC002", ERROR,
+      "element-wise iteration over a device array on the dispatch path")
+def check_sync002(ctx, cfg):
+    return _scan_file(ctx, cfg, "SYNC002") or []

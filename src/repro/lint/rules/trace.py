@@ -1,0 +1,230 @@
+"""TRACE rules: tracer safety inside jit / shard_map / lax-loop scopes.
+
+A function under a jax trace executes once against abstract tracers; the
+Python-level mistakes that *silently* corrupt it are well known:
+
+* ``TRACE001`` — a Python ``if``/``while``/``assert`` on a traced value
+  (at best a ``TracerBoolConversionError`` at runtime, at worst a branch
+  baked in at trace time for every future call);
+* ``TRACE002`` — impure calls (``time.*``, ``datetime.*``, ``random.*``,
+  ``np.random.*``, ``input``/``open``): they run once at trace time and
+  their results are frozen into the jaxpr — the classic "why is my
+  timestamp constant" bug;
+* ``TRACE003`` — mutating captured host state (closure containers,
+  ``self`` attributes) under trace: the mutation replays unpredictably
+  across retraces and never appears in the compiled computation.
+
+Traced scopes are discovered statically (``astutils.find_traced_scopes``):
+``@jax.jit``-decorated functions (``functools.partial(jax.jit,
+static_argnames=...)`` understood — static parameters are *not* traced),
+callables handed to ``shard_map``/``pmap``/``vmap``/``grad``, and
+``lax.fori_loop``/``while_loop``/``scan``/``cond`` bodies.  Pallas kernel
+bodies are deliberately **not** traced scopes here: writing through
+``*_ref`` operands is their job, and their contracts are the KERN family's
+concern.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.lint import astutils
+from repro.lint.astutils import TaintEnv
+from repro.lint.rules import ERROR, Violation, rule
+
+_IMPURE_ROOTS = frozenset({"time", "datetime", "random", "secrets"})
+_IMPURE_BUILTINS = frozenset({"input", "open"})
+_MUTATOR_METHODS = frozenset({
+    "append", "extend", "add", "update", "insert", "pop", "remove",
+    "setdefault", "clear", "popitem", "discard",
+})
+
+
+def _dotted(node) -> str:
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _local_names(func) -> set:
+    """Names bound inside the function (params + assignments) — mutations
+    of anything else touch captured state."""
+    names: set = set()
+    args = func.args
+    for a in (args.posonlyargs + args.args + args.kwonlyargs):
+        names.add(a.arg)
+    if args.vararg:
+        names.add(args.vararg.arg)
+    if args.kwarg:
+        names.add(args.kwarg.arg)
+    for node in ast.walk(func):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)) and node is not func:
+            continue
+        if isinstance(node, ast.Assign):
+            for target in node.targets:
+                for sub in ast.walk(target):
+                    if isinstance(sub, ast.Name):
+                        names.add(sub.id)
+        elif isinstance(node, (ast.AnnAssign, ast.NamedExpr)):
+            if isinstance(getattr(node, "target", None), ast.Name):
+                names.add(node.target.id)
+        elif isinstance(node, ast.For):
+            for sub in ast.walk(node.target):
+                if isinstance(sub, ast.Name):
+                    names.add(sub.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            names.add(node.name)
+    return names
+
+
+def _own_statements(func):
+    """Statements of ``func`` excluding nested function/class bodies (each
+    nested traced function is analyzed as its own scope)."""
+    todo = list(func.body)
+    while todo:
+        stmt = todo.pop(0)
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        yield stmt
+        for field in ("body", "orelse", "finalbody"):
+            todo.extend(getattr(stmt, field, []) or [])
+        for handler in getattr(stmt, "handlers", []) or []:
+            todo.extend(handler.body)
+
+
+def _scope_env(scope, cfg) -> TaintEnv:
+    env = TaintEnv(cfg.device_calls, cfg.device_attrs)
+    func = scope.node
+    if isinstance(func, ast.Lambda):
+        params = func.args.posonlyargs + func.args.args + func.args.kwonlyargs
+    else:
+        params = func.args.posonlyargs + func.args.args + func.args.kwonlyargs
+    for p in params:
+        if p.arg not in scope.static_params and p.arg != "self":
+            env.names.add(p.arg)
+    return env
+
+
+def _iter_scopes(ctx, cfg):
+    for scope in astutils.find_traced_scopes(ctx.tree):
+        if isinstance(scope.node, ast.Lambda):
+            continue
+        yield scope
+
+
+@rule("TRACE001", ERROR,
+      "Python control flow on a traced value inside a jit/shard_map scope")
+def check_trace001(ctx, cfg):
+    out: list[Violation] = []
+    for scope in _iter_scopes(ctx, cfg):
+        env = _scope_env(scope, cfg)
+        for stmt in _own_statements(scope.node):
+            # taint flows forward through simple assignments
+            if isinstance(stmt, ast.Assign):
+                for target in stmt.targets:
+                    env.assign(target, env.tainted(stmt.value))
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                env.assign(stmt.target, env.tainted(stmt.value))
+            elif isinstance(stmt, ast.For):
+                env.assign(stmt.target, env.tainted(stmt.iter))
+            test = None
+            if isinstance(stmt, (ast.If, ast.While)):
+                test = stmt.test
+            elif isinstance(stmt, ast.Assert):
+                test = stmt.test
+            if test is None or not env.tainted(test):
+                continue
+            kind = type(stmt).__name__.lower()
+            if ctx.is_suppressed("TRACE001", stmt.lineno):
+                continue
+            out.append(Violation(
+                "TRACE001", ERROR, ctx.path, stmt.lineno, stmt.col_offset,
+                f"in traced scope {scope.qualname} ({scope.reason}): "
+                f"Python `{kind}` on a traced value — use jnp.where / "
+                "lax.cond, or mark the argument static"))
+    return out
+
+
+@rule("TRACE002", ERROR,
+      "impure call under trace (result frozen into the jaxpr)")
+def check_trace002(ctx, cfg):
+    out: list[Violation] = []
+    for scope in _iter_scopes(ctx, cfg):
+        for stmt in _own_statements(scope.node):
+            for node in ast.walk(stmt):
+                if not isinstance(node, ast.Call):
+                    continue
+                dotted = _dotted(node.func)
+                root = dotted.split(".", 1)[0] if dotted else None
+                impure = (
+                    root in _IMPURE_ROOTS
+                    or dotted in _IMPURE_BUILTINS
+                    or (root in ("np", "numpy")
+                        and dotted.split(".")[1:2] == ["random"]))
+                if not impure:
+                    continue
+                if ctx.is_suppressed("TRACE002", node.lineno):
+                    continue
+                out.append(Violation(
+                    "TRACE002", ERROR, ctx.path, node.lineno,
+                    node.col_offset,
+                    f"in traced scope {scope.qualname} ({scope.reason}): "
+                    f"impure call `{dotted}()` executes once at trace time "
+                    "and its result is baked into the compiled function"))
+    return out
+
+
+@rule("TRACE003", ERROR,
+      "captured mutable host state mutated under trace")
+def check_trace003(ctx, cfg):
+    out: list[Violation] = []
+    for scope in _iter_scopes(ctx, cfg):
+        local = _local_names(scope.node)
+
+        def base_name(node):
+            while isinstance(node, (ast.Subscript, ast.Attribute)):
+                node = node.value
+            return node.id if isinstance(node, ast.Name) else None
+
+        def flag(node, what):
+            if ctx.is_suppressed("TRACE003", node.lineno):
+                return
+            out.append(Violation(
+                "TRACE003", ERROR, ctx.path, node.lineno, node.col_offset,
+                f"in traced scope {scope.qualname} ({scope.reason}): "
+                f"{what} mutates captured host state — the side effect "
+                "replays per retrace, not per call"))
+
+        for stmt in _own_statements(scope.node):
+            targets = []
+            if isinstance(stmt, ast.Assign):
+                targets = stmt.targets
+            elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+                targets = [stmt.target]
+            for target in targets:
+                if not isinstance(target, (ast.Subscript, ast.Attribute)):
+                    continue
+                base = base_name(target)
+                # pallas Ref stores are device writes, not host mutation
+                if base is not None and base.endswith("_ref"):
+                    continue
+                if base is not None and base not in local:
+                    flag(stmt, f"assignment into closure `{base}`")
+                elif isinstance(target, ast.Attribute) and base == "self":
+                    flag(stmt, "assignment to a `self` attribute")
+            for node in ast.walk(stmt):
+                if not isinstance(node, ast.Call):
+                    continue
+                func = node.func
+                if (isinstance(func, ast.Attribute)
+                        and func.attr in _MUTATOR_METHODS):
+                    base = base_name(func.value)
+                    if base is not None and base not in local \
+                            and not base.endswith("_ref"):
+                        flag(node, f"`{base}.{func.attr}(...)`")
+    return out

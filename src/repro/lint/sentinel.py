@@ -1,0 +1,170 @@
+"""Runtime sync-sentinel: count *actual* device→host transfers.
+
+The SYNC rules are static claims; this harness is the runtime witness.
+Inside a ``with SyncSentinel() as s:`` block it monkeypatches jax's
+device→host transfer points:
+
+* ``jax.block_until_ready`` (and the array method of the same name) — the
+  *explicit, sanctioned* sync the executors' phase B performs.  The
+  executors increment ``ExecStats.num_syncs`` exactly once per call, so
+  ``s.explicit_syncs`` must equal the reported ``num_syncs``.
+* the implicit materializers: ``item``/``tolist`` and the numeric
+  dunders on the concrete array type, plus the ``np.asarray`` /
+  ``np.array`` / ``np.asanyarray`` / ``np.ascontiguousarray`` module
+  functions (jaxlib feeds numpy through the C buffer protocol, so the
+  class-level ``__array__`` hook never fires — the conversion has to be
+  caught at the numpy entrypoint).  Each interception
+  asks the array whether its computation already finished
+  (``is_ready()``): a read of a **ready** array is a cheap marshal-side
+  copy (phase B reads after the group sync — expected); a read of a
+  **pending** array *blocks*, i.e. it is a hidden host sync the static
+  rules exist to forbid.  ``s.blocking_reads`` must stay 0 on the
+  pipelined path.
+
+Usage (see tests/test_lint.py)::
+
+    with SyncSentinel() as s:
+        rs, stats = backend.run(queries, d, plan)
+    rep = s.report()
+    assert rep.blocking_reads == 0
+    assert rep.explicit_syncs == stats.num_syncs <= 2 * stats.num_groups
+
+The patches are process-global while the context is active — do not run
+concurrent jax work in other threads inside the block.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class SentinelReport:
+    """What actually crossed the device→host boundary."""
+
+    explicit_syncs: int          # block_until_ready calls (sanctioned)
+    blocking_reads: int          # materializations that had to wait
+    ready_reads: int             # materializations of already-done arrays
+    by_kind: dict                # interception point -> count
+
+    @property
+    def total_syncs(self) -> int:
+        """Host stalls: sanctioned syncs + hidden blocking reads."""
+        return self.explicit_syncs + self.blocking_reads
+
+
+class SyncSentinel:
+    """Context manager that instruments jax's device→host boundary."""
+
+    #: dunder/method transfer points patched on the concrete array type
+    _METHODS = ("__array__", "item", "tolist", "__int__", "__float__",
+                "__bool__", "__index__")
+    #: numpy module functions that materialize device arrays (the buffer
+    #: protocol bypasses the class-level ``__array__`` hook)
+    _NP_FUNCS = ("asarray", "array", "asanyarray", "ascontiguousarray")
+
+    def __init__(self):
+        self.explicit_syncs = 0
+        self.blocking_reads = 0
+        self.ready_reads = 0
+        self.by_kind: dict[str, int] = {}
+        self._saved: list = []
+        self._in_block = False     # jax.block_until_ready calls the array
+        #                            method internally — count it once
+        self._in_read = False      # .item() calls np.asarray internally —
+        #                            one user-level read, one record
+        # the concrete on-device array class (jaxlib ArrayImpl)
+        self._array_cls = type(jnp.zeros(()))
+
+    # ------------------------------------------------------------------
+    def _record_read(self, kind: str, array) -> None:
+        self.by_kind[kind] = self.by_kind.get(kind, 0) + 1
+        ready = True
+        probe = getattr(array, "is_ready", None)
+        if callable(probe):
+            try:
+                ready = bool(probe())
+            except Exception:
+                ready = True
+        if ready:
+            self.ready_reads += 1
+        else:
+            self.blocking_reads += 1
+
+    # ------------------------------------------------------------------
+    def __enter__(self) -> "SyncSentinel":
+        sentinel = self
+        cls = self._array_cls
+
+        orig_block = jax.block_until_ready
+
+        def block_until_ready(x):
+            sentinel.explicit_syncs += 1
+            sentinel.by_kind["block_until_ready"] = (
+                sentinel.by_kind.get("block_until_ready", 0) + 1)
+            sentinel._in_block = True
+            try:
+                return orig_block(x)
+            finally:
+                sentinel._in_block = False
+
+        jax.block_until_ready = block_until_ready
+        self._saved.append((jax, "block_until_ready", orig_block))
+
+        meth_block = getattr(cls, "block_until_ready", None)
+        if meth_block is not None:
+            def method_block(arr, _orig=meth_block):
+                if not sentinel._in_block:
+                    sentinel.explicit_syncs += 1
+                    sentinel.by_kind["method.block_until_ready"] = (
+                        sentinel.by_kind.get("method.block_until_ready", 0)
+                        + 1)
+                return _orig(arr)
+            setattr(cls, "block_until_ready", method_block)
+            self._saved.append((cls, "block_until_ready", meth_block))
+
+        for name in self._METHODS:
+            orig = getattr(cls, name, None)
+            if orig is None:
+                continue
+
+            def wrapper(arr, *args, _orig=orig, _name=name, **kwargs):
+                if not sentinel._in_read:
+                    sentinel._record_read(_name, arr)
+                sentinel._in_read = True
+                try:
+                    return _orig(arr, *args, **kwargs)
+                finally:
+                    sentinel._in_read = False
+
+            setattr(cls, name, wrapper)
+            self._saved.append((cls, name, orig))
+
+        import numpy as np
+        for name in self._NP_FUNCS:
+            orig = getattr(np, name)
+
+            def np_wrapper(obj, *args, _orig=orig, _name=name, **kwargs):
+                if isinstance(obj, cls) and not sentinel._in_read:
+                    sentinel._record_read(f"np.{_name}", obj)
+                return _orig(obj, *args, **kwargs)
+
+            setattr(np, name, np_wrapper)
+            self._saved.append((np, name, orig))
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        while self._saved:
+            owner, name, orig = self._saved.pop()
+            if owner is jax:
+                jax.block_until_ready = orig
+            else:
+                setattr(owner, name, orig)
+        return False
+
+    # ------------------------------------------------------------------
+    def report(self) -> SentinelReport:
+        return SentinelReport(self.explicit_syncs, self.blocking_reads,
+                              self.ready_reads, dict(self.by_kind))

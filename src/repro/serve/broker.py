@@ -440,6 +440,10 @@ class QueryBroker:
         g = ticket._groups[ticket._next_group]
         t0 = time.perf_counter()
         try:
+            # Sync audit: _run_group is the executor's pipelined dispatch
+            # (its ≤ 2 block_until_ready calls are the *only* host syncs);
+            # rs_part comes back as a marshalled numpy ResultSet, so the
+            # delivery path below never touches a device buffer.
             rs_part, stats = ticket._run_group(g)
         except Exception as e:
             self._fail(ticket, e)

@@ -1,6 +1,6 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here on purpose — smoke tests and
-benchmarks must see the real single CPU device; only repro.launch.dryrun
-forces the 512-device placeholder topology (in its own process)."""
+benchmarks must see the real single CPU device; anything that needs the
+512-device placeholder topology must force it in its own process."""
 import numpy as np
 import pytest
 
