@@ -37,6 +37,13 @@ The ``bench_pr6`` entry writes ``BENCH_PR6.json`` (see
 ``benchmarks.lint_bench``): ``repro.lint`` wall time over ``src/`` and the
 full tree (files, KLoC/s, violation counts) plus the CLI end-to-end time,
 checked against the 5 s CI budget.
+
+The ``bench_pr7`` entry writes ``BENCH_PR7.json`` (see
+``benchmarks.prune_bench.canonical_report_pr7``): the S2 executor rows
+again (ratioed against ``BENCH_PR5.json``) plus the pruning-mode matrix
+(none / spatial / hierarchical × jnp / pallas) on the clustered C1 and
+bimodal twin-swarm C3 scenarios — the hierarchical K-box index with
+device-side live-tile dispatch vs the PR 5 bin-level pruner.
 """
 from __future__ import annotations
 
@@ -62,12 +69,16 @@ def main(argv=None) -> int:
                     help="path for the bench_pr5 JSON report")
     ap.add_argument("--bench-out6", default="BENCH_PR6.json",
                     help="path for the bench_pr6 JSON report")
+    ap.add_argument("--bench-out7", default="BENCH_PR7.json",
+                    help="path for the bench_pr7 JSON report")
     ap.add_argument("--baseline", default="BENCH_PR2.json",
                     help="baseline report bench_pr3 compares against")
     ap.add_argument("--baseline4", default="BENCH_PR3.json",
                     help="baseline report bench_pr4 compares against")
     ap.add_argument("--baseline5", default="BENCH_PR4.json",
                     help="baseline report bench_pr5 compares against")
+    ap.add_argument("--baseline7", default="BENCH_PR5.json",
+                    help="baseline report bench_pr7 compares against")
     args = ap.parse_args(argv)
 
     from benchmarks import (broker_bench, fig3_interactions, kernel_bench,
@@ -145,6 +156,22 @@ def main(argv=None) -> int:
                 f"the {lint_bench.BUDGET_SECONDS:.1f}s CI budget")
         print(f"# bench_pr6 report -> {args.bench_out6}")
 
+    def bench_pr7():
+        report = prune_bench.canonical_report_pr7(quick=not args.full)
+        with open(args.bench_out7, "w") as f:
+            json.dump(report, f, indent=2)
+        kernel_bench.print_executor_rows(report["executor"])
+        prune_bench.print_pruning_mode_rows(report["pruning_modes"])
+        if os.path.exists(args.baseline7):
+            with open(args.baseline7) as f:
+                baseline = json.load(f)
+            for line in kernel_bench.compare_executor_sections(report,
+                                                               baseline):
+                print(line)
+        else:
+            print(f"# baseline {args.baseline7} not found — no comparison")
+        print(f"# bench_pr7 report -> {args.bench_out7}")
+
     benches = {
         "fig3": lambda: fig3_interactions.main(),
         "table2": lambda: table2_batching.main(),
@@ -158,6 +185,7 @@ def main(argv=None) -> int:
         "bench_pr4": bench_pr4,
         "bench_pr5": bench_pr5,
         "bench_pr6": bench_pr6,
+        "bench_pr7": bench_pr7,
         "roofline": lambda: roofline_report.main(),
     }
     only = set(args.only.split(",")) if args.only else None

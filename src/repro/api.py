@@ -106,14 +106,28 @@ class ExecutionPolicy:
 
     # -- index ----------------------------------------------------------
     num_bins: int = DEFAULT_NUM_BINS
-    #: two-level spatiotemporal candidate pruning (PR 5): ``"spatial"``
-    #: (default) prices batching against the pruned workload, trims and
-    #: splits each batch's candidate range against the per-bin MBR index,
-    #: and arms the fused kernels' tile-level MBR early-out; ``"none"``
-    #: keeps the paper's temporal-only candidates.  Pruning is exact —
-    #: canonical results are byte-identical either way; only the work (and
-    #: hence the wall time) changes.
+    #: per-bin spatial split factor K for the hierarchical index layer
+    #: (PR 7).  Structural like ``num_bins`` — consulted at ``TrajectoryDB``
+    #: construction.  K=1 (default) is exactly the PR 5 one-box-per-bin
+    #: index; K>1 splits each temporal bin's segments into up to K spatial
+    #: boxes so ``pruning="hierarchical"`` can prune multi-modal data that
+    #: unions into one useless fat box per bin.
+    index_kboxes: int = 1
+    #: spatiotemporal candidate pruning: ``"spatial"`` (default, PR 5)
+    #: prices batching against the pruned workload, trims and splits each
+    #: batch's candidate range against the per-bin MBR index, and arms the
+    #: fused kernels' tile-level MBR early-out; ``"hierarchical"`` (PR 7)
+    #: plans at the K-box level (set ``index_kboxes`` > 1 for multi-modal
+    #: wins) and replaces the per-tile box test with the device-side
+    #: live-tile list kernel; ``"none"`` keeps the paper's temporal-only
+    #: candidates.  Pruning is exact — canonical results are byte-identical
+    #: across all modes; only the work (and hence the wall time) changes.
     pruning: str = "spatial"
+    #: cap on sub-ranges one batch may split into during pruning (None →
+    #: ``repro.core.index.DEFAULT_MAX_SUBRANGES``).  Surplus runs merge
+    #: across the smallest gaps — exact but less pruned; the coarse pricing
+    #: grid charges the batching merges for that re-admission.
+    max_subranges: int | None = None
 
     # -- kernel / device ------------------------------------------------
     cand_blk: int = DEFAULT_CAND_BLK
@@ -357,7 +371,8 @@ class TrajectoryDB:
             qry_blk=self.policy.qry_blk,
             default_capacity=self.policy.capacity,
             compaction=self.policy.compaction, pipeline=self.policy.pipeline,
-            pruning=self.policy.pruning)
+            pruning=self.policy.pruning,
+            index_kboxes=self.policy.index_kboxes)
         self.segments: SegmentArray = self._base_engine.db
         self.index: TemporalBinIndex = self._base_engine.index
         self._backends: dict[str, QueryBackend] = {}
@@ -499,11 +514,19 @@ class TrajectoryDB:
         capacity = pol.shard_capacity if backend == "shard" else pol.capacity
         predict_hits = (self.response_model.predict_batch_hits
                         if self.response_model is not None else None)
+        pruning = pol.pruning
+        if backend == "shard" and pruning == "hierarchical":
+            # The pod partition slices the t_start-sorted segment array, so
+            # shard plans must stay in the original (bin-level) index order;
+            # the hierarchical win on this backend is the per-pod live-tile
+            # list each pod builds in-graph inside make_pod_query_fn.
+            pruning = "spatial"
         return QueryPlanner(
             self.index, algorithm=pol.batching,
             params=pol.resolved_batch_params(num_queries),
             default_capacity=capacity, group_size=pol.group_size,
-            pruning=pol.pruning, predict_hits=predict_hits)
+            pruning=pruning, predict_hits=predict_hits,
+            max_subranges=pol.max_subranges)
 
     def plan(self, queries: SegmentArray,
              policy: ExecutionPolicy | None = None, *,
@@ -567,9 +590,10 @@ class TrajectoryDB:
         ``compaction=`` ("fused" in-kernel vs "fused_rowloop" gather-free vs
         "dense" two-phase result compaction), ``pipeline=`` (async
         O(1)-sync executor vs per-batch sync loop) and ``pruning=``
-        ("spatial" two-level candidate pruning vs "none" — same canonical
-        result, less work) for the engine backends
-        (``"pallas"``/``"jnp"``/``"shard"``).
+        ("hierarchical" K-box sub-ranges + device-side live-tile dispatch,
+        "spatial" bin-level candidate pruning, or "none" — all three give
+        the same canonical result, in decreasing order of work avoided)
+        for the engine backends (``"pallas"``/``"jnp"``/``"shard"``).
         """
         if len(queries) == 0:
             return QueryResult.from_result_set(

@@ -106,23 +106,30 @@ class SpatialInteractionCounter:
     counts come from the index's coarse per-bin-MBR estimate
     (:meth:`~repro.core.index.TemporalBinIndex.
     estimate_pruned_candidates_batch`) evaluated against each batch's
-    query-MBR union — never smaller than the *uncapped* pruned workload
-    (the planner's ``max_subranges`` cap can re-admit a fragmented
-    extent's gap segments beyond the priced count; see the estimate's
-    docstring).
+    query-MBR union.  ``level="box"`` prices against the K-box-per-bin
+    hierarchy (``pruning="hierarchical"``); ``max_subranges`` folds the
+    planner's sub-range cap into the price (the cap can re-admit a
+    fragmented extent's gap segments, and the coarse grid charges a
+    conservative surcharge for that — see the estimate's docstring), so
+    the priced count tracks the capped dispatched workload instead of the
+    uncapped ideal.
     """
 
     def __init__(self, index: TemporalBinIndex, queries: SegmentArray,
-                 d: float):
+                 d: float, *, level: str = "bin",
+                 max_subranges: int | None = None):
         self.index = index
         self.d = float(d)
+        self.level = level
+        self.max_subranges = max_subranges
         self.qlo, self.qhi = queries.mbrs()      # (nq, 3) float64
 
     def counts(self, qt0, qt1, lo, hi) -> np.ndarray:
         """Pruned candidate counts for batches with extents (qt0, qt1) and
         query-MBR unions (lo, hi) — all stacked arrays."""
         return self.index.estimate_pruned_candidates_batch(
-            qt0, qt1, lo, hi, self.d)
+            qt0, qt1, lo, hi, self.d, level=self.level,
+            max_subranges=self.max_subranges)
 
 
 # ----------------------------------------------------------------------

@@ -299,6 +299,14 @@ def make_pod_query_fn(mesh: Mesh, capacity_per_shard: int, *,
       executor reads for exact result sizing, the multi-device analogue of
       the single-device kernel's exact-count contract.
 
+    ``pruning`` is forwarded to ``ops.query_block`` *inside* the
+    ``shard_map`` body, where everything is traced: ``"spatial"`` derives
+    the per-tile MBRs in-graph (PR 5) and ``"hierarchical"`` (PR 7) makes
+    **each pod build its own live-tile list in-graph** from its resident
+    shard (``ops._jit_live_tiles``) and dispatch the scalar-prefetched
+    live-tile kernel — dead slots sort to the tail and cost one scalar
+    compare per slot, with no host round-trip and no cross-pod traffic.
+
     Capacity (and the block/compaction knobs) are baked into the returned
     callable; the sharded engine keeps one per retry capacity.
     """
@@ -456,6 +464,16 @@ class ShardedEngine:
     Registered through the facade as ``backend="shard"``
     (``repro.api.TrajectoryDB.query``); constructed there from
     ``ExecutionPolicy.shard_pods`` / ``shard_capacity``.
+
+    ``pruning="hierarchical"`` is planner-downgraded to ``"spatial"``
+    for this backend (pod partitions cut mid-bin in original segment
+    order, so box sub-ranges don't survive the partition); the
+    kernel-level win is kept on the fused Pallas path
+    (``shard_use_pallas=True``): ``make_pod_query_fn`` builds the
+    compacted live-tile lists *in-graph* per pod (stable
+    ``jnp.argsort`` over the tile box test — shard_map tracers, so no
+    host-side ``np.nonzero``), and results stay byte-identical to the
+    single-device backends across all pruning modes.
     """
 
     def __init__(self, db: SegmentArray, *, mesh: Mesh | None = None,

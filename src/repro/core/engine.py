@@ -71,7 +71,12 @@ class _QueryBlockDispatcher:
 
     def dispatch(self, batch, capacity: int) -> Dispatch:
         eng = self.engine
-        e_slice = eng._packed[batch.cand_first:batch.cand_last + 1]
+        # Hierarchical pruning plans box-level sub-ranges in the index's
+        # *permuted* segment order, so the dispatched slices come from the
+        # permuted packed copy (identical to ``_packed`` when K=1).
+        packed = (eng._packed_perm if eng.pruning == "hierarchical"
+                  else eng._packed)
+        e_slice = packed[batch.cand_first:batch.cand_last + 1]
         q_slice = self.q_packed[batch.q_first:batch.q_last + 1]
         out = ops.query_block(
             e_slice, q_slice, np.float32(self.d), capacity=capacity,
@@ -99,6 +104,12 @@ class _QueryBlockDispatcher:
         e_local = np.asarray(out["entry_idx"][:count])
         q_local = np.asarray(out["query_idx"][:count])
         e_global = batch.cand_first + e_local.astype(np.int64)
+        if self.engine.pruning == "hierarchical":
+            perm = self.engine.index.perm
+            if perm is not None:
+                # Permuted dispatch position → original sorted-db index, so
+                # results stay byte-identical across pruning modes.
+                e_global = perm[e_global]
         return ResultSet(
             entry_idx=e_global,
             entry_traj=db.traj_id[e_global].astype(np.int64),
@@ -116,7 +127,8 @@ class DistanceThresholdEngine:
                  use_pallas: bool = False, interpret: bool = True,
                  cand_blk: int = DEFAULT_CAND_BLK, qry_blk: int = DEFAULT_QRY_BLK,
                  default_capacity: int = 4096, compaction: str = "fused",
-                 pipeline: bool = True, pruning: str = "spatial"):
+                 pipeline: bool = True, pruning: str = "spatial",
+                 index_kboxes: int = 1):
         """``use_pallas=False`` routes interactions through the jnp oracle —
         the right default on CPU where Pallas runs in interpret mode.  Both
         paths share identical semantics (tests assert equality).
@@ -133,6 +145,14 @@ class DistanceThresholdEngine:
         tile-level MBR early-out (work-only — the result set is provably
         unchanged); the planner-level candidate trimming lives upstream in
         ``repro.core.planner`` and reaches this engine through the plan.
+        ``pruning="hierarchical"`` plans against the K-box-per-bin level
+        and dispatches with the live-tile kernel; its plans address the
+        index's *permuted* segment order, so plan and engine must agree on
+        the pruning mode (the facade guarantees it; direct engine users
+        own that consistency).  ``index_kboxes`` is the per-bin spatial
+        split factor K handed to ``TemporalBinIndex.build`` — structural
+        (the default K=1 makes hierarchical planning degenerate to
+        bin-level boxes while keeping the live-tile kernel dispatch).
         """
         if compaction not in ops.COMPACTIONS:
             raise ValueError(f"unknown compaction {compaction!r}; "
@@ -141,8 +161,13 @@ class DistanceThresholdEngine:
             raise ValueError(f"unknown pruning {pruning!r}; "
                              f"choose from {ops.PRUNINGS}")
         self.db = db if db.is_sorted() else db.sort_by_tstart()
-        self.index = TemporalBinIndex.build(self.db, num_bins)
+        self.index = TemporalBinIndex.build(self.db, num_bins,
+                                            kboxes=index_kboxes)
         self._packed = self.db.packed()          # (n, 8) float32, host copy
+        # Permuted device layout for hierarchical (box-level) plans: row i
+        # holds the segment at sorted-db position perm[i].  Alias when K=1.
+        self._packed_perm = (self._packed if self.index.perm is None
+                             else self._packed[self.index.perm])
         self.use_pallas = use_pallas
         self.interpret = interpret
         self.cand_blk = cand_blk

@@ -40,7 +40,9 @@ Two executors drive a dispatcher over a plan:
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import threading
 import time
 from typing import Callable, Protocol, runtime_checkable
 
@@ -49,6 +51,34 @@ import numpy as np
 
 from repro.core.batching import QueryBatch
 from repro.core.planner import QueryPlan
+
+
+# ----------------------------------------------------------------------
+# Dispatch-group attribution (lint/sentinel seam).
+# ----------------------------------------------------------------------
+#: Per-thread label of the dispatch group currently executing — published
+#: by both executors so observability layers (``repro.lint.sentinel``'s
+#: blocking-read attribution) can blame a device→host stall on the group
+#: that performed it without the executors knowing the sentinel exists.
+#: Thread-local because the deadline scheduler runs whole groups on pool
+#: threads concurrently.
+_dispatch_context = threading.local()
+
+
+def current_group_label() -> str | None:
+    """The calling thread's active dispatch-group label (e.g.
+    ``"pipelined:finish:3"``), or ``None`` outside any group scope."""
+    return getattr(_dispatch_context, "label", None)
+
+
+@contextlib.contextmanager
+def _group_scope(label: str):
+    prev = getattr(_dispatch_context, "label", None)
+    _dispatch_context.label = label
+    try:
+        yield
+    finally:
+        _dispatch_context.label = prev
 
 
 # ----------------------------------------------------------------------
@@ -276,36 +306,37 @@ class SyncExecutor:
         num_syncs = 0
         for gi, g in enumerate(groups):
             group_parts: list[ResultSet] = []
-            for i in g:
-                batch, capacity = plan.batches[i], plan.capacities[i]
-                if batch.num_candidates == 0:
-                    stats_by_idx[i] = _empty_stats(batch)
-                    continue
-                t0 = time.perf_counter()
-                dp = disp.dispatch(batch, capacity)
-                jax.block_until_ready(dp.out)
-                kernel_s = time.perf_counter() - t0
-                num_syncs += 1
-                count = disp.count(dp)
-                retries = 0
-                retry_s = 0.0
-                while (cap2 := disp.retry_capacity(dp)) is not None:
-                    t0r = time.perf_counter()
-                    dp = _redispatch(disp, dp, cap2)
+            with _group_scope(f"sync:{gi}"):
+                for i in g:
+                    batch, capacity = plan.batches[i], plan.capacities[i]
+                    if batch.num_candidates == 0:
+                        stats_by_idx[i] = _empty_stats(batch)
+                        continue
+                    t0 = time.perf_counter()
+                    dp = disp.dispatch(batch, capacity)
                     jax.block_until_ready(dp.out)
-                    retry_s += time.perf_counter() - t0r
+                    kernel_s = time.perf_counter() - t0
                     num_syncs += 1
                     count = disp.count(dp)
-                    retries += 1
-                part = disp.marshal(dp, count)
-                if part is not None:
-                    group_parts.append(part)
-                pt, nt = _tile_stats(disp, dp)
-                stats_by_idx[i] = BatchStats(
-                    batch.size, batch.num_candidates,
-                    batch.size * batch.num_candidates, count,
-                    kernel_s, retries, retry_s,
-                    pruned_tiles=pt, num_tiles=nt)
+                    retries = 0
+                    retry_s = 0.0
+                    while (cap2 := disp.retry_capacity(dp)) is not None:
+                        t0r = time.perf_counter()
+                        dp = _redispatch(disp, dp, cap2)
+                        jax.block_until_ready(dp.out)
+                        retry_s += time.perf_counter() - t0r
+                        num_syncs += 1
+                        count = disp.count(dp)
+                        retries += 1
+                    part = disp.marshal(dp, count)
+                    if part is not None:
+                        group_parts.append(part)
+                    pt, nt = _tile_stats(disp, dp)
+                    stats_by_idx[i] = BatchStats(
+                        batch.size, batch.num_candidates,
+                        batch.size * batch.num_candidates, count,
+                        kernel_s, retries, retry_s,
+                        pruned_tiles=pt, num_tiles=nt)
             parts.extend(group_parts)
             if self.on_group is not None:
                 self.on_group(gi, list(g), ResultSet.concatenate(group_parts))
@@ -353,13 +384,14 @@ class PipelinedExecutor:
         parts: dict[int, ResultSet] = {}
         timing = {"dispatch": 0.0, "sync": 0.0, "syncs": 0}
 
-        def dispatch_group(g: list[int]) -> None:
+        def dispatch_group(gi: int, g: list[int]) -> None:
             t0 = time.perf_counter()
-            for i in g:
-                batch = plan.batches[i]
-                if batch.num_candidates == 0:
-                    continue
-                slots[i] = disp.dispatch(batch, plan.capacities[i])
+            with _group_scope(f"pipelined:dispatch:{gi}"):
+                for i in g:
+                    batch = plan.batches[i]
+                    if batch.num_candidates == 0:
+                        continue
+                    slots[i] = disp.dispatch(batch, plan.capacities[i])
             timing["dispatch"] += time.perf_counter() - t0
 
         def finish_group(gi: int, g: list[int]) -> None:
@@ -368,41 +400,43 @@ class PipelinedExecutor:
                 if self.on_group is not None:
                     self.on_group(gi, list(g), ResultSet.empty())
                 return
-            t0 = time.perf_counter()
-            jax.block_until_ready([slots[i].out for i in live])
-            timing["syncs"] += 1
-            for i in live:
-                counts[i] = disp.count(slots[i])
-            # Re-dispatch only overflowed batches; exact counts make one
-            # retry always sufficient.
-            t_retry = time.perf_counter()
-            redo = []
-            for i in live:
-                cap2 = disp.retry_capacity(slots[i])
-                if cap2 is not None:
-                    slots[i] = _redispatch(disp, slots[i], cap2)
-                    redo.append(i)
-            if redo:
-                jax.block_until_ready([slots[i].out for i in redo])
+            with _group_scope(f"pipelined:finish:{gi}"):
+                t0 = time.perf_counter()
+                jax.block_until_ready([slots[i].out for i in live])
                 timing["syncs"] += 1
-                for i in redo:
+                for i in live:
                     counts[i] = disp.count(slots[i])
-            retry_s = time.perf_counter() - t_retry if redo else 0.0
-            timing["sync"] += (time.perf_counter() - t0) - retry_s
-            for i in redo:
-                retried[i] = retry_s / len(redo)
-            # Host-side marshalling — by now the next group's phase A has
-            # already queued its device work, so this overlaps compute.
-            for i in live:
-                part = disp.marshal(slots[i], counts[i])
-                if part is not None:
-                    parts[i] = part
+                # Re-dispatch only overflowed batches; exact counts make one
+                # retry always sufficient.
+                t_retry = time.perf_counter()
+                redo = []
+                for i in live:
+                    cap2 = disp.retry_capacity(slots[i])
+                    if cap2 is not None:
+                        slots[i] = _redispatch(disp, slots[i], cap2)
+                        redo.append(i)
+                if redo:
+                    jax.block_until_ready([slots[i].out for i in redo])
+                    timing["syncs"] += 1
+                    for i in redo:
+                        counts[i] = disp.count(slots[i])
+                retry_s = time.perf_counter() - t_retry if redo else 0.0
+                timing["sync"] += (time.perf_counter() - t0) - retry_s
+                for i in redo:
+                    retried[i] = retry_s / len(redo)
+                # Host-side marshalling — by now the next group's phase A
+                # has already queued its device work, so this overlaps
+                # compute.
+                for i in live:
+                    part = disp.marshal(slots[i], counts[i])
+                    if part is not None:
+                        parts[i] = part
             if self.on_group is not None:
                 self.on_group(gi, list(g), ResultSet.concatenate(
                     [parts[i] for i in g if i in parts]))
 
         for gi, g in enumerate(groups):
-            dispatch_group(g)
+            dispatch_group(gi, g)
             if gi > 0:
                 finish_group(gi - 1, groups[gi - 1])
         if groups:

@@ -32,6 +32,21 @@ it is exact, never lossy.  :meth:`estimate_pruned_candidates_batch` is the
 vectorized *pricing* counterpart over a coarsened bin grid — cheap enough
 for the SETSPLIT merge loops, conservative (it never under-counts the
 exact pruned workload).
+
+**Hierarchical K-box layer (PR 7).**  One box per bin unions multi-modal
+activity (two swarms far apart in the same epoch) into one fat box that
+prunes nothing.  Each bin's segments are therefore additionally split into
+at most ``K`` spatial boxes: segments are *reordered within their bin* by
+midpoint coordinate along the bin's widest-spread axis (the permutation is
+stored as :attr:`perm`; bins stay contiguous, so every bin-granular
+quantity — ``b_first``/``b_last``/``b_end``/per-bin MBRs — is invariant),
+and each bin is cut at its ``K−1`` largest coordinate gaps.  Every
+(bin, box) slot is then a *contiguous sub-range of permuted segment
+indices* with its own MBR, so :meth:`candidate_subranges(level="box")`
+prunes at box granularity with the exact same inflated-threshold test —
+still never lossy.  Engines keep their segment arrays t_start-sorted
+(the distributed pod partition depends on it) and permute only the packed
+device copy; result entry indices are mapped back through :attr:`perm`.
 """
 from __future__ import annotations
 
@@ -51,7 +66,15 @@ COARSE_GRID_BINS = 128
 #: Max sub-ranges :meth:`candidate_subranges` returns per query extent —
 #: each sub-range becomes one dispatched batch, so this bounds the
 #: dispatch-count blow-up; surplus runs merge across the smallest gaps.
+#: ``ExecutionPolicy.max_subranges`` overrides this per query; the coarse
+#: pricing grid prices the re-admission cost of the cap (see
+#: :meth:`TemporalBinIndex.estimate_pruned_candidates_batch`).
 DEFAULT_MAX_SUBRANGES = 8
+
+#: Hard ceiling on the per-bin spatial split factor K.  The K-box arrays
+#: are dense ``(num_bins, K, …)``, so K is kept small; beyond ~8 boxes the
+#: per-bin split stops paying for its planning cost anyway.
+MAX_KBOXES = 8
 
 
 def mbr_gap2(alo, ahi, blo, bhi):
@@ -106,10 +129,20 @@ class TemporalBinIndex:
     _coarse_last: np.ndarray
     _coarse_lo: np.ndarray     # (k, 3) — coarse-bin union MBRs
     _coarse_hi: np.ndarray
+    # -- hierarchical K-box layer (PR 7) --------------------------------
+    kboxes: int = 1          # per-bin spatial split factor K (1 = PR 5 index)
+    perm: np.ndarray | None = None  # (n,) within-bin reorder: new[i] = old[perm[i]]
+    kbox_first: np.ndarray | None = None  # (m, K) int64 — per-box permuted ranges
+    kbox_last: np.ndarray | None = None   # (m, K) int64 — first-1 / -1 when empty
+    kbox_lo: np.ndarray | None = None     # (m, K, 3) — per-box MBR (+inf empty)
+    kbox_hi: np.ndarray | None = None     # (m, K, 3)
+    _coarse_klo: np.ndarray | None = None  # (k, K, 3) — coarse K-box unions
+    _coarse_khi: np.ndarray | None = None
 
     # ------------------------------------------------------------------
     @staticmethod
-    def build(db: SegmentArray, num_bins: int = DEFAULT_NUM_BINS) -> "TemporalBinIndex":
+    def build(db: SegmentArray, num_bins: int = DEFAULT_NUM_BINS, *,
+              kboxes: int = 1) -> "TemporalBinIndex":
         if not db.is_sorted():
             raise ValueError("TemporalBinIndex requires segments sorted by t_start")
         n = len(db)
@@ -171,6 +204,80 @@ class TemporalBinIndex:
         cends = np.minimum(cstarts + chunk - 1, num_bins - 1)
         coarse_lo = np.minimum.reduceat(mbr_lo, cstarts, axis=0)
         coarse_hi = np.maximum.reduceat(mbr_hi, cstarts, axis=0)
+
+        # -- hierarchical K-box layer (PR 7) ----------------------------
+        kboxes = int(kboxes)
+        if not 1 <= kboxes <= MAX_KBOXES:
+            raise ValueError(f"kboxes must be in [1, {MAX_KBOXES}], got {kboxes}")
+        if kboxes == 1:
+            # K=1 is exactly the PR 5 index: one box per bin, no reorder.
+            perm = None
+            kbox_first = b_first[:, None].copy()
+            kbox_last = b_last[:, None].copy()
+            kbox_lo = mbr_lo[:, None, :].copy()
+            kbox_hi = mbr_hi[:, None, :].copy()
+        else:
+            counts = np.maximum(b_last - b_first + 1, 0)
+            bin_id = np.repeat(np.arange(num_bins, dtype=np.int64), counts)
+            mid = 0.5 * (seg_lo + seg_hi)
+            # Per-bin widest-spread midpoint axis: splitting along it
+            # separates spatial modes; ties/empty default to axis 0.
+            axis = np.zeros(num_bins, dtype=np.int64)
+            if nonempty.any():
+                mmin = np.minimum.reduceat(mid, starts, axis=0)
+                mmax = np.maximum.reduceat(mid, starts, axis=0)
+                axis[nonempty] = np.argmax(mmax - mmin, axis=1)
+            key = mid[np.arange(n), axis[bin_id]]
+            # Stable within-bin sort by the split-axis coordinate: bins
+            # stay contiguous, so every bin-granular quantity above is
+            # unchanged, and each spatial box becomes a contiguous
+            # sub-range of permuted indices.
+            perm = np.lexsort((key, bin_id)).astype(np.int64)
+            keyp = key[perm]
+            # Split each bin at its kboxes-1 largest strictly-positive
+            # coordinate gaps (equal-count quantiles would cut through a
+            # lopsided mode; largest-gap cuts between modes).
+            splits = np.empty(0, dtype=np.int64)
+            if n > 1:
+                gapv = keyp[1:] - keyp[:-1]
+                cand = (bin_id[1:] == bin_id[:-1]) & (gapv > 0.0)
+                cpos = np.nonzero(cand)[0].astype(np.int64) + 1
+                if cpos.size:
+                    cgap = gapv[cpos - 1]
+                    cbin = bin_id[cpos]
+                    order = np.lexsort((-cgap, cbin))
+                    sb = cbin[order]
+                    grp = np.r_[0, np.nonzero(np.diff(sb))[0] + 1].astype(np.int64)
+                    lens = np.diff(np.r_[grp, sb.size])
+                    rank = np.arange(sb.size) - np.repeat(grp, lens)
+                    splits = np.sort(cpos[order[rank < kboxes - 1]])
+            # Box slots: each box starts at its bin's b_first or at a
+            # split position; non-empty bins tile [0, n) contiguously, so
+            # each box ends right before the next start.
+            allstarts = np.concatenate([b_first[nonempty], splits])
+            allstarts.sort()
+            abin = bin_id[allstarts]
+            grp = np.r_[0, np.nonzero(np.diff(abin))[0] + 1].astype(np.int64)
+            lens = np.diff(np.r_[grp, abin.size])
+            bidx = np.arange(abin.size) - np.repeat(grp, lens)
+            ends = np.r_[allstarts[1:] - 1, n - 1].astype(np.int64)
+            slo_p, shi_p = seg_lo[perm], seg_hi[perm]
+            box_lo = np.minimum.reduceat(slo_p, allstarts, axis=0)
+            box_hi = np.maximum.reduceat(shi_p, allstarts, axis=0)
+            kbox_first = np.zeros((num_bins, kboxes), dtype=np.int64)
+            kbox_last = np.full((num_bins, kboxes), -1, dtype=np.int64)
+            kbox_lo = np.full((num_bins, kboxes, 3), np.inf)
+            kbox_hi = np.full((num_bins, kboxes, 3), -np.inf)
+            kbox_first[abin, bidx] = allstarts
+            kbox_last[abin, bidx] = ends
+            kbox_lo[abin, bidx] = box_lo
+            kbox_hi[abin, bidx] = box_hi
+        # Coarse pricing grid, K-box flavour: cell c's box k is the union
+        # over the chunk's bins of their box k.  If any fine box (j, k)
+        # survives the prune test its cell's box k contains it and
+        # survives too, so the coarse estimate stays conservative.
+        coarse_klo = np.minimum.reduceat(kbox_lo, cstarts, axis=0)
+        coarse_khi = np.maximum.reduceat(kbox_hi, cstarts, axis=0)
         return TemporalBinIndex(
             t0=t0, bin_width=width, num_bins=num_bins,
             b_start=b_start, b_end=b_end, b_first=b_first, b_last=b_last,
@@ -181,6 +288,10 @@ class TemporalBinIndex:
             _prune_scale=scale,
             _coarse_first=b_first[cstarts], _coarse_last=b_last[cends],
             _coarse_lo=coarse_lo, _coarse_hi=coarse_hi,
+            kboxes=kboxes, perm=perm,
+            kbox_first=kbox_first, kbox_last=kbox_last,
+            kbox_lo=kbox_lo, kbox_hi=kbox_hi,
+            _coarse_klo=coarse_klo, _coarse_khi=coarse_khi,
         )
 
     # ------------------------------------------------------------------
@@ -279,46 +390,9 @@ class TemporalBinIndex:
                   if finite.any() else 0.0)
         return prune_limit(d, max(self._prune_scale, qscale))
 
-    def candidate_subranges(self, qt0: float, qt1: float,
-                            qlo: np.ndarray, qhi: np.ndarray, d: float, *,
-                            max_subranges: int = DEFAULT_MAX_SUBRANGES
-                            ) -> list[tuple[int, int]]:
-        """Spatially pruned candidate sub-ranges for one query extent.
-
-        ``qlo``/``qhi`` is the (3,) union MBR of the query segments sharing
-        the extent ``[qt0, qt1]`` (a batch); ``d`` the distance threshold.
-        Returns disjoint, increasing, inclusive ``(first, last)`` segment
-        index sub-ranges — the temporal ``candidate_range`` with every run
-        of bins farther than the inflated threshold from the query MBR (or
-        temporally dead: ``B_end < qt0``) cut out.  Exact: a pruned bin's
-        box lies farther than ``d`` from the whole batch MBR, hence from
-        every member query's box, hence from every member query at every
-        instant — no hit can be dropped.  At most ``max_subranges`` runs
-        come back (surplus runs merge across the smallest gaps), bounding
-        the per-batch dispatch count.
-        """
-        r = self._bin_range(qt0, qt1)
-        if r is None:
-            return []
-        j_lo, j_hi = r
-        first = max(int(self.b_first[j_lo]), 0)
-        last = min(int(self.b_last[j_hi]), self.n_segments - 1)
-        if last < first:
-            return []
-        qlo = np.asarray(qlo, np.float64)
-        qhi = np.asarray(qhi, np.float64)
-        lim = self._limit(d, qlo, qhi)
-        lim2 = lim * lim
-        # Whole-range quick reject: the range's true MBR union is a subset
-        # of both prefix[j_hi] and suffix[j_lo], so the larger box distance
-        # lower-bounds the distance to everything in the range.
-        lb2 = max(float(mbr_gap2(self.prefix_lo[j_hi], self.prefix_hi[j_hi],
-                                 qlo, qhi)),
-                  float(mbr_gap2(self.suffix_lo[j_lo], self.suffix_hi[j_lo],
-                                 qlo, qhi)))
-        if lb2 > lim2:
-            return []
-        bins = slice(j_lo, j_hi + 1)
+    def _bin_runs(self, bins: slice, j_lo: int, qt0: float, qlo, qhi,
+                  lim2: float, first: int, last: int) -> list[list[int]]:
+        """Surviving bin runs as [first, last] segment sub-ranges (PR 5)."""
         gap2 = mbr_gap2(self.mbr_lo[bins], self.mbr_hi[bins], qlo, qhi)
         keep = (gap2 <= lim2) & (self.b_end[bins] >= qt0)
         kept = np.nonzero(keep)[0]
@@ -344,6 +418,88 @@ class TemporalBinIndex:
                 subs[-1][1] = max(subs[-1][1], l)
             else:
                 subs.append([f, l])
+        return subs
+
+    def _box_runs(self, bins: slice, qt0: float, qlo, qhi,
+                  lim2: float, first: int, last: int) -> list[list[int]]:
+        """Surviving K-box runs as [first, last] *permuted* sub-ranges.
+
+        Kept boxes in (bin-major, box-minor) order are increasing in
+        permuted segment position, so runs form by coalescing adjacent
+        boxes with no segments between them — same rule as the bin level,
+        vectorized because a long extent can keep num_bins×K boxes.
+        Empty box slots carry ±inf MBRs, so ``gap2 = inf`` prunes them.
+        """
+        gap2 = mbr_gap2(self.kbox_lo[bins], self.kbox_hi[bins], qlo, qhi)
+        keep = (gap2 <= lim2) & (self.b_end[bins] >= qt0)[:, None]
+        kf = self.kbox_first[bins][keep]
+        kl = self.kbox_last[bins][keep]
+        if kf.size == 0:
+            return []
+        kf = np.maximum(kf, first)
+        kl = np.minimum(kl, last)
+        ok = kl >= kf
+        kf, kl = kf[ok], kl[ok]
+        if kf.size == 0:
+            return []
+        cummax = np.maximum.accumulate(kl)
+        newrun = np.r_[True, kf[1:] > cummax[:-1] + 1]
+        starts = kf[newrun]
+        ends = np.maximum.reduceat(kl, np.nonzero(newrun)[0])
+        return [[int(a), int(b)] for a, b in zip(starts, ends)]
+
+    def candidate_subranges(self, qt0: float, qt1: float,
+                            qlo: np.ndarray, qhi: np.ndarray, d: float, *,
+                            max_subranges: int = DEFAULT_MAX_SUBRANGES,
+                            level: str = "bin") -> list[tuple[int, int]]:
+        """Spatially pruned candidate sub-ranges for one query extent.
+
+        ``qlo``/``qhi`` is the (3,) union MBR of the query segments sharing
+        the extent ``[qt0, qt1]`` (a batch); ``d`` the distance threshold.
+        Returns disjoint, increasing, inclusive ``(first, last)`` segment
+        index sub-ranges — the temporal ``candidate_range`` with every run
+        of bins (``level="bin"``, PR 5) or per-bin K-boxes
+        (``level="box"``, PR 7 — sub-ranges are then *permuted* segment
+        positions, matching the engines' permuted packed layout) farther
+        than the inflated threshold from the query MBR (or temporally
+        dead: ``B_end < qt0``) cut out.  Exact: a pruned box lies farther
+        than ``d`` from the whole batch MBR, hence from every member
+        query's box, hence from every member query at every instant — no
+        hit can be dropped.  At most ``max_subranges`` runs come back
+        (surplus runs merge across the *smallest* gaps; merging re-admits
+        the gap's segments, so the cap trades dispatch count for pruned
+        work — pruning may only shrink, never grow, the result, and on
+        multi-modal extents a too-small cap silently merges across huge
+        gaps, which is why the cap is policy-tunable and priced by
+        :meth:`estimate_pruned_candidates_batch`).
+        """
+        r = self._bin_range(qt0, qt1)
+        if r is None:
+            return []
+        j_lo, j_hi = r
+        first = max(int(self.b_first[j_lo]), 0)
+        last = min(int(self.b_last[j_hi]), self.n_segments - 1)
+        if last < first:
+            return []
+        qlo = np.asarray(qlo, np.float64)
+        qhi = np.asarray(qhi, np.float64)
+        lim = self._limit(d, qlo, qhi)
+        lim2 = lim * lim
+        # Whole-range quick reject: the range's true MBR union is a subset
+        # of both prefix[j_hi] and suffix[j_lo], so the larger box distance
+        # lower-bounds the distance to everything in the range.
+        lb2 = max(float(mbr_gap2(self.prefix_lo[j_hi], self.prefix_hi[j_hi],
+                                 qlo, qhi)),
+                  float(mbr_gap2(self.suffix_lo[j_lo], self.suffix_hi[j_lo],
+                                 qlo, qhi)))
+        if lb2 > lim2:
+            return []
+        bins = slice(j_lo, j_hi + 1)
+        if level == "box":
+            subs = self._box_runs(bins, qt0, qlo, qhi, lim2, first, last)
+        else:
+            subs = self._bin_runs(bins, j_lo, qt0, qlo, qhi, lim2,
+                                  first, last)
         if len(subs) > max_subranges:
             # Keep only the largest inter-run gaps as split points; merging
             # across a gap re-admits the gap's segments (exactness is
@@ -363,26 +519,40 @@ class TemporalBinIndex:
         return [(int(f), int(l)) for f, l in subs]
 
     def pruned_num_candidates(self, qt0: float, qt1: float, qlo, qhi,
-                              d: float) -> int:
+                              d: float, *,
+                              max_subranges: int = DEFAULT_MAX_SUBRANGES,
+                              level: str = "bin") -> int:
         """Exact candidate count surviving :meth:`candidate_subranges`."""
         return sum(l - f + 1 for f, l in
-                   self.candidate_subranges(qt0, qt1, qlo, qhi, d))
+                   self.candidate_subranges(qt0, qt1, qlo, qhi, d,
+                                            max_subranges=max_subranges,
+                                            level=level))
 
     def estimate_pruned_candidates_batch(self, qt0, qt1, qlo, qhi,
-                                         d: float) -> np.ndarray:
+                                         d: float, *,
+                                         level: str = "bin",
+                                         max_subranges: int | None = None
+                                         ) -> np.ndarray:
         """Vectorized pruned-candidate estimate over the coarse bin grid.
 
         ``qt0``/``qt1`` are (n,) extents, ``qlo``/``qhi`` (n, 3) query-MBR
         stacks.  For each row, the temporal ``[first, last]`` range is
         intersected with every coarse bin's segment range and coarse bins
         whose union MBR lies beyond the inflated threshold are dropped.
+        ``level="box"`` keeps a cell only when *some* of its K coarse
+        boxes survives — a strictly sharper (still conservative) test on
+        multi-modal data, matching ``candidate_subranges(level="box")``.
         Conservative with respect to the *uncapped* sub-range split (a
-        coarse union prunes no more than its fine bins; the
-        ``max_subranges`` cap can re-admit gap segments the estimate
-        dropped, so heavily fragmented extents may dispatch slightly more
-        than priced) and exactly equal to the temporal count when nothing
-        is spatially pruned — this is the pricing signal the
-        SETSPLIT/GREEDYSETSPLIT merge loops consume.
+        coarse union prunes no more than its fine bins) and exactly equal
+        to the temporal count when nothing is spatially pruned.  Passing
+        ``max_subranges`` additionally prices the sub-range cap: surplus
+        fragments merge across gaps and re-admit the gap's segments, so
+        the estimate adds ``internal_dropped × excess/(fragments−1)`` —
+        the expected re-admission if the cap merges a proportional share
+        of the internal gaps — keeping the pricing signal honest on
+        heavily fragmented extents instead of silently under-counting
+        them.  This is the signal the SETSPLIT/GREEDYSETSPLIT merge loops
+        consume.
         """
         qt0 = np.asarray(qt0, np.float64)
         qt1 = np.asarray(qt1, np.float64)
@@ -394,6 +564,27 @@ class TemporalBinIndex:
               - np.maximum(first[:, None], cf[None, :]) + 1)
         ov = np.maximum(ov, 0)
         lim = self._limit(float(d), qlo, qhi)
-        gap2 = mbr_gap2(self._coarse_lo[None], self._coarse_hi[None],
-                        qlo[:, None], qhi[:, None])     # (n, k)
-        return (ov * (gap2 <= lim * lim)).sum(axis=1).astype(np.int64)
+        if level == "box":
+            gap2 = mbr_gap2(self._coarse_klo[None], self._coarse_khi[None],
+                            qlo[:, None, None], qhi[:, None, None])  # (n,k,K)
+            keep = (gap2 <= lim * lim).any(axis=2)
+        else:
+            gap2 = mbr_gap2(self._coarse_lo[None], self._coarse_hi[None],
+                            qlo[:, None], qhi[:, None])     # (n, k)
+            keep = gap2 <= lim * lim
+        est = (ov * keep).sum(axis=1).astype(np.int64)
+        if max_subranges is not None:
+            kk = keep & (ov > 0)
+            ncell = kk.shape[1]
+            frag = kk[:, 0].astype(np.int64) + (kk[:, 1:] & ~kk[:, :-1]).sum(axis=1)
+            any_k = kk.any(axis=1)
+            idx = np.arange(ncell)
+            first_k = np.where(any_k, kk.argmax(axis=1), ncell)
+            last_k = np.where(any_k, ncell - 1 - kk[:, ::-1].argmax(axis=1), -1)
+            internal = (~kk) & (idx[None, :] > first_k[:, None]) \
+                & (idx[None, :] < last_k[:, None])
+            dropped = (ov * internal).sum(axis=1).astype(np.int64)
+            excess = np.maximum(frag - int(max_subranges), 0)
+            denom = np.maximum(frag - 1, 1)
+            est = est + (dropped * excess + denom - 1) // denom
+        return est

@@ -46,8 +46,14 @@ from repro.core.segments import SegmentArray
 
 #: Spatial-pruning strategies a planner (and ``ExecutionPolicy.pruning``)
 #: accepts: ``"spatial"`` trims-and-splits candidate ranges against the
-#: per-bin MBR index; ``"none"`` keeps the paper's temporal-only ranges.
-PRUNINGS = ("spatial", "none")
+#: per-bin MBR index; ``"hierarchical"`` refines the same pass with the
+#: K-box-per-bin level (``TemporalBinIndex.build(kboxes=...)``) — batches
+#: are trimmed/split/priced against the per-box MBRs, and the resulting
+#: sub-ranges live in the index's *permuted* segment order (see
+#: ``TemporalBinIndex.perm``; executors dispatch the permuted packed
+#: array and map entry indices back).  ``"none"`` keeps the paper's
+#: temporal-only ranges.
+PRUNINGS = ("spatial", "hierarchical", "none")
 
 #: Result-capacity bucket granularity (slots).  Capacities are rounded up
 #: to ``CAPACITY_GRANULARITY * 2**k`` so retries and differently-sized
@@ -248,7 +254,8 @@ class QueryPlanner:
                  granularity: int = CAPACITY_GRANULARITY,
                  group_size: int | None = None,
                  predict_hits: Callable | None = None,
-                 pruning: str = "spatial"):
+                 pruning: str = "spatial",
+                 max_subranges: int | None = None):
         """``group_size=None`` (the default) derives the dispatch-group size
         from the §8 perf model (:func:`derive_group_size`, optionally fed by
         ``predict_hits``); an explicit ``group_size`` is honored as given.
@@ -258,8 +265,17 @@ class QueryPlanner:
         threshold ``d``: batching merges are priced against the pruned
         workload (``SpatialInteractionCounter``) and each planned batch's
         contiguous candidate range is trimmed and split into the sub-ranges
-        the per-bin MBR index cannot rule out.  Without ``d`` (legacy
-        callers) planning is the paper's temporal-only behavior.
+        the per-bin MBR index cannot rule out.  ``pruning="hierarchical"``
+        runs the same pass at the K-box level (sub-ranges and pricing
+        against the per-box MBRs, in the index's permuted segment order).
+        Without ``d`` (legacy callers) planning is the paper's
+        temporal-only behavior.
+
+        ``max_subranges`` caps how many sub-ranges one batch may split
+        into (``None`` → ``TemporalBinIndex.DEFAULT_MAX_SUBRANGES``); the
+        cap is priced into the batching merges via the coarse grid, so a
+        tight cap that would force merges across a huge gap is visible to
+        the planner, not a silent conservativeness loss at dispatch.
         """
         if algorithm not in ALGORITHMS:
             raise ValueError(f"unknown batching algorithm {algorithm!r}; "
@@ -275,6 +291,7 @@ class QueryPlanner:
         self.group_size = group_size
         self.predict_hits = predict_hits
         self.pruning = pruning
+        self.max_subranges = max_subranges
 
     # ------------------------------------------------------------------
     def plan(self, sorted_queries: SegmentArray,
@@ -284,9 +301,11 @@ class QueryPlanner:
         ``d`` is the distance threshold — required for spatial pruning
         (``None`` plans temporal-only regardless of the pruning knob)."""
         counter = None
-        if self.pruning == "spatial" and d is not None:
-            counter = SpatialInteractionCounter(self.index, sorted_queries,
-                                                float(d))
+        if self.pruning in ("spatial", "hierarchical") and d is not None:
+            counter = SpatialInteractionCounter(
+                self.index, sorted_queries, float(d),
+                level="box" if self.pruning == "hierarchical" else "bin",
+                max_subranges=self.max_subranges)
         try:
             bp = ALGORITHMS[self.algorithm](self.index, sorted_queries,
                                             counter=counter, **self.params)
@@ -304,13 +323,17 @@ class QueryPlanner:
                        counter: SpatialInteractionCounter
                        ) -> tuple[BatchPlan, list[int], int]:
         """Trim and split every batch's candidate range against the per-bin
-        MBR index: each batch becomes ≥ 1 sibling batches over the
-        sub-ranges the MBR test cannot rule out, with *exact* per-sub-range
-        ``num_ints`` (the dispatched workload — the executor's
-        ``total_interactions`` matches by construction).  A fully pruned
+        (or, for ``pruning="hierarchical"``, per-box) MBR index: each batch
+        becomes ≥ 1 sibling batches over the sub-ranges the MBR test cannot
+        rule out, with *exact* per-sub-range ``num_ints`` (the dispatched
+        workload — the executor's ``total_interactions`` matches by
+        construction).  Box-level sub-ranges are positions in the index's
+        permuted segment order (bin-granular ranges are identical in both
+        orders, so the mixed bookkeeping stays consistent).  A fully pruned
         batch stays as one empty batch so query coverage bookkeeping
         (scheduler group counting, broker slices) is unchanged."""
         qlo, qhi = counter.qlo, counter.qhi
+        level = "box" if self.pruning == "hierarchical" else "bin"
         out: list[QueryBatch] = []
         runs: list[int] = []
         pruned = 0
@@ -323,8 +346,11 @@ class QueryPlanner:
                 continue
             lo = qlo[b.q_first:b.q_last + 1].min(axis=0)
             hi = qhi[b.q_first:b.q_last + 1].max(axis=0)
+            sub_kw = {} if self.max_subranges is None else {
+                "max_subranges": self.max_subranges}
             subs = self.index.candidate_subranges(b.qt0, b.qt1, lo, hi,
-                                                  counter.d)
+                                                  counter.d, level=level,
+                                                  **sub_kw)
             if not subs:
                 out.append(QueryBatch(b.q_first, b.q_last, b.qt0, b.qt1,
                                       0, -1, 0))

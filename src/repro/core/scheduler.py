@@ -182,9 +182,15 @@ class DeadlineScheduler:
                 done, _ = wait(list(futures), timeout=0.01,
                                return_when=FIRST_COMPLETED)
                 now = time.perf_counter()
-                for fut in done:
+                # Deliberate syncs, not pipeline leaks: ``done`` holds only
+                # *completed* worker futures (the group's device work and
+                # marshalling already finished inside engine.execute), so
+                # collecting them here is the scheduler's sanctioned
+                # group-granular sync — the analogue of the executors'
+                # phase B, needed for deadline tracking and re-issue.
+                for fut in done:                     # lint: sync-point
                     futures.pop(fut)
-                    g, attempt, rs = fut.result()
+                    g, attempt, rs = fut.result()    # lint: sync-point
                     with self._lock:
                         if g in results:
                             stats.duplicates_dropped += 1

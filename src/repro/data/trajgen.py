@@ -255,6 +255,84 @@ def sensor_queries(num_sensors: int, d: float, *, seed: int = 0,
     )
 
 
+# ----------------------------------------------------------------------
+# TWINSWARM — the multi-modal occupancy workload (PR 7, beyond-paper)
+# ----------------------------------------------------------------------
+#: center of the far swarm; ~550 from the origin, kept well under the
+#: coordinate magnitude where float32 interval round-off starts flipping
+#: borderline pairs between backends (see the _DRIFT_SPAN note above).
+_TWIN_FAR_CENTER = np.array([520.0, 180.0, 0.0])
+_TWIN_RADIUS = 60.0       # half-width of each swarm's footprint
+_TWIN_NEAR_FRAC = 0.25    # fraction of trajectories in the near swarm
+_TWIN_T_END = 400.0
+
+
+def twinswarm(num_traj: int = 2500, num_segments: int = 400, *,
+              seed: int = 6, scale: float = 1.0) -> TrajectoryDataset:
+    """Two *stationary* jittering swarms sharing one temporal extent.
+
+    ~25% of the trajectories hover around the origin (the "near" swarm,
+    where scenario C3's sensors sit); the rest hover around a center ~550
+    away.  Because both swarms are active in every temporal bin, each
+    bin's *union* MBR always contains the near swarm — any sensor inside
+    it sees a spatial gap of zero, so PR 5's one-box-per-bin pruning
+    prunes ~0% here by construction.  The occupied space is *bimodal*,
+    though: a K ≥ 2 per-bin spatial split separates the swarms into
+    disjoint boxes, making the far swarm's ~75% of segments prunable at
+    the box level (planner sub-ranges) and the tile level (live-tile
+    lists).  This is the workload PR 7's hierarchical index exists for —
+    one box per bin summarizes multi-modal occupancy arbitrarily badly.
+    """
+    rng = np.random.default_rng(seed)
+    nt = max(int(num_traj * scale), 8)
+    n_near = max(int(round(nt * _TWIN_NEAR_FRAC)), 2)
+    steps = num_segments + 1
+    t = np.linspace(0.0, _TWIN_T_END, steps, dtype=np.float64)
+    pts, tms = [], []
+    for k in range(nt):
+        center = np.zeros(3) if k < n_near else _TWIN_FAR_CENTER
+        offset = rng.uniform(-_TWIN_RADIUS, _TWIN_RADIUS, 3)
+        jitter = np.cumsum(rng.normal(0.0, 0.3, (steps, 3)), axis=0)
+        pts.append(center + offset + jitter)
+        tms.append(t.copy())
+    return _to_dataset("twinswarm", pts, tms)
+
+
+def twin_sensor_queries(num_sensors: int, d: float, *, seed: int = 0,
+                        num_clusters: int = 8) -> SegmentArray:
+    """Static full-extent sensors inside TWINSWARM's near-swarm footprint
+    (scenario C3).
+
+    Every sensor lies within the near swarm's MBR, so the per-bin *union*
+    box (which always contains the near swarm — see :func:`twinswarm`)
+    overlaps every sensor and bin-level pruning removes nothing.  All the
+    prunable work is the far swarm, and only the K-box level can see it.
+    Sensors sit in ``num_clusters`` clusters so consecutive batches stay
+    spatially coherent, same as C1.
+    """
+    rng = np.random.default_rng(seed + 3000)
+    num_sensors = max(int(num_sensors), num_clusters)
+    per = [num_sensors // num_clusters] * num_clusters
+    for i in range(num_sensors - sum(per)):
+        per[i] += 1
+    centers = rng.uniform(-0.5 * _TWIN_RADIUS, 0.5 * _TWIN_RADIUS,
+                          (num_clusters, 3))
+    positions = []
+    for ci, n in enumerate(per):
+        spread = rng.uniform(-3.0 * d, 3.0 * d, (n, 3))
+        positions.append(centers[ci][None] + spread)
+    pos = np.concatenate(positions, axis=0).astype(np.float32)
+    n = pos.shape[0]
+    zeros = np.zeros(n, np.float32)
+    return SegmentArray(
+        xs=pos[:, 0], ys=pos[:, 1], zs=pos[:, 2],
+        xe=pos[:, 0], ye=pos[:, 1], ze=pos[:, 2],
+        ts=zeros, te=np.full(n, _TWIN_T_END, np.float32),
+        seg_id=np.arange(n, dtype=np.int32),
+        traj_id=np.arange(n, dtype=np.int32),
+    )
+
+
 DATASETS = {
     "galaxy": galaxy,
     "randwalk-uniform": randwalk_uniform,
@@ -262,6 +340,7 @@ DATASETS = {
     "randwalk-normal5": randwalk_normal5,
     "randwalk-exp": randwalk_exp,
     "drift": drift,
+    "twinswarm": twinswarm,
 }
 
 
@@ -292,6 +371,12 @@ SCENARIOS: dict[str, Scenario] = {
     # sensor_queries).  The selectivity scenario PR 5's pruning
     # benchmarks sweep.
     "C1": Scenario("C1", "drift", 5.0, 128),
+    # beyond-paper: the multi-modal occupancy scenario — TWINSWARM
+    # bimodal database, clustered static sensors inside the near swarm
+    # (see twin_sensor_queries).  One-box-per-bin pruning removes ~0%
+    # here by construction; the K-box hierarchical index (PR 7) is what
+    # makes the far swarm's ~75% of segments prunable.
+    "C3": Scenario("C3", "twinswarm", 8.0, 128),
 }
 
 
@@ -301,16 +386,17 @@ def make_scenario(name: str, *, scale: float = 1.0, seed: int = 0
 
     Queries are the segments of ``num_query_traj`` randomly chosen
     trajectories of the dataset (paper §7.2: "100 trajectories are
-    processed"), scaled alongside the dataset — except C1, whose queries
-    are clustered static sensors (:func:`sensor_queries`; sensor count
-    does not scale down below 32 so batching structure survives small
-    scales).
+    processed"), scaled alongside the dataset — except C1/C3, whose
+    queries are clustered static sensors (:func:`sensor_queries` /
+    :func:`twin_sensor_queries`; sensor count does not scale down below
+    32 so batching structure survives small scales).
     """
     sc = SCENARIOS[name]
     ds = DATASETS[sc.dataset](scale=scale)
-    if sc.name == "C1":
+    if sc.name in ("C1", "C3"):
         nq = max(int(sc.num_query_traj * scale), 32)
-        queries = sensor_queries(nq, sc.d, seed=seed)
+        make_sensors = sensor_queries if sc.name == "C1" else twin_sensor_queries
+        queries = make_sensors(nq, sc.d, seed=seed)
         return ds.segments.sort_by_tstart(), queries, sc.d
     n_traj = len(ds.traj_slices)
     nq = max(min(int(sc.num_query_traj * scale), n_traj), 1)

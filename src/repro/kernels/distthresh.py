@@ -58,6 +58,17 @@ a tile whose boxes cannot come within ``d`` skips the full
 resident ``pruned`` tile counter instead (the unwritten result buffers
 and running hit counter simply carry over to the next grid step).
 
+:func:`distthresh_compact_live_pallas` (PR 7) goes one step further and
+removes even that per-tile test from the device loop: the caller computes
+the compacted **live-tile list** — the (entry-tile, query-tile) pairs
+whose MBRs survive the same inflated-threshold test, in grid order — and
+the kernel iterates a 1-D grid over *list slots*, with the tile
+coordinates scalar-prefetched (``pltpu.PrefetchScalarGridSpec``) so the
+BlockSpec index maps fetch exactly the live tiles' blocks.  Dead tiles
+cost nothing; dead *slots* (list padding past ``n_live``) cost one scalar
+compare.  Output order is identical to the full-grid kernels because the
+list is sorted in grid order.
+
 The interval math matches ``ref.interaction_tile`` bit-for-bit in float32;
 tests sweep shapes/dtypes and assert allclose against the oracle, and the
 fused kernel's compacted rows are asserted equal to the dense kernel's
@@ -70,6 +81,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 # Default tile: 256×256 f32 tiles keep the ~14 live (C, Q) temporaries well
 # under 16 MiB VMEM: 14 × 256 × 256 × 4 B ≈ 3.7 MiB.
@@ -263,6 +275,82 @@ def _tile_mbr_live(embr_ref, qmbr_ref, dprune_ref):
     return gap2 <= dp * dp
 
 
+def _chunk_tile_body(i, j, d_ref, entries_ref, queries_t_ref,
+                     e_idx_ref, q_idx_ref, enter_ref, exit_ref, count_ref,
+                     *, cand_blk: int, qry_blk: int, capacity: int,
+                     valid_c: int, valid_q: int):
+    """Evaluate tile (i, j) and chunk-append its hits (shared by the
+    full-grid and live-tile kernels; ``i``/``j`` may be traced scalars
+    read from a scalar-prefetch ref)."""
+    tile = cand_blk * qry_blk
+    e_blk = entries_ref[...]                 # (cand_blk, 8), VMEM
+    q_blk = queries_t_ref[...]               # (8, qry_blk), VMEM
+    d = d_ref[0, 0]
+    # Only the hit mask is live here — the dense (C, Q) interval tiles
+    # are dead code and never materialize; intervals are recomputed per
+    # hit in the append loop below (≈ 70 FLOPs each, on ≤ tile_hits
+    # pairs).
+    _, _, hit = _tile_intervals(e_blk, q_blk, d)
+
+    # Mask padding rows/cols (broadcast vectors, no full index tiles)
+    # so pad×pad pairs (identical zero segments at the pad time) never
+    # append.
+    row_ok = (jax.lax.broadcasted_iota(jnp.int32, (cand_blk, 1), 0)
+              + i * cand_blk) < valid_c
+    col_ok = (jax.lax.broadcasted_iota(jnp.int32, (1, qry_blk), 1)
+              + j * qry_blk) < valid_q
+    hit2 = hit & row_ok & col_ok
+
+    # Masked prefix sum over the row-major flattened tile: cum[f] is
+    # the number of hits at flat index <= f, so the k-th hit
+    # (k = 1..tile_hits) sits at the first f with cum[f] == k — a
+    # rank-selection gather moves the hits to the tile prefix in
+    # row-major order without any scatter: slot s reads flat index
+    # searchsorted(cum, s + 1).
+    cum = jnp.cumsum(hit2.astype(jnp.int32).reshape(tile))
+    tile_hits = cum[-1]
+    offset = count_ref[0, 0]
+
+    # Append in APPEND_BLK-slot chunks, looping only
+    # ceil(tile_hits / blk) times: the work is O(hits · log tile), not
+    # O(tile) — in sparse workloads (the common case: α is small, paper
+    # §8.1.2) a tile pays the hit-mask math, one cumsum and at most one
+    # small chunk; zero-hit tiles skip the loop entirely.
+    blk = min(tile, APPEND_BLK)
+    zero = jnp.zeros((), enter_ref.dtype)
+
+    def _append_chunk(k, carry):
+        base = k * blk
+        slot = base + jax.lax.broadcasted_iota(jnp.int32, (blk, 1),
+                                               0)[:, 0]
+        src = jnp.minimum(
+            jnp.searchsorted(cum, slot + 1, method="scan_unrolled"),
+            tile - 1)
+        valid = slot < tile_hits             # slots past the hit count
+        dst = offset + base
+        # local/global (entry row, query col) indices from the flat src
+        e_loc = src // qry_blk
+        q_loc = src % qry_blk
+        e_idx = jnp.where(valid, i * cand_blk + e_loc, -1)
+        q_idx = jnp.where(valid, j * qry_blk + q_loc, -1)
+        # per-pair interval recompute on small (blk, 8)/(8, blk)
+        # gathers — keeps the dense interval tiles out of the live set
+        t_enter, t_exit, _ = _pair_intervals(e_blk[e_loc, :],
+                                             q_blk[:, q_loc], d)
+
+        @pl.when(dst <= capacity)            # overflow: drop, keep count
+        def _():
+            e_idx_ref[pl.ds(dst, blk)] = e_idx
+            q_idx_ref[pl.ds(dst, blk)] = q_idx
+            enter_ref[pl.ds(dst, blk)] = jnp.where(valid, t_enter, zero)
+            exit_ref[pl.ds(dst, blk)] = jnp.where(valid, t_exit, zero)
+
+        return carry
+
+    jax.lax.fori_loop(0, (tile_hits + blk - 1) // blk, _append_chunk, 0)
+    count_ref[0, 0] = offset + tile_hits
+
+
 def _distthresh_compact_kernel(d_ref, entries_ref, queries_t_ref,
                                e_idx_ref, q_idx_ref, enter_ref, exit_ref,
                                count_ref, pruned_ref, *, cand_blk: int,
@@ -291,7 +379,6 @@ def _distthresh_compact_kernel(d_ref, entries_ref, queries_t_ref,
     """
     i = pl.program_id(0)
     j = pl.program_id(1)
-    tile = cand_blk * qry_blk
 
     @pl.when((i == 0) & (j == 0))
     def _init():
@@ -303,72 +390,11 @@ def _distthresh_compact_kernel(d_ref, entries_ref, queries_t_ref,
         pruned_ref[0, 0] = 0
 
     def _body():
-        e_blk = entries_ref[...]                 # (cand_blk, 8), VMEM
-        q_blk = queries_t_ref[...]               # (8, qry_blk), VMEM
-        d = d_ref[0, 0]
-        # Only the hit mask is live here — the dense (C, Q) interval tiles
-        # are dead code and never materialize; intervals are recomputed per
-        # hit in the append loop below (≈ 70 FLOPs each, on ≤ tile_hits
-        # pairs).
-        _, _, hit = _tile_intervals(e_blk, q_blk, d)
-
-        # Mask padding rows/cols (broadcast vectors, no full index tiles)
-        # so pad×pad pairs (identical zero segments at the pad time) never
-        # append.
-        row_ok = (jax.lax.broadcasted_iota(jnp.int32, (cand_blk, 1), 0)
-                  + i * cand_blk) < valid_c
-        col_ok = (jax.lax.broadcasted_iota(jnp.int32, (1, qry_blk), 1)
-                  + j * qry_blk) < valid_q
-        hit2 = hit & row_ok & col_ok
-
-        # Masked prefix sum over the row-major flattened tile: cum[f] is
-        # the number of hits at flat index <= f, so the k-th hit
-        # (k = 1..tile_hits) sits at the first f with cum[f] == k — a
-        # rank-selection gather moves the hits to the tile prefix in
-        # row-major order without any scatter: slot s reads flat index
-        # searchsorted(cum, s + 1).
-        cum = jnp.cumsum(hit2.astype(jnp.int32).reshape(tile))
-        tile_hits = cum[-1]
-        offset = count_ref[0, 0]
-
-        # Append in APPEND_BLK-slot chunks, looping only
-        # ceil(tile_hits / blk) times: the work is O(hits · log tile), not
-        # O(tile) — in sparse workloads (the common case: α is small, paper
-        # §8.1.2) a tile pays the hit-mask math, one cumsum and at most one
-        # small chunk; zero-hit tiles skip the loop entirely.
-        blk = min(tile, APPEND_BLK)
-        zero = jnp.zeros((), enter_ref.dtype)
-
-        def _append_chunk(k, carry):
-            base = k * blk
-            slot = base + jax.lax.broadcasted_iota(jnp.int32, (blk, 1),
-                                                   0)[:, 0]
-            src = jnp.minimum(
-                jnp.searchsorted(cum, slot + 1, method="scan_unrolled"),
-                tile - 1)
-            valid = slot < tile_hits             # slots past the hit count
-            dst = offset + base
-            # local/global (entry row, query col) indices from the flat src
-            e_loc = src // qry_blk
-            q_loc = src % qry_blk
-            e_idx = jnp.where(valid, i * cand_blk + e_loc, -1)
-            q_idx = jnp.where(valid, j * qry_blk + q_loc, -1)
-            # per-pair interval recompute on small (blk, 8)/(8, blk)
-            # gathers — keeps the dense interval tiles out of the live set
-            t_enter, t_exit, _ = _pair_intervals(e_blk[e_loc, :],
-                                                 q_blk[:, q_loc], d)
-
-            @pl.when(dst <= capacity)            # overflow: drop, keep count
-            def _():
-                e_idx_ref[pl.ds(dst, blk)] = e_idx
-                q_idx_ref[pl.ds(dst, blk)] = q_idx
-                enter_ref[pl.ds(dst, blk)] = jnp.where(valid, t_enter, zero)
-                exit_ref[pl.ds(dst, blk)] = jnp.where(valid, t_exit, zero)
-
-            return carry
-
-        jax.lax.fori_loop(0, (tile_hits + blk - 1) // blk, _append_chunk, 0)
-        count_ref[0, 0] = offset + tile_hits
+        _chunk_tile_body(i, j, d_ref, entries_ref, queries_t_ref,
+                         e_idx_ref, q_idx_ref, enter_ref, exit_ref,
+                         count_ref, cand_blk=cand_blk, qry_blk=qry_blk,
+                         capacity=capacity, valid_c=valid_c,
+                         valid_q=valid_q)
 
     if prune_refs is None:
         _body()
@@ -381,6 +407,70 @@ def _distthresh_compact_kernel(d_ref, entries_ref, queries_t_ref,
         pruned_ref[0, 0] = pruned_ref[0, 0] + 1
 
     pl.when(live)(_body)
+
+
+def _rowloop_tile_body(i, j, d_ref, entries_ref, queries_t_ref,
+                       e_idx_ref, q_idx_ref, enter_ref, exit_ref, count_ref,
+                       *, cand_blk: int, qry_blk: int, capacity: int,
+                       valid_c: int, valid_q: int):
+    """Evaluate tile (i, j) and row-append its hits (shared by the
+    full-grid and live-tile kernels)."""
+    e_blk = entries_ref[...]
+    q_blk = queries_t_ref[...]
+    d = d_ref[0, 0]
+    t_enter, t_exit, hit = _tile_intervals(e_blk, q_blk, d)
+
+    row_ok = (jax.lax.broadcasted_iota(jnp.int32, (cand_blk, 1), 0)
+              + i * cand_blk) < valid_c
+    col_ok = (jax.lax.broadcasted_iota(jnp.int32, (1, qry_blk), 1)
+              + j * qry_blk) < valid_q
+    hit2 = hit & row_ok & col_ok
+
+    hit_i = hit2.astype(jnp.int32)
+    row_cum = jnp.cumsum(hit_i, axis=1)      # (cand_blk, qry_blk)
+    offset = count_ref[0, 0]
+
+    # Per-slot and per-column index planes shared by every row
+    # iteration.
+    slot_plane = jax.lax.broadcasted_iota(jnp.int32,
+                                          (qry_blk, qry_blk), 0)
+    col_plane = jax.lax.broadcasted_iota(jnp.int32,
+                                         (qry_blk, qry_blk), 1)
+    slot_vec = jax.lax.broadcasted_iota(jnp.int32, (qry_blk, 1), 0)[:, 0]
+    zero = jnp.zeros((), enter_ref.dtype)
+
+    def _row_body(r, dst):
+        rh = jax.lax.dynamic_slice(hit_i, (r, 0), (1, qry_blk))
+        rcum = jax.lax.dynamic_slice(row_cum, (r, 0), (1, qry_blk))
+        rent = jax.lax.dynamic_slice(t_enter, (r, 0), (1, qry_blk))
+        rext = jax.lax.dynamic_slice(t_exit, (r, 0), (1, qry_blk))
+        n_r = rcum[0, qry_blk - 1]
+        # sel[s, c] = 1 iff column c is the row's (s+1)-th hit:
+        # compaction becomes a masked reduction over columns — no
+        # gathers anywhere.
+        sel = (rcum == slot_plane + 1) & (rh > 0)
+        sel_f = sel.astype(rent.dtype)
+        comp_col = jnp.sum(jnp.where(sel, col_plane, 0), axis=1)
+        comp_ent = jnp.sum(sel_f * rent, axis=1)
+        comp_ext = jnp.sum(sel_f * rext, axis=1)
+        valid = slot_vec < n_r
+        e_val = jnp.where(valid, i * cand_blk + r, -1).astype(jnp.int32)
+        q_val = jnp.where(valid, j * qry_blk + comp_col,
+                          -1).astype(jnp.int32)
+
+        @pl.when((n_r > 0) & (dst <= capacity))  # overflow: drop,
+        def _():                                  # keep count
+            e_idx_ref[pl.ds(dst, qry_blk)] = e_val
+            q_idx_ref[pl.ds(dst, qry_blk)] = q_val
+            enter_ref[pl.ds(dst, qry_blk)] = jnp.where(valid, comp_ent,
+                                                       zero)
+            exit_ref[pl.ds(dst, qry_blk)] = jnp.where(valid, comp_ext,
+                                                      zero)
+
+        return dst + n_r
+
+    end = jax.lax.fori_loop(0, cand_blk, _row_body, offset)
+    count_ref[0, 0] = end
 
 
 def _distthresh_compact_rowloop_kernel(d_ref, entries_ref, queries_t_ref,
@@ -417,62 +507,11 @@ def _distthresh_compact_rowloop_kernel(d_ref, entries_ref, queries_t_ref,
         pruned_ref[0, 0] = 0
 
     def _body():
-        e_blk = entries_ref[...]
-        q_blk = queries_t_ref[...]
-        d = d_ref[0, 0]
-        t_enter, t_exit, hit = _tile_intervals(e_blk, q_blk, d)
-
-        row_ok = (jax.lax.broadcasted_iota(jnp.int32, (cand_blk, 1), 0)
-                  + i * cand_blk) < valid_c
-        col_ok = (jax.lax.broadcasted_iota(jnp.int32, (1, qry_blk), 1)
-                  + j * qry_blk) < valid_q
-        hit2 = hit & row_ok & col_ok
-
-        hit_i = hit2.astype(jnp.int32)
-        row_cum = jnp.cumsum(hit_i, axis=1)      # (cand_blk, qry_blk)
-        offset = count_ref[0, 0]
-
-        # Per-slot and per-column index planes shared by every row
-        # iteration.
-        slot_plane = jax.lax.broadcasted_iota(jnp.int32,
-                                              (qry_blk, qry_blk), 0)
-        col_plane = jax.lax.broadcasted_iota(jnp.int32,
-                                             (qry_blk, qry_blk), 1)
-        slot_vec = jax.lax.broadcasted_iota(jnp.int32, (qry_blk, 1), 0)[:, 0]
-        zero = jnp.zeros((), enter_ref.dtype)
-
-        def _row_body(r, dst):
-            rh = jax.lax.dynamic_slice(hit_i, (r, 0), (1, qry_blk))
-            rcum = jax.lax.dynamic_slice(row_cum, (r, 0), (1, qry_blk))
-            rent = jax.lax.dynamic_slice(t_enter, (r, 0), (1, qry_blk))
-            rext = jax.lax.dynamic_slice(t_exit, (r, 0), (1, qry_blk))
-            n_r = rcum[0, qry_blk - 1]
-            # sel[s, c] = 1 iff column c is the row's (s+1)-th hit:
-            # compaction becomes a masked reduction over columns — no
-            # gathers anywhere.
-            sel = (rcum == slot_plane + 1) & (rh > 0)
-            sel_f = sel.astype(rent.dtype)
-            comp_col = jnp.sum(jnp.where(sel, col_plane, 0), axis=1)
-            comp_ent = jnp.sum(sel_f * rent, axis=1)
-            comp_ext = jnp.sum(sel_f * rext, axis=1)
-            valid = slot_vec < n_r
-            e_val = jnp.where(valid, i * cand_blk + r, -1).astype(jnp.int32)
-            q_val = jnp.where(valid, j * qry_blk + comp_col,
-                              -1).astype(jnp.int32)
-
-            @pl.when((n_r > 0) & (dst <= capacity))  # overflow: drop,
-            def _():                                  # keep count
-                e_idx_ref[pl.ds(dst, qry_blk)] = e_val
-                q_idx_ref[pl.ds(dst, qry_blk)] = q_val
-                enter_ref[pl.ds(dst, qry_blk)] = jnp.where(valid, comp_ent,
-                                                           zero)
-                exit_ref[pl.ds(dst, qry_blk)] = jnp.where(valid, comp_ext,
-                                                          zero)
-
-            return dst + n_r
-
-        end = jax.lax.fori_loop(0, cand_blk, _row_body, offset)
-        count_ref[0, 0] = end
+        _rowloop_tile_body(i, j, d_ref, entries_ref, queries_t_ref,
+                           e_idx_ref, q_idx_ref, enter_ref, exit_ref,
+                           count_ref, cand_blk=cand_blk, qry_blk=qry_blk,
+                           capacity=capacity, valid_c=valid_c,
+                           valid_q=valid_q)
 
     if prune_refs is None:
         _body()
@@ -610,3 +649,142 @@ def distthresh_compact_pallas(entries: jnp.ndarray, queries_t: jnp.ndarray, d,
     return (e_idx[:capacity], q_idx[:capacity],
             t_enter[:capacity], t_exit[:capacity], count[0, 0],
             pruned[0, 0])
+
+
+# ----------------------------------------------------------------------
+# Live-tile dispatch (PR 7): ragged grid over a precomputed tile list
+# ----------------------------------------------------------------------
+def _distthresh_compact_live_kernel(ti_ref, tj_ref, nlive_ref, d_ref,
+                                    entries_ref, queries_t_ref,
+                                    e_idx_ref, q_idx_ref, enter_ref,
+                                    exit_ref, count_ref, *, body,
+                                    cand_blk: int, qry_blk: int,
+                                    capacity: int, valid_c: int,
+                                    valid_q: int):
+    """One live-list slot: evaluate tile ``(ti[s], tj[s])`` if the slot is
+    live, else fall through (one scalar compare).
+
+    The first three refs are the scalar-prefetched live-tile list: the
+    entry-tile ids, query-tile ids, and the live count (list entries past
+    it are padding that points at tile (0, 0) so the prefetch stays in
+    bounds).  The same scalar refs drive the entry/query BlockSpec index
+    maps, so the pipeline fetches exactly the live tiles' blocks — a dead
+    tile never leaves HBM.  Because the list is sorted in grid order
+    (query tiles innermost) and the append bodies are shared with the
+    full-grid kernels, the output rows are byte-identical to theirs.
+    """
+    s = pl.program_id(0)
+
+    @pl.when(s == 0)
+    def _init():
+        e_idx_ref[...] = jnp.full(e_idx_ref.shape, -1, jnp.int32)
+        q_idx_ref[...] = jnp.full(q_idx_ref.shape, -1, jnp.int32)
+        enter_ref[...] = jnp.zeros(enter_ref.shape, enter_ref.dtype)
+        exit_ref[...] = jnp.zeros(exit_ref.shape, exit_ref.dtype)
+        count_ref[0, 0] = 0
+
+    @pl.when(s < nlive_ref[0])
+    def _run():
+        body(ti_ref[s], tj_ref[s], d_ref, entries_ref, queries_t_ref,
+             e_idx_ref, q_idx_ref, enter_ref, exit_ref, count_ref,
+             cand_blk=cand_blk, qry_blk=qry_blk, capacity=capacity,
+             valid_c=valid_c, valid_q=valid_q)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "capacity", "cand_blk", "qry_blk", "valid_c", "valid_q", "interpret",
+    "append"))
+def distthresh_compact_live_pallas(entries: jnp.ndarray,
+                                   queries_t: jnp.ndarray, d,
+                                   tile_i: jnp.ndarray, tile_j: jnp.ndarray,
+                                   n_live: jnp.ndarray, *, capacity: int,
+                                   cand_blk: int = DEFAULT_CAND_BLK,
+                                   qry_blk: int = DEFAULT_QRY_BLK,
+                                   valid_c: int | None = None,
+                                   valid_q: int | None = None,
+                                   interpret: bool = True,
+                                   append: str = "chunk"):
+    """Fused compaction kernel driven by a precomputed live-tile list.
+
+    Where :func:`distthresh_compact_pallas` walks the full
+    ``(C/cand_blk, Q/qry_blk)`` grid and pays a per-tile box test, this
+    variant iterates a **1-D grid over list slots**: the caller has
+    already run the inflated-threshold box test (host-side via
+    ``ops._host_live_tiles``, or in-graph via ``ops._jit_live_tiles``
+    when tracing forbids host work) and hands over the surviving
+    (entry-tile, query-tile) pairs in grid order.  The tile ids are
+    scalar-prefetched (``pltpu.PrefetchScalarGridSpec``) so the entry and
+    query BlockSpec index maps read them directly — the pipeline fetches
+    exactly the live tiles' blocks and a dead tile costs *nothing*; a dead
+    *slot* (padding past ``n_live``) costs one scalar compare.
+
+    Args:
+      entries / queries_t / d: as in :func:`distthresh_compact_pallas`.
+      tile_i / tile_j: (S,) int32 entry-/query-tile ids of the live tiles,
+        sorted in full-grid order (query tiles innermost); slots past
+        ``n_live`` must point at a valid tile (0 is fine) — they are
+        skipped but still prefetched.
+      n_live: (1,) int32 count of live slots (``<= S``).  Traced, so one
+        compiled kernel serves every list that fits the same padded ``S``.
+      capacity / valid_c / valid_q / append: as in
+        :func:`distthresh_compact_pallas`.
+
+    Returns ``(entry_idx, query_idx, t_enter, t_exit, count)``; no
+    ``pruned`` counter — the caller already knows ``num_tiles - n_live``.
+    Output order is byte-identical to the full-grid kernels' (the live
+    list is in grid order and pruned tiles contribute no rows).
+    """
+    if append not in APPEND_MODES:
+        raise ValueError(f"unknown append mode {append!r}; "
+                         f"choose from {APPEND_MODES}")
+    cc, eight = entries.shape
+    assert eight == 8, entries.shape
+    eight2, qq = queries_t.shape
+    assert eight2 == 8, queries_t.shape
+    assert cc % cand_blk == 0 and qq % qry_blk == 0, (cc, qq, cand_blk, qry_blk)
+    (n_slots,) = tile_i.shape
+    assert tile_j.shape == (n_slots,) and n_slots >= 1, (tile_i.shape,
+                                                        tile_j.shape)
+    valid_c = cc if valid_c is None else valid_c
+    valid_q = qq if valid_q is None else valid_q
+    dtype = entries.dtype
+    d_arr = jnp.asarray(d, dtype).reshape(1, 1)
+
+    tile = cand_blk * qry_blk
+    window = qry_blk if append == "rowloop" else min(tile, APPEND_BLK)
+    cap_pad = capacity + window
+    flat_spec = pl.BlockSpec((cap_pad,), lambda s, ti, tj, nl: (0,))
+    scalar_out = pl.BlockSpec((1, 1), lambda s, ti, tj, nl: (0, 0))
+    out_shapes = (
+        jax.ShapeDtypeStruct((cap_pad,), jnp.int32),
+        jax.ShapeDtypeStruct((cap_pad,), jnp.int32),
+        jax.ShapeDtypeStruct((cap_pad,), dtype),
+        jax.ShapeDtypeStruct((cap_pad,), dtype),
+        jax.ShapeDtypeStruct((1, 1), jnp.int32),
+    )
+    body = _rowloop_tile_body if append == "rowloop" else _chunk_tile_body
+    kernel = functools.partial(
+        _distthresh_compact_live_kernel, body=body, cand_blk=cand_blk,
+        qry_blk=qry_blk, capacity=capacity, valid_c=valid_c,
+        valid_q=valid_q)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,          # tile_i, tile_j, n_live
+        grid=(n_slots,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda s, ti, tj, nl: (0, 0)),  # d
+            # The scalar-prefetched list drives the block fetches: slot s
+            # pulls entry block ti[s] and query block tj[s].
+            pl.BlockSpec((cand_blk, 8), lambda s, ti, tj, nl: (ti[s], 0)),
+            pl.BlockSpec((8, qry_blk), lambda s, ti, tj, nl: (0, tj[s])),
+        ],
+        out_specs=(flat_spec, flat_spec, flat_spec, flat_spec, scalar_out),
+    )
+    e_idx, q_idx, t_enter, t_exit, count = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(tile_i.astype(jnp.int32), tile_j.astype(jnp.int32),
+      n_live.astype(jnp.int32), d_arr, entries, queries_t)
+    return (e_idx[:capacity], q_idx[:capacity],
+            t_enter[:capacity], t_exit[:capacity], count[0, 0])

@@ -66,12 +66,20 @@ from repro.kernels.distthresh import (DEFAULT_CAND_BLK, DEFAULT_QRY_BLK,
 #: compaction strategies accepted by :func:`query_block`.
 COMPACTIONS = ("fused", "fused_rowloop", "dense")
 
-#: pruning strategies accepted by :func:`query_block` (PR 5): ``"spatial"``
-#: arms the fused kernels' tile-level MBR early-out; ``"none"`` disables
-#: it.  The dense two-phase path (and the jnp oracle) has no tile loop to
-#: skip, so pruning is a documented no-op there — it stays the validated
-#: unpruned baseline.
-PRUNINGS = ("spatial", "none")
+#: pruning strategies accepted by :func:`query_block`: ``"spatial"``
+#: (PR 5) arms the fused kernels' tile-level MBR early-out — a box test
+#: per grid tile inside the kernel; ``"hierarchical"`` (PR 7) moves that
+#: test *out* of the device loop entirely: the box test runs once per
+#: dispatch (host-side numpy, or in-graph under an outer trace) and the
+#: fused kernel iterates only the compacted **live-tile list** via a
+#: ragged scalar-prefetched grid (``distthresh_compact_live_pallas``) —
+#: dead tiles cost nothing instead of a per-tile predicate.  ``"none"``
+#: disables tile-level pruning.  The dense two-phase path (and the jnp
+#: oracle) has no tile loop to skip, so pruning is a documented no-op
+#: there — it stays the validated unpruned baseline.  None of the modes
+#: ever changes the result set (the box test uses the conservatively
+#: inflated ``prune_limit`` threshold), only the work.
+PRUNINGS = ("spatial", "hierarchical", "none")
 
 #: One-time fused→rowloop fallback state: ``tripped`` flips when the fused
 #: (gather) compaction path fails to lower/compile; every later
@@ -212,6 +220,75 @@ def _jit_prune_threshold(d, entries: jnp.ndarray, queries: jnp.ndarray):
     return d + 1e-5 * d + slack + 1e-9
 
 
+def _slot_bucket(n: int, minimum: int = 64) -> int:
+    """Bucketed live-tile-list length: next power of two ≥ ``max(n,
+    minimum)``, so the jit cache sees O(log) distinct slot counts rather
+    than one compiled kernel per dispatch-specific list length."""
+    return 1 << (max(n, minimum) - 1).bit_length()
+
+
+def _host_live_tiles(entries: np.ndarray, queries: np.ndarray, d,
+                     cand_blk: int, qry_blk: int):
+    """Host-side live-tile-list preparation for one dispatch (PR 7).
+
+    Runs the same inflated-threshold box test as :func:`_host_tile_prune`
+    over every (entry-tile, query-tile) pair, but instead of shipping the
+    per-tile MBRs into the kernel it compacts the *surviving* pairs into
+    a flat list in grid order (``np.nonzero`` over the row-major live
+    matrix — query tiles innermost, exactly the full-grid iteration
+    order, which is what keeps the live kernel's output byte-identical).
+
+    Returns ``None`` when **no** tile pair would be skipped — the caller
+    then dispatches the classic unarmed kernel, which beats even the live
+    kernel's one-compare-per-slot on unprunable workloads — otherwise
+    ``(tile_i, tile_j, n_live, num_tiles)`` with the slot arrays padded
+    to a :func:`_slot_bucket` length (padding points at tile 0; the
+    kernel skips slots past ``n_live``).
+
+    Sync audit: numpy on the planner's pre-upload packed slices, same as
+    ``_host_tile_prune`` — no device work, the dispatch stays async.
+    """
+    from repro.core.index import mbr_gap2
+    e_mbr = _host_tile_mbrs(entries, cand_blk)
+    q_mbr = _host_tile_mbrs(queries, qry_blk)
+    d_prune = _host_prune_threshold(d, entries, queries)
+    gap2 = mbr_gap2(e_mbr[:, None, 0:3], e_mbr[:, None, 3:6],
+                    q_mbr[None, :, 0:3], q_mbr[None, :, 3:6])
+    live = gap2 <= d_prune * d_prune
+    if live.all():
+        return None
+    ti, tj = np.nonzero(live)
+    n_live = int(ti.size)
+    n_slots = _slot_bucket(n_live)
+    tile_i = np.zeros((n_slots,), np.int32)
+    tile_j = np.zeros((n_slots,), np.int32)
+    tile_i[:n_live] = ti
+    tile_j[:n_live] = tj
+    return tile_i, tile_j, np.array([n_live], np.int32), int(live.size)
+
+
+def _jit_live_tiles(e_mbr: jnp.ndarray, q_mbr: jnp.ndarray, d_prune):
+    """In-graph twin of :func:`_host_live_tiles` (outer-trace callers,
+    e.g. the ``shard_map`` pod step — each pod builds its own list from
+    its resident shard).  Traced shapes are static, so the "list" is the
+    full grid with live slots stably sorted to the front (grid order
+    preserved) and ``n_live`` traced — dead slots cost the live kernel
+    one scalar compare each, still far cheaper than a box test plus
+    predicated tile body.  Empty (±inf) boxes from all-padding tiles get
+    an infinite gap and sort dead."""
+    g = jnp.maximum(jnp.maximum(q_mbr[None, :, 0:3] - e_mbr[:, None, 3:6],
+                                e_mbr[:, None, 0:3] - q_mbr[None, :, 3:6]),
+                    0.0)
+    gap2 = jnp.sum(g * g, axis=-1)
+    live = (gap2 <= d_prune * d_prune).reshape(-1)
+    nt_q = q_mbr.shape[0]
+    order = jnp.argsort(jnp.logical_not(live))   # jnp argsort is stable
+    tile_i = (order // nt_q).astype(jnp.int32)
+    tile_j = (order % nt_q).astype(jnp.int32)
+    n_live = jnp.sum(live.astype(jnp.int32)).reshape(1)
+    return tile_i, tile_j, n_live
+
+
 def _host_tile_prune(entries: np.ndarray, queries: np.ndarray, d,
                      cand_blk: int, qry_blk: int):
     """Host-side tile-prune preparation for one dispatch.
@@ -276,8 +353,21 @@ def query_block(entries: jnp.ndarray, queries: jnp.ndarray, d, *,
     kernel is only used when the box test finds at least one skippable
     tile pair — otherwise the classic kernel runs with zero overhead
     (``_host_tile_prune``).  Inside an outer trace (``shard_map``) the
-    boxes are computed in-graph instead.  Pruning never changes the
-    result set, only the work; the dense path ignores it.
+    boxes are computed in-graph instead.
+
+    ``pruning="hierarchical"`` runs the *same* box test but outside the
+    device loop: the surviving tile pairs are compacted into a live-tile
+    list (``_host_live_tiles``; in-graph ``_jit_live_tiles`` under an
+    outer trace) and the ragged scalar-prefetched kernel
+    (``distthresh_compact_live_pallas``) iterates only that list — dead
+    tiles are never fetched and cost nothing, and a fully-dead dispatch
+    short-circuits without touching the device.  The same
+    nothing-skippable gate routes to the classic unarmed kernel, so on
+    unprunable workloads this mode pays zero per-tile overhead (vs the
+    armed spatial kernel's per-tile predicate).
+
+    No pruning mode ever changes the result set, only the work; the dense
+    path ignores both.
     """
     if compaction not in COMPACTIONS:
         raise ValueError(f"unknown compaction {compaction!r}; "
@@ -286,16 +376,31 @@ def query_block(entries: jnp.ndarray, queries: jnp.ndarray, d, *,
         raise ValueError(f"unknown pruning {pruning!r}; "
                          f"choose from {PRUNINGS}")
     prune_arrays = {}
-    if (pruning == "spatial" and use_pallas
-            and compaction in ("fused", "fused_rowloop")
-            and isinstance(entries, np.ndarray)
-            and isinstance(queries, np.ndarray)
-            and entries.shape[0] and queries.shape[0]):
+    host_prunable = (use_pallas and compaction in ("fused", "fused_rowloop")
+                     and isinstance(entries, np.ndarray)
+                     and isinstance(queries, np.ndarray)
+                     and entries.shape[0] and queries.shape[0])
+    if pruning == "spatial" and host_prunable:
         prep = _host_tile_prune(entries, queries, d, cand_blk, qry_blk)
         if prep is None:
             pruning = "none"           # nothing skippable: unarmed kernel
         else:
             prune_arrays = dict(zip(("e_mbr", "q_mbr", "d_prune"), prep))
+    elif pruning == "hierarchical" and host_prunable:
+        prep = _host_live_tiles(entries, queries, d, cand_blk, qry_blk)
+        if prep is None:
+            pruning = "none"           # nothing skippable: unarmed kernel
+        else:
+            tile_i, tile_j, n_live, num_tiles = prep
+            if int(n_live[0]) == 0:
+                # Every tile pruned: no device work at all.
+                dtype = jnp.promote_types(entries.dtype, jnp.float32)
+                out = _empty_block(capacity, dtype)
+                out["pruned_tiles"] = jnp.asarray(num_tiles, jnp.int32)
+                out["num_tiles"] = jnp.asarray(num_tiles, jnp.int32)
+                return out
+            prune_arrays = dict(tile_i=tile_i, tile_j=tile_j,
+                                n_live=n_live)
     kw = dict(capacity=capacity, use_pallas=use_pallas, interpret=interpret,
               cand_blk=cand_blk, qry_blk=qry_blk, pruning=pruning,
               **prune_arrays)
@@ -335,11 +440,13 @@ def _query_block_jit(entries: jnp.ndarray, queries: jnp.ndarray, d, *,
                      capacity: int, use_pallas: bool, interpret: bool,
                      cand_blk: int, qry_blk: int, compaction: str,
                      pruning: str = "none", e_mbr=None, q_mbr=None,
-                     d_prune=None):
+                     d_prune=None, tile_i=None, tile_j=None, n_live=None):
     """Jitted :func:`query_block` body for one *resolved* compaction.
     ``e_mbr``/``q_mbr``/``d_prune`` carry host-precomputed tile-prune
-    operands (see ``_host_tile_prune``); with ``pruning="spatial"`` and no
-    precomputed operands they are derived in-graph (outer-trace callers).
+    operands (see ``_host_tile_prune``) and ``tile_i``/``tile_j``/
+    ``n_live`` a host-precomputed live-tile list (``_host_live_tiles``);
+    with ``pruning="spatial"``/``"hierarchical"`` and no precomputed
+    operands they are derived in-graph (outer-trace callers).
     """
     c, q = entries.shape[0], queries.shape[0]
     compute_dtype = jnp.promote_types(entries.dtype, jnp.float32)
@@ -351,6 +458,23 @@ def _query_block_jit(entries: jnp.ndarray, queries: jnp.ndarray, d, *,
         ep = _pad_rows(entries, cand_blk, pad_t)
         qp = _pad_rows(queries, qry_blk, pad_t)
         append = "rowloop" if compaction == "fused_rowloop" else "chunk"
+        num_tiles = (ep.shape[0] // cand_blk) * (qp.shape[0] // qry_blk)
+        if pruning == "hierarchical":
+            if tile_i is None:
+                tile_i, tile_j, n_live = _jit_live_tiles(
+                    _jit_tile_mbrs(ep, cand_blk, c),
+                    _jit_tile_mbrs(qp, qry_blk, q),
+                    _jit_prune_threshold(d, entries, queries))
+            (e_idx, q_idx, t_enter, t_exit,
+             count) = _dt.distthresh_compact_live_pallas(
+                ep, qp.T, d, tile_i, tile_j, n_live, capacity=capacity,
+                cand_blk=cand_blk, qry_blk=qry_blk, valid_c=c, valid_q=q,
+                interpret=interpret, append=append)
+            pruned = jnp.asarray(num_tiles, jnp.int32) - n_live[0]
+            return {"entry_idx": e_idx, "query_idx": q_idx,
+                    "t_enter": t_enter, "t_exit": t_exit, "count": count,
+                    "pruned_tiles": pruned,
+                    "num_tiles": jnp.asarray(num_tiles, jnp.int32)}
         prune_kw = {}
         if e_mbr is not None:
             prune_kw = dict(e_mbr=e_mbr, q_mbr=q_mbr, d_prune=d_prune)
@@ -364,7 +488,6 @@ def _query_block_jit(entries: jnp.ndarray, queries: jnp.ndarray, d, *,
             ep, qp.T, d, capacity=capacity, cand_blk=cand_blk,
             qry_blk=qry_blk, valid_c=c, valid_q=q, interpret=interpret,
             append=append, **prune_kw)
-        num_tiles = (ep.shape[0] // cand_blk) * (qp.shape[0] // qry_blk)
         return {"entry_idx": e_idx, "query_idx": q_idx,
                 "t_enter": t_enter, "t_exit": t_exit, "count": count,
                 "pruned_tiles": pruned,

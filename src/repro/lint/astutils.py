@@ -43,7 +43,10 @@ MATERIALIZER_BUILTINS = frozenset({"int", "float", "bool", "complex"})
 MATERIALIZER_NP_FUNCS = frozenset({
     "asarray", "array", "asanyarray", "ascontiguousarray", "copy",
 })
-MATERIALIZER_METHODS = frozenset({"item", "tolist", "__array__"})
+#: ``result`` covers concurrent futures of device-bound work (the
+#: scheduler's worker calls): blocking on one is a host sync exactly like
+#: materializing a pending array.
+MATERIALIZER_METHODS = frozenset({"item", "tolist", "__array__", "result"})
 
 #: calls that *explicitly* synchronize (the sanctioned phase-B sync point)
 SYNC_CALLS = frozenset({"block_until_ready"})

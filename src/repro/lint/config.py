@@ -28,6 +28,7 @@ class LintConfig:
         "repro/core/executor.py",
         "repro/core/engine.py",
         "repro/core/distributed.py",
+        "repro/core/scheduler.py",
         "repro/serve/broker.py",
     )
     #: dispatcher-protocol methods the executor only calls *after* blocking
@@ -38,10 +39,12 @@ class LintConfig:
     )
     #: call names whose results are device arrays (taint roots beyond the
     #: ``jnp.``/``jax.``/``pl.`` namespaces)
+    #: (``submit``/``wait`` cover the scheduler's worker-call futures —
+    #: handles to device-bound group work, whose ``.result()`` blocks)
     device_calls: tuple = (
         "query_block", "dispatch", "redispatch", "_launch", "_fn",
         "interaction_tiles", "distthresh_pallas", "distthresh_compact_pallas",
-        "pallas_call",
+        "distthresh_compact_live_pallas", "pallas_call", "submit", "wait",
     )
     #: attribute names that hold device arrays (``Dispatch.out``)
     device_attrs: tuple = ("out",)

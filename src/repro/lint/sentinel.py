@@ -48,6 +48,12 @@ class SentinelReport:
     blocking_reads: int          # materializations that had to wait
     ready_reads: int             # materializations of already-done arrays
     by_kind: dict                # interception point -> count
+    #: dispatch-group label (``repro.core.executor.current_group_label``)
+    #: → hidden blocking reads performed inside that group's scope; the
+    #: ``None`` key collects reads outside any executor group.  This is
+    #: the "who stalled the pipeline" view: a nonzero count here names
+    #: the group whose phase A (or scheduler re-issue) blocked.
+    blocking_by_group: dict = dataclasses.field(default_factory=dict)
 
     @property
     def total_syncs(self) -> int:
@@ -70,6 +76,7 @@ class SyncSentinel:
         self.blocking_reads = 0
         self.ready_reads = 0
         self.by_kind: dict[str, int] = {}
+        self.blocking_by_group: dict = {}
         self._saved: list = []
         self._in_block = False     # jax.block_until_ready calls the array
         #                            method internally — count it once
@@ -92,6 +99,16 @@ class SyncSentinel:
             self.ready_reads += 1
         else:
             self.blocking_reads += 1
+            # Attribute the stall to the dispatch group whose scope the
+            # calling thread is in (lazy import — the sentinel must stay
+            # usable without the executor ever being loaded).
+            try:
+                from repro.core.executor import current_group_label
+                label = current_group_label()
+            except Exception:
+                label = None
+            self.blocking_by_group[label] = (
+                self.blocking_by_group.get(label, 0) + 1)
 
     # ------------------------------------------------------------------
     def __enter__(self) -> "SyncSentinel":
@@ -167,4 +184,5 @@ class SyncSentinel:
     # ------------------------------------------------------------------
     def report(self) -> SentinelReport:
         return SentinelReport(self.explicit_syncs, self.blocking_reads,
-                              self.ready_reads, dict(self.by_kind))
+                              self.ready_reads, dict(self.by_kind),
+                              dict(self.blocking_by_group))

@@ -1,0 +1,317 @@
+"""Hierarchical K-box-per-bin index + device-side live-tile dispatch (PR 7).
+
+Covers the three-level pruning hierarchy end to end: the K-box index
+layer (permutation invariants, degenerate K), box-level sub-range
+exactness (a true hit is never dropped), the live-tile list (including
+compaction to zero tiles), the K=1 ≡ PR 5 degeneration, and the
+``max_subranges`` policy knob.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings
+from _hypothesis_compat import strategies as st
+from conftest import random_segments
+from repro.api import BACKENDS, ExecutionPolicy, TrajectoryDB
+from repro.core.index import MAX_KBOXES, TemporalBinIndex, mbr_gap2
+from repro.core.segments import SegmentArray
+from repro.kernels import ops
+
+_IDX_FIELDS = ("entry_idx", "entry_traj", "entry_seg", "query_idx")
+_FIELDS = _IDX_FIELDS + ("t_enter", "t_exit")
+
+
+def bimodal_segments(rng: np.random.Generator, n: int, *,
+                     far=(520.0, 180.0, 0.0), far_frac=0.75,
+                     t_span=(0.0, 50.0), by_time=False) -> SegmentArray:
+    """Random segments whose occupied space is bimodal: ``far_frac`` of
+    them live in a second cloud ~550 away — the regime where one box per
+    bin summarizes occupancy arbitrarily badly.  ``by_time=True`` makes
+    cloud membership a function of time instead of a coin flip, so
+    consecutive (t_start-sorted) kernel tiles are cloud-pure — the
+    regime where *tile*-level boxes get tight."""
+    db = random_segments(rng, n, t_span=t_span)
+    if by_time:
+        shift = db.ts > (t_span[0] + (t_span[1] - t_span[0]) * (1 - far_frac))
+    else:
+        shift = rng.random(n) < far_frac
+    off = np.asarray(far, np.float32)
+    return SegmentArray(
+        xs=db.xs + shift * off[0], ys=db.ys + shift * off[1],
+        zs=db.zs + shift * off[2],
+        xe=db.xe + shift * off[0], ye=db.ye + shift * off[1],
+        ze=db.ze + shift * off[2],
+        ts=db.ts, te=db.te, seg_id=db.seg_id, traj_id=db.traj_id)
+
+
+# ----------------------------------------------------------------------
+# K-box index layer invariants.
+# ----------------------------------------------------------------------
+class TestKBoxIndex:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000), kboxes=st.integers(2, MAX_KBOXES),
+           num_bins=st.sampled_from([3, 17, 64]))
+    def test_boxes_partition_bins_and_contain_members(self, seed, kboxes,
+                                                      num_bins):
+        """Per-bin boxes tile the bin's permuted range exactly, and each
+        box's MBR contains its member segments."""
+        rng = np.random.default_rng(seed)
+        db = bimodal_segments(rng, 200)
+        idx = TemporalBinIndex.build(db, num_bins=num_bins, kboxes=kboxes)
+        assert idx.perm is not None
+        assert sorted(idx.perm.tolist()) == list(range(len(db)))
+        # bins stay contiguous: positions in bin j are exactly the
+        # original bin range, only reordered within it
+        slo, shi = db.mbrs()
+        slo_p, shi_p = slo[idx.perm], shi[idx.perm]
+        for j in range(num_bins):
+            f, l = int(idx.b_first[j]), int(idx.b_last[j])
+            if l < f:
+                assert np.all(idx.kbox_last[j] < idx.kbox_first[j])
+                continue
+            assert sorted(idx.perm[f:l + 1].tolist()) == list(range(f, l + 1))
+            covered = []
+            for k in range(kboxes):
+                bf, bl = int(idx.kbox_first[j, k]), int(idx.kbox_last[j, k])
+                if bl < bf:
+                    assert np.all(np.isinf(idx.kbox_lo[j, k]))
+                    continue
+                covered.extend(range(bf, bl + 1))
+                assert np.all(idx.kbox_lo[j, k]
+                              <= slo_p[bf:bl + 1].min(axis=0) + 1e-6)
+                assert np.all(idx.kbox_hi[j, k]
+                              >= shi_p[bf:bl + 1].max(axis=0) - 1e-6)
+            assert covered == list(range(f, l + 1))
+
+    def test_k_exceeding_bin_population(self):
+        """K greater than any bin's segment count: trailing boxes are the
+        empty box (±inf) and everything still works."""
+        rng = np.random.default_rng(2)
+        db = random_segments(rng, 12)
+        idx = TemporalBinIndex.build(db, num_bins=24, kboxes=MAX_KBOXES)
+        nonempty = idx.b_last >= idx.b_first
+        assert np.any(~nonempty)                     # some empty bins too
+        # every empty (bin, box) slot prunes inertly: gap == inf
+        empty = idx.kbox_last < idx.kbox_first
+        assert np.all(np.isinf(idx.kbox_lo[empty]))
+        g = mbr_gap2(idx.kbox_lo.reshape(-1, 3), idx.kbox_hi.reshape(-1, 3),
+                     np.zeros(3), np.zeros(3))
+        assert np.all(np.isinf(g.reshape(idx.kbox_last.shape)[empty]))
+        assert not np.any(np.isnan(g))
+        lo, hi = db.mbrs()
+        subs = idx.candidate_subranges(0.0, 60.0, lo.min(0), hi.max(0),
+                                       1e6, level="box")
+        total = sum(l - f + 1 for f, l in subs)
+        assert total == len(db)
+
+    def test_kboxes_one_is_pr5_index(self):
+        """kboxes=1 must reproduce the PR 5 index byte for byte: no
+        permutation, K-box arrays mirroring the bin arrays, and box-level
+        sub-ranges identical to bin-level ones."""
+        rng = np.random.default_rng(3)
+        db = bimodal_segments(rng, 300)
+        idx = TemporalBinIndex.build(db, num_bins=40, kboxes=1)
+        assert idx.perm is None
+        np.testing.assert_array_equal(idx.kbox_first[:, 0], idx.b_first)
+        np.testing.assert_array_equal(idx.kbox_last[:, 0], idx.b_last)
+        np.testing.assert_array_equal(idx.kbox_lo[:, 0], idx.mbr_lo)
+        np.testing.assert_array_equal(idx.kbox_hi[:, 0], idx.mbr_hi)
+        qlo, qhi = db.mbrs()
+        for k in range(0, len(db), 37):
+            args = (float(db.ts[k]), float(db.te[k]) + 3.0, qlo[k], qhi[k],
+                    2.0)
+            assert (idx.candidate_subranges(*args, level="box")
+                    == idx.candidate_subranges(*args, level="bin"))
+
+    def test_invalid_kboxes_rejected(self):
+        db = random_segments(np.random.default_rng(0), 10)
+        for bad in (0, MAX_KBOXES + 1):
+            with pytest.raises(ValueError):
+                TemporalBinIndex.build(db, num_bins=4, kboxes=bad)
+
+
+# ----------------------------------------------------------------------
+# Property: box-level sub-ranges never drop a true hit.
+# ----------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), d=st.floats(0.2, 12.0),
+       kboxes=st.integers(2, MAX_KBOXES),
+       num_bins=st.sampled_from([5, 37, 128]))
+def test_box_subranges_never_drop_a_true_hit(seed, d, kboxes, num_bins):
+    """For ANY db/query/d/K: every entry segment that can spatiotemporally
+    hit lies inside one of the box-level sub-ranges, once the (permuted)
+    sub-range positions are mapped back through ``perm``."""
+    rng = np.random.default_rng(seed)
+    db = bimodal_segments(rng, 250)
+    queries = random_segments(rng, 12)
+    idx = TemporalBinIndex.build(db, num_bins=num_bins, kboxes=kboxes)
+    qlo, qhi = queries.mbrs()
+    elo, ehi = db.mbrs()
+    for k in range(0, len(queries), 3):
+        qt0, qt1 = float(queries.ts[k]), float(queries.te[k])
+        subs = idx.candidate_subranges(qt0, qt1, qlo[k], qhi[k], float(d),
+                                       level="box")
+        for (f1, l1), (f2, l2) in zip(subs, subs[1:]):
+            assert l1 < f2                       # disjoint + increasing
+        may_hit = ((db.ts <= qt1) & (db.te >= qt0)
+                   & (mbr_gap2(elo, ehi, qlo[k], qhi[k]) <= float(d) ** 2))
+        covered = np.zeros(len(db), bool)
+        for f, l in subs:
+            covered[idx.perm[f:l + 1]] = True    # permuted → original
+        missing = np.nonzero(may_hit & ~covered)[0]
+        assert missing.size == 0, (k, missing[:5], subs)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), d=st.floats(0.5, 10.0),
+       kboxes=st.integers(2, MAX_KBOXES))
+def test_box_estimate_is_conservative(seed, d, kboxes):
+    """Box-level coarse pricing never under-counts the exact box-pruned
+    candidates and never exceeds the temporal-only count — including
+    under a ``max_subranges`` cap, whose merge cost it must price in."""
+    rng = np.random.default_rng(seed)
+    db = bimodal_segments(rng, 300)
+    queries = random_segments(rng, 16)
+    idx = TemporalBinIndex.build(db, num_bins=100, kboxes=kboxes)
+    qlo, qhi = queries.mbrs()
+    qt0 = queries.ts.astype(np.float64)
+    qt1 = queries.te.astype(np.float64)
+    for cap in (None, 4):
+        est = idx.estimate_pruned_candidates_batch(
+            qt0, qt1, qlo, qhi, float(d), level="box", max_subranges=cap)
+        temporal = idx.num_candidates_batch(qt0, qt1)
+        for k in range(len(queries)):
+            kw = {} if cap is None else {"max_subranges": cap}
+            exact = idx.pruned_num_candidates(
+                float(qt0[k]), float(qt1[k]), qlo[k], qhi[k], float(d),
+                level="box", **kw)
+            assert exact <= est[k] <= temporal[k], (k, cap)
+
+
+# ----------------------------------------------------------------------
+# Live-tile lists (kernel level).
+# ----------------------------------------------------------------------
+class TestLiveTiles:
+    def _world(self, seed=0, n=600, nq=40):
+        rng = np.random.default_rng(seed)
+        db = bimodal_segments(rng, n, by_time=True).sort_by_tstart()
+        queries = random_segments(rng, nq).sort_by_tstart()
+        return db.packed(), queries.packed()
+
+    def test_hierarchical_matches_none_and_spatial(self):
+        entries, queries = self._world()
+        outs = {}
+        for pruning in ("none", "spatial", "hierarchical"):
+            outs[pruning] = {
+                k: np.asarray(v) for k, v in ops.query_block(
+                    entries, queries, np.float32(3.0), capacity=4096,
+                    use_pallas=True, interpret=True,
+                    pruning=pruning).items()}
+        base = outs["none"]
+        for pruning in ("spatial", "hierarchical"):
+            for k in ("entry_idx", "query_idx", "t_enter", "t_exit",
+                      "count"):
+                np.testing.assert_array_equal(outs[pruning][k], base[k],
+                                              err_msg=(pruning, k))
+        # the bimodal workload must actually skip tiles
+        assert int(outs["hierarchical"]["pruned_tiles"]) > 0
+
+    def test_live_list_compacts_to_zero_tiles(self):
+        """Queries far from every entry: the live-tile list is empty and
+        the dispatch returns the empty block with every tile pruned."""
+        entries, queries = self._world()
+        queries = queries.copy()
+        queries[:, 0:6] += 1e6
+        out = ops.query_block(entries, queries, np.float32(3.0),
+                              capacity=1024, use_pallas=True,
+                              interpret=True, pruning="hierarchical")
+        assert int(out["count"]) == 0
+        assert int(out["pruned_tiles"]) == int(out["num_tiles"]) > 0
+        assert np.all(np.asarray(out["entry_idx"]) == -1)
+
+    def test_unprunable_workload_runs_unarmed(self):
+        """When every tile survives, the dispatcher must fall back to the
+        classic full-grid kernel (zero per-tile list overhead) — visible
+        as pruned_tiles == 0 with identical results."""
+        rng = np.random.default_rng(1)
+        db = random_segments(rng, 300).sort_by_tstart()   # unimodal
+        q = random_segments(rng, 16).sort_by_tstart()
+        hier = ops.query_block(db.packed(), q.packed(), np.float32(50.0),
+                               capacity=4096, use_pallas=True,
+                               interpret=True, pruning="hierarchical")
+        none = ops.query_block(db.packed(), q.packed(), np.float32(50.0),
+                               capacity=4096, use_pallas=True,
+                               interpret=True, pruning="none")
+        assert int(hier["pruned_tiles"]) == 0
+        for k in ("entry_idx", "query_idx", "count"):
+            np.testing.assert_array_equal(np.asarray(hier[k]),
+                                          np.asarray(none[k]))
+
+
+# ----------------------------------------------------------------------
+# End-to-end: facade equivalence + the max_subranges policy knob.
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def bimodal_db():
+    rng = np.random.default_rng(9)
+    segs = bimodal_segments(rng, 800)
+    pol = ExecutionPolicy(num_bins=20, index_kboxes=4, max_subranges=32,
+                          batching="periodic", batch_params={"s": 8})
+    return TrajectoryDB.from_segments(segs, policy=pol), \
+        random_segments(rng, 24)
+
+
+def test_end_to_end_equivalence_on_bimodal(bimodal_db):
+    db, queries = bimodal_db
+    d = 4.0
+    results = {}
+    for backend in BACKENDS:
+        for pruning in ("none", "spatial", "hierarchical"):
+            results[(backend, pruning)] = db.query(
+                queries, d, backend=backend, pruning=pruning)
+    base = results[("jnp", "none")]
+    assert len(base) > 0
+    for (backend, pruning), res in results.items():
+        for f in _IDX_FIELDS:
+            np.testing.assert_array_equal(getattr(res, f), getattr(base, f),
+                                          err_msg=(backend, pruning, f))
+        np.testing.assert_allclose(res.t_enter, base.t_enter,
+                                   rtol=1e-3, atol=5e-3,
+                                   err_msg=str((backend, pruning)))
+    for backend in BACKENDS:
+        off = results[(backend, "none")]
+        for pruning in ("spatial", "hierarchical"):
+            for f in _FIELDS:
+                np.testing.assert_array_equal(
+                    getattr(results[(backend, pruning)], f), getattr(off, f),
+                    err_msg=f"{backend}/{pruning} changed {f}")
+
+
+def test_hierarchical_plans_fewer_interactions_on_bimodal(bimodal_db):
+    """On multi-modal data the box level must beat the bin level at plan
+    time — this is the workload where PR 5 prunes ~nothing."""
+    db, queries = bimodal_db
+    d = 4.0
+    hier = db.query(queries, d, backend="jnp", pruning="hierarchical")
+    spat = db.query(queries, d, backend="jnp", pruning="spatial")
+    assert hier.plan.total_interactions < spat.plan.total_interactions
+    assert (hier.plan.total_interactions + hier.plan.pruned_interactions
+            == spat.plan.total_interactions + spat.plan.pruned_interactions)
+
+
+def test_max_subranges_policy_cap(bimodal_db):
+    """The ExecutionPolicy.max_subranges knob reaches the planner: a
+    tighter cap yields at most as many batches per run, never loses
+    hits, and a cap of 1 degenerates to one contiguous range."""
+    db, queries = bimodal_db
+    d = 4.0
+    base = db.query(queries, d, backend="jnp", pruning="hierarchical")
+    capped_pol = db.policy.with_(max_subranges=1)
+    capped = db.query(queries, d, backend="jnp", policy=capped_pol,
+                      pruning="hierarchical")
+    assert max(capped.plan.runs) == 1        # no batch ever splits
+    assert capped.plan.num_batches <= base.plan.num_batches
+    assert capped.plan.total_interactions >= base.plan.total_interactions
+    for f in _FIELDS:
+        np.testing.assert_array_equal(getattr(capped, f), getattr(base, f),
+                                      err_msg=f)

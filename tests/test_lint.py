@@ -117,6 +117,38 @@ class TestSyncRules:
         """
         assert run("src/repro/core/index.py", src, "SYNC001") == []
 
+    def test_scheduler_worker_loop_in_scope(self):
+        """The PR 7 ratchet: scheduler.py is a sync module, worker-call
+        futures are device-tainted (``submit``/``wait``), and blocking on
+        one (``.result()``) is a SYNC001 unless annotated sync-point."""
+        src = """\
+        from concurrent.futures import wait
+
+        def drain(pool, work):
+            futures = [pool.submit(w) for w in work]
+            done, _ = wait(futures, timeout=0.01)
+            for fut in done:
+                rs = fut.result()
+        """
+        hits = run("src/repro/core/scheduler.py", src, "SYNC001", "SYNC002")
+        assert ("SYNC002", 6) in hits          # iterating the done-set
+        assert ("SYNC001", 7) in hits          # blocking on the future
+        annotated = """\
+        from concurrent.futures import wait
+
+        def drain(pool, work):
+            futures = [pool.submit(w) for w in work]
+            done, _ = wait(futures, timeout=0.01)
+            for fut in done:                   # lint: sync-point
+                rs = fut.result()              # lint: sync-point
+        """
+        assert run("src/repro/core/scheduler.py", annotated,
+                   "SYNC001", "SYNC002") == []
+
+    def test_repo_scheduler_is_sync_module_by_default(self):
+        from repro.lint.config import LintConfig as Cfg
+        assert "repro/core/scheduler.py" in Cfg().sync_modules
+
     def test_host_metadata_calls_not_tainted(self):
         src = """\
         import jax
@@ -614,6 +646,46 @@ class TestSentinel:
         assert rep.explicit_syncs == 1
         assert rep.ready_reads + rep.blocking_reads == 2
         assert rep.by_kind.get("block_until_ready") == 1
+
+    def test_sentinel_attributes_blocking_reads_to_groups(self):
+        """A blocking read inside an executor dispatch-group scope is
+        attributed to that group's label; reads outside any scope land
+        under ``None``."""
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.core.executor import _group_scope, current_group_label
+
+        assert current_group_label() is None
+        with SyncSentinel() as s:
+            with _group_scope("pipelined:dispatch:7"):
+                assert current_group_label() == "pipelined:dispatch:7"
+                x = jnp.arange(65536.0)
+                for _ in range(6):        # enough work to still be pending
+                    x = jnp.sin(x) * 1.0001
+                np.asarray(x)             # may or may not block — recorded
+            assert current_group_label() is None
+        rep = s.report()
+        # every blocking read (if any) carries the group label; none are
+        # unattributed because the only read happened inside the scope
+        assert set(rep.blocking_by_group) <= {"pipelined:dispatch:7"}
+        assert sum(rep.blocking_by_group.values()) == rep.blocking_reads
+
+    def test_pipelined_run_attributes_no_blocking_reads(self):
+        """End to end: a pipelined engine run has an empty per-group
+        blame table — the executors' scopes are active, but nothing
+        blocks inside them."""
+        from repro.api import ExecutionPolicy, TrajectoryDB
+        policy = ExecutionPolicy(batching="periodic", batch_params={"s": 32},
+                                 num_bins=100)
+        db = TrajectoryDB.from_scenario("S2", scale=0.005, policy=policy)
+        be = db.backend("jnp")
+        qs, _ = db._sorted(db.scenario_queries)
+        plan = db._make_plan(qs, db.policy, "jnp", d=float(db.scenario_d))
+        be.run(qs, float(db.scenario_d), plan)       # warm-up
+        with SyncSentinel() as s:
+            be.run(qs, float(db.scenario_d), plan)
+        assert s.report().blocking_by_group == {}
 
     def test_sentinel_restores_patches(self):
         import jax

@@ -25,7 +25,7 @@ def clustered_db():
     per-bin MBR pruning bites.  scale/seed are pinned where the Pallas
     kernel and the jnp oracle agree on every borderline-f32 pair."""
     policy = ExecutionPolicy(batching="periodic", batch_params={"s": 16},
-                             num_bins=300)
+                             num_bins=300, index_kboxes=4)
     db = TrajectoryDB.from_scenario("C1", scale=0.02, policy=policy)
     assert db.scenario_queries is not None
     return db
@@ -36,12 +36,13 @@ def s2_db():
     """A paper scenario with no exploitable space-time correlation —
     pruning must be a well-behaved no-op on it."""
     policy = ExecutionPolicy(batching="periodic", batch_params={"s": 32},
-                             num_bins=200)
+                             num_bins=200, index_kboxes=4)
     return TrajectoryDB.from_scenario("S2", scale=0.01, policy=policy)
 
 
 # ----------------------------------------------------------------------
-# Acceptance: 5-backend byte-identical equivalence, pruning on vs off.
+# Acceptance: 5-backend byte-identical equivalence across pruning modes
+# (none / spatial bin-level / hierarchical K-box + live tiles).
 # ----------------------------------------------------------------------
 @pytest.mark.parametrize("scenario", ["clustered", "s2"])
 def test_five_backend_equivalence_pruning_on_off(scenario, clustered_db,
@@ -50,7 +51,7 @@ def test_five_backend_equivalence_pruning_on_off(scenario, clustered_db,
     queries, d = db.scenario_queries, db.scenario_d
     results = {}
     for backend in BACKENDS:
-        for pruning in ("spatial", "none"):
+        for pruning in ("spatial", "hierarchical", "none"):
             results[(backend, pruning)] = db.query(queries, d,
                                                    backend=backend,
                                                    pruning=pruning)
@@ -72,11 +73,13 @@ def test_five_backend_equivalence_pruning_on_off(scenario, clustered_db,
         np.testing.assert_allclose(res.t_exit, base.t_exit,
                                    rtol=1e-3, atol=5e-3, err_msg=str(label))
     for backend in BACKENDS:
-        on, off = results[(backend, "spatial")], results[(backend, "none")]
-        for f in _FIELDS:
-            np.testing.assert_array_equal(
-                getattr(on, f), getattr(off, f),
-                err_msg=f"{backend}: pruning changed {f}")
+        off = results[(backend, "none")]
+        for pruning in ("spatial", "hierarchical"):
+            on = results[(backend, pruning)]
+            for f in _FIELDS:
+                np.testing.assert_array_equal(
+                    getattr(on, f), getattr(off, f),
+                    err_msg=f"{backend}/{pruning}: pruning changed {f}")
 
 
 def test_pruning_actually_prunes_on_clustered(clustered_db):
@@ -129,20 +132,23 @@ def test_tile_early_out_covers_for_coarse_bins():
 
 def test_broker_slices_canonical_with_pruning(clustered_db):
     """GroupSlice concatenation stays a byte-identical canonical prefix
-    with pruning on — split sibling batches never straddle a slice."""
+    with pruning on — split sibling batches never straddle a slice —
+    for both the bin-level and the K-box hierarchical mode."""
     db = clustered_db
-    queries, d = db.scenario_queries, db.scenario_d
     for backend in ("jnp", "shard"):
-        base = db.query(queries, d, backend=backend, pruning="spatial")
-        broker = db.broker(backend=backend)
-        ticket = broker.submit(queries, d, group_size=1)
-        broker.run_until_idle()
-        for f in _FIELDS:
-            concat = np.concatenate(
-                [getattr(s.result, f) for s in ticket.slices()])
-            np.testing.assert_array_equal(concat, getattr(base, f),
-                                          err_msg=(backend, f))
-        assert all(s.num_syncs <= 2 for s in ticket.slices())
+        for pruning in ("spatial", "hierarchical"):
+            queries, d = db.scenario_queries, db.scenario_d
+            base = db.query(queries, d, backend=backend, pruning=pruning)
+            broker = db.broker(backend=backend,
+                               policy=db.policy.with_(pruning=pruning))
+            ticket = broker.submit(queries, d, group_size=1)
+            broker.run_until_idle()
+            for f in _FIELDS:
+                concat = np.concatenate(
+                    [getattr(s.result, f) for s in ticket.slices()])
+                np.testing.assert_array_equal(
+                    concat, getattr(base, f), err_msg=(backend, pruning, f))
+            assert all(s.num_syncs <= 2 for s in ticket.slices())
 
 
 # ----------------------------------------------------------------------
@@ -237,15 +243,17 @@ class TestDegenerate:
         """A query spatially far from everything returns the empty result
         (and a plan whose batches are all empty) — on every backend."""
         rng = np.random.default_rng(5)
-        db = TrajectoryDB.from_segments(random_segments(rng, 200),
-                                        policy=ExecutionPolicy(num_bins=32))
+        db = TrajectoryDB.from_segments(
+            random_segments(rng, 200),
+            policy=ExecutionPolicy(num_bins=32, index_kboxes=2))
         q = random_segments(rng, 10)
         far = SegmentArray(q.xs + 1e5, q.ys + 1e5, q.zs + 1e5,
                            q.xe + 1e5, q.ye + 1e5, q.ze + 1e5,
                            q.ts, q.te, q.seg_id, q.traj_id)
         for backend in BACKENDS:
-            res = db.query(far, 2.0, backend=backend, pruning="spatial")
-            assert len(res) == 0, backend
+            for pruning in ("spatial", "hierarchical"):
+                res = db.query(far, 2.0, backend=backend, pruning=pruning)
+                assert len(res) == 0, (backend, pruning)
         plan = db.plan(far, d=2.0)
         assert plan.total_interactions == 0
         assert plan.pruned_interactions > 0
