@@ -44,6 +44,14 @@ again (ratioed against ``BENCH_PR5.json``) plus the pruning-mode matrix
 (none / spatial / hierarchical × jnp / pallas) on the clustered C1 and
 bimodal twin-swarm C3 scenarios — the hierarchical K-box index with
 device-side live-tile dispatch vs the PR 5 bin-level pruner.
+
+The ``bench_pr8`` entry writes ``BENCH_PR8.json`` (see
+``benchmarks.shard_bench.canonical_report_pr8``): the S2 executor rows
+again (ratioed against ``BENCH_PR7.json``), the sparse-vs-dense shard
+dispatch matrix on C3 (spatial vs pod-local hierarchical planning ×
+dense vs sparse routed execution, with pods-skipped accounting) and the
+repeated-sensor result-cache section (broker with vs without a
+``SliceCache``).
 """
 from __future__ import annotations
 
@@ -71,6 +79,8 @@ def main(argv=None) -> int:
                     help="path for the bench_pr6 JSON report")
     ap.add_argument("--bench-out7", default="BENCH_PR7.json",
                     help="path for the bench_pr7 JSON report")
+    ap.add_argument("--bench-out8", default="BENCH_PR8.json",
+                    help="path for the bench_pr8 JSON report")
     ap.add_argument("--baseline", default="BENCH_PR2.json",
                     help="baseline report bench_pr3 compares against")
     ap.add_argument("--baseline4", default="BENCH_PR3.json",
@@ -79,11 +89,13 @@ def main(argv=None) -> int:
                     help="baseline report bench_pr5 compares against")
     ap.add_argument("--baseline7", default="BENCH_PR5.json",
                     help="baseline report bench_pr7 compares against")
+    ap.add_argument("--baseline8", default="BENCH_PR7.json",
+                    help="baseline report bench_pr8 compares against")
     args = ap.parse_args(argv)
 
     from benchmarks import (broker_bench, fig3_interactions, kernel_bench,
                             lint_bench, prune_bench, roofline_report,
-                            speedup_vs_rtree, table2_batching,
+                            shard_bench, speedup_vs_rtree, table2_batching,
                             table3_perfmodel)
 
     def bench_pr2():
@@ -172,6 +184,23 @@ def main(argv=None) -> int:
             print(f"# baseline {args.baseline7} not found — no comparison")
         print(f"# bench_pr7 report -> {args.bench_out7}")
 
+    def bench_pr8():
+        report = shard_bench.canonical_report_pr8(quick=not args.full)
+        with open(args.bench_out8, "w") as f:
+            json.dump(report, f, indent=2)
+        kernel_bench.print_executor_rows(report["executor"])
+        shard_bench.print_shard_sparse_rows(report["shard_sparse"])
+        shard_bench.print_cache_rows(report["cache"])
+        if os.path.exists(args.baseline8):
+            with open(args.baseline8) as f:
+                baseline = json.load(f)
+            for line in kernel_bench.compare_executor_sections(report,
+                                                               baseline):
+                print(line)
+        else:
+            print(f"# baseline {args.baseline8} not found — no comparison")
+        print(f"# bench_pr8 report -> {args.bench_out8}")
+
     benches = {
         "fig3": lambda: fig3_interactions.main(),
         "table2": lambda: table2_batching.main(),
@@ -186,6 +215,7 @@ def main(argv=None) -> int:
         "bench_pr5": bench_pr5,
         "bench_pr6": bench_pr6,
         "bench_pr7": bench_pr7,
+        "bench_pr8": bench_pr8,
         "roofline": lambda: roofline_report.main(),
     }
     only = set(args.only.split(",")) if args.only else None

@@ -1,0 +1,226 @@
+"""PR 8 sharded-dispatch benchmark: sparse routed execution + result cache.
+
+Three sections feed ``BENCH_PR8.json`` (written by ``benchmarks/run.py
+--only bench_pr8``; compared back-to-back against ``BENCH_PR7.json``):
+
+* ``shard_sparse`` — broker tickets over ``backend="shard"`` on the
+                     bimodal C3 scenario, the full plan-pruning ×
+                     dispatch matrix: ``spatial`` vs ``hierarchical``
+                     (the PR 8 pod-local K-box index) × dense vs sparse
+                     routed dispatch.  Rows report wall, dispatched
+                     interactions, pod executions skipped and the padded
+                     interaction slots those skips avoided — plus the
+                     headline end-to-end ratios (hierarchical-sparse vs
+                     spatial-dense, sparse vs dense at fixed pruning).
+* ``cache``        — the repeated-sensor monitoring workload: the same
+                     query set submitted ``num_requests`` times, with
+                     and without a ``SliceCache`` on the broker.  Rows
+                     report hit rate and the per-request latency
+                     distribution — cache hits are answered at submit
+                     with zero device syncs.
+* ``executor``     — the S2 executor rows re-run on this tree
+                     (regressable 1:1 against ``BENCH_PR7.json``).
+
+On a single-device run the mesh has one pod, so ``pods_skipped`` stays 0
+and the sparse ratios are ~1; the 8-device CI job (XLA_FLAGS forcing an
+8-pod host mesh) is where the sparse section is meaningful.
+
+Run directly::
+
+    PYTHONPATH=src python -m benchmarks.shard_bench [--quick] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from benchmarks import kernel_bench
+
+
+def _c3_world(scale: float, s: int = 8):
+    """The bimodal twin-swarm scenario with the K-box index configured as
+    in ``prune_bench._c3_world`` — the workload where box-level planning
+    (and hence sparse pod routing) has something to skip."""
+    from repro.api import ExecutionPolicy, TrajectoryDB
+    policy = ExecutionPolicy(batching="periodic", batch_params={"s": s},
+                             num_bins=8, index_kboxes=4, max_subranges=64)
+    db = TrajectoryDB.from_scenario("C3", scale=scale, policy=policy)
+    return db, db.scenario_queries, db.scenario_d
+
+
+def run_shard_sparse(scale: float = 0.02, repeats: int = 2,
+                     group_size: int = 2) -> list[dict]:
+    """Broker tickets over ``backend="shard"`` on C3: plan pruning
+    (spatial vs pod-local hierarchical) × dispatch (dense vs sparse)."""
+    import jax
+    db, queries, d = _c3_world(scale)
+    rows = []
+    walls: dict[tuple, float] = {}
+    for pruning in ("spatial", "hierarchical"):
+        for sparse in (False, True):
+            pol = db.policy.with_(pruning=pruning, shard_sparse=sparse)
+            broker = db.broker(backend="shard", policy=pol)
+            broker.submit(queries, d, group_size=group_size).result()  # warm
+            runs = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                ticket = broker.submit(queries, d, group_size=group_size)
+                ticket.result()
+                runs.append((time.perf_counter() - t0, ticket))
+            sec, ticket = min(runs, key=lambda r: r[0])
+            walls[(pruning, sparse)] = sec
+            rt = ticket.routing
+            ints = ticket.plan.total_interactions
+            rows.append({
+                "bench": "shard_sparse", "scenario": "C3", "scale": scale,
+                "pods": len(jax.devices()), "pruning": pruning,
+                "sparse": sparse, "group_size": group_size,
+                "total_seconds": sec,
+                "dispatched_interactions": ints,
+                "interactions_per_s": ints / sec,
+                "num_batches": len(ticket.plan.batches),
+                "mean_pods_per_batch": rt.mean_pods_per_batch,
+                "pods_skipped": rt.pods_skipped,
+                "padded_interactions_avoided":
+                    rt.padded_interactions_avoided,
+                "syncs_per_group": max(sl.num_syncs
+                                       for sl in ticket.slices()),
+            })
+            if sparse:
+                rows[-1]["speedup_vs_dense"] = (
+                    walls[(pruning, False)] / sec)
+            if pruning == "hierarchical":
+                rows[-1]["speedup_vs_spatial"] = (
+                    walls[("spatial", sparse)] / sec)
+    # the headline: everything PR 8 adds vs the PR 7 shard baseline
+    rows[-1]["speedup_vs_spatial_dense"] = (
+        walls[("spatial", False)] / walls[("hierarchical", True)])
+    return rows
+
+
+def run_cache(scale: float = 0.01, s: int = 32, num_requests: int = 6,
+              repeats: int = 2, group_size: int = 2) -> list[dict]:
+    """The repeated-sensor workload: one monitoring query set submitted
+    ``num_requests`` times per round, broker with vs without the
+    ``SliceCache`` — steady-state repeats are answered from host memory."""
+    from repro.api import ExecutionPolicy, TrajectoryDB
+    from repro.serve.cache import SliceCache
+    policy = ExecutionPolicy(batching="periodic", batch_params={"s": s},
+                             num_bins=500)
+    db = TrajectoryDB.from_scenario("S2", scale=scale, policy=policy)
+    queries, d = db.scenario_queries, db.scenario_d
+    ints = db.plan(queries).total_interactions * num_requests
+    rows = []
+    for cached in (False, True):
+        cache = SliceCache() if cached else None
+        broker = db.broker(backend="jnp", cache=cache)
+        broker.submit(queries, d, group_size=group_size).result()  # warm jit
+
+        def round_trip():
+            latencies = []
+            for _ in range(num_requests):
+                t0 = time.perf_counter()
+                broker.submit(queries, d, group_size=group_size).result()
+                latencies.append(time.perf_counter() - t0)
+            return latencies
+
+        runs = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            latencies = round_trip()
+            runs.append((time.perf_counter() - t0, latencies))
+        sec, latencies = min(runs, key=lambda r: r[0])
+        arr = np.asarray(latencies, float)
+        row = {
+            "bench": "cache", "scenario": "S2", "scale": scale,
+            "cached": cached, "num_requests": num_requests,
+            "total_seconds": sec, "interactions_per_s": ints / sec,
+            "latency": {"mean": float(arr.mean()),
+                        "p95": float(np.percentile(arr, 95)),
+                        "max": float(arr.max())},
+        }
+        if cached:
+            st = cache.stats
+            row["hit_rate"] = st.hit_rate
+            row["hits"] = st.hits
+            row["lookups"] = st.lookups
+            row["speedup_vs_uncached"] = rows[0]["total_seconds"] / sec
+        rows.append(row)
+    return rows
+
+
+def canonical_report_pr8(*, quick: bool = False) -> dict:
+    """The BENCH_PR8 payload: S2 executor rows re-run on this tree
+    (regressable 1:1 against ``BENCH_PR7.json``) plus the sparse-vs-dense
+    shard matrix on C3 and the repeated-sensor cache section."""
+    s2_scale = 0.005 if quick else 0.01
+    c3_scale = 0.02 if quick else 0.05
+    # best-of-3 even in quick mode: the timed calls are warm and ~tens of
+    # ms, so repeats are cheap while the back-to-back executor ratio vs
+    # BENCH_PR7.json needs the stability
+    repeats = 3
+    return {"bench": "BENCH_PR8", "scenario": "S2+C3",
+            "scale": s2_scale, "c3_scale": c3_scale,
+            "quick": quick, "baseline": "BENCH_PR7.json",
+            "executor": kernel_bench.run_executor(scale=s2_scale,
+                                                  repeats=max(repeats, 5)),
+            "shard_sparse": run_shard_sparse(scale=c3_scale,
+                                             repeats=repeats),
+            "cache": run_cache(scale=s2_scale, repeats=repeats,
+                               num_requests=3 if quick else 6)}
+
+
+def print_shard_sparse_rows(rows: list[dict]) -> None:
+    for r in rows:
+        extra = ""
+        if "speedup_vs_dense" in r:
+            extra += f",vs_dense={r['speedup_vs_dense']:.2f}x"
+        if "speedup_vs_spatial" in r:
+            extra += f",vs_spatial={r['speedup_vs_spatial']:.2f}x"
+        if "speedup_vs_spatial_dense" in r:
+            extra += (",vs_spatial_dense="
+                      f"{r['speedup_vs_spatial_dense']:.2f}x")
+        print(f"shard_sparse,pods={r['pods']},pruning={r['pruning']},"
+              f"sparse={r['sparse']},total_s={r['total_seconds']:.3f},"
+              f"ints={r['dispatched_interactions']},"
+              f"pods_skipped={r['pods_skipped']},"
+              f"avoided_ints={r['padded_interactions_avoided']},"
+              f"syncs_per_group={r['syncs_per_group']}{extra}")
+
+
+def print_cache_rows(rows: list[dict]) -> None:
+    for r in rows:
+        lat = r["latency"]
+        extra = (f",hit_rate={r['hit_rate']:.2f},"
+                 f"vs_uncached={r['speedup_vs_uncached']:.2f}x"
+                 if r["cached"] else "")
+        print(f"cache,cached={r['cached']},requests={r['num_requests']},"
+              f"total_s={r['total_seconds']:.3f},"
+              f"lat_mean_s={lat['mean']:.4f},lat_p95_s={lat['p95']:.4f}"
+              f"{extra}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizes (seconds, not minutes)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the canonical BENCH_PR8 report to PATH")
+    args = ap.parse_args(argv)
+    report = canonical_report_pr8(quick=args.quick)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# wrote {args.json}")
+    kernel_bench.print_executor_rows(report["executor"])
+    print_shard_sparse_rows(report["shard_sparse"])
+    print_cache_rows(report["cache"])
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -146,6 +146,11 @@ class ExecutionPolicy:
     shard_capacity: int = 4096            # result slots per pod per batch
     shard_use_pallas: bool = False        # Pallas kernels inside shard_map
     shard_balance: str = "time"           # pod partition: "time" | "num_ints"
+    #: Sparse routed dispatch (PR 8): pods with zero candidates for a
+    #: batch short-circuit the sharded step (``lax.cond``) instead of
+    #: executing full padded blocks.  Exact — results are byte-identical
+    #: with it on or off; ``RoutingStats.pods_skipped`` measures the win.
+    shard_sparse: bool = True
 
     # -- R-tree baseline ------------------------------------------------
     rtree_r: int = 12                     # segments per leaf MBB (Fig. 5)
@@ -375,6 +380,10 @@ class TrajectoryDB:
             index_kboxes=self.policy.index_kboxes)
         self.segments: SegmentArray = self._base_engine.db
         self.index: TemporalBinIndex = self._base_engine.index
+        #: Monotone data-version counter — result caches key on it, so
+        #: any future mutation path must bump it to invalidate them.
+        #: The in-memory database is immutable today, so it stays 0.
+        self.data_epoch: int = 0
         self._backends: dict[str, QueryBackend] = {}
         #: fitted §8 model (see :meth:`fit_response_model`); when set it is
         #: the default ``predict_hits`` for planning and ``predict_seconds``
@@ -439,9 +448,13 @@ class TrajectoryDB:
             pruning = (pol.pruning if pol.shard_use_pallas
                        and compaction in ("fused", "fused_rowloop")
                        else "none")
+            # pol.pruning itself (not just the kernel-effective value)
+            # shapes construction too: hierarchical builds the pod-local
+            # K-box plan index (PR 8)
             return (pol.shard_pods, pol.shard_capacity, pol.shard_use_pallas,
                     pol.shard_balance, pol.interpret, pol.cand_blk,
-                    pol.qry_blk, compaction, pol.pipeline, pruning)
+                    pol.qry_blk, compaction, pol.pipeline, pruning,
+                    pol.pruning, pol.shard_sparse)
         if name == "rtree":
             return (pol.rtree_r, pol.rtree_fanout, pol.rtree_threads)
         return (pol.brute_chunk,)
@@ -477,7 +490,8 @@ class TrajectoryDB:
                     use_pallas=pol.shard_use_pallas, interpret=pol.interpret,
                     cand_blk=pol.cand_blk, qry_blk=pol.qry_blk,
                     compaction=compaction, pipeline=pol.pipeline,
-                    balance=pol.shard_balance, pruning=pol.pruning))
+                    balance=pol.shard_balance, pruning=pol.pruning,
+                    index=self.index, sparse=pol.shard_sparse))
             elif name == "rtree":
                 self._backends[key] = RTreeBackend(
                     RTreeEngine(self.segments, r=pol.rtree_r,
@@ -515,14 +529,19 @@ class TrajectoryDB:
         predict_hits = (self.response_model.predict_batch_hits
                         if self.response_model is not None else None)
         pruning = pol.pruning
+        index = self.index
         if backend == "shard" and pruning == "hierarchical":
-            # The pod partition slices the t_start-sorted segment array, so
-            # shard plans must stay in the original (bin-level) index order;
-            # the hierarchical win on this backend is the per-pod live-tile
-            # list each pod builds in-graph inside make_pod_query_fn.
-            pruning = "spatial"
+            # Shard plans under hierarchical pruning address *pod-permuted*
+            # segment positions: plan on the engine's pod-partitioned K-box
+            # index (PR 8), whose box sub-ranges line up with both the pod
+            # ownership slices and the engine's permuted packed copy.
+            eng = self.backend("shard", pol).engine
+            if eng.plan_index is not None:
+                index = eng.plan_index
+            else:
+                pruning = eng.plan_pruning
         return QueryPlanner(
-            self.index, algorithm=pol.batching,
+            index, algorithm=pol.batching,
             params=pol.resolved_batch_params(num_queries),
             default_capacity=capacity, group_size=pol.group_size,
             pruning=pruning, predict_hits=predict_hits,

@@ -284,13 +284,13 @@ def make_pod_query_fn(mesh: Mesh, capacity_per_shard: int, *,
                       pod_axis: str = "pod", use_pallas: bool = False,
                       interpret: bool = True, cand_blk: int = 256,
                       qry_blk: int = 256, compaction: str = "dense",
-                      pruning: str = "none"):
+                      pruning: str = "none", sparse: bool = False):
     """Jitted per-batch query step for the temporal-pod mesh backend.
 
-    ``fn(entries (P, C_loc, 8), offsets (P,), queries (Q, 8), d)`` runs
-    ``ops.query_block`` on every pod's local candidate block against the
-    replicated query batch and returns result buffers whose leading dim is
-    ``P × capacity_per_shard``:
+    ``fn(entries (P, C_loc, 8), offsets (P,), [lens (P,),] queries (Q, 8),
+    d)`` runs ``ops.query_block`` on every pod's local candidate block
+    against the replicated query batch and returns result buffers whose
+    leading dim is ``P × capacity_per_shard``:
 
     * ``entry_idx`` is **globalized on device** via the per-pod ``offsets``
       (the pod's first owned global segment index) — the host never remaps;
@@ -307,20 +307,35 @@ def make_pod_query_fn(mesh: Mesh, capacity_per_shard: int, *,
     live-tile kernel — dead slots sort to the tail and cost one scalar
     compare per slot, with no host round-trip and no cross-pod traffic.
 
+    ``sparse`` (PR 8) adds the per-pod candidate-length vector ``lens``
+    and short-circuits pods with zero candidates for the batch: the whole
+    ``query_block`` body sits under a ``lax.cond`` whose false branch
+    emits an empty result block, so a non-routed pod runs one predicate
+    instead of a full padded kernel launch — the mesh-level analogue of
+    the kernel's ``@pl.when`` tile early-out.  SPMD stays sound because
+    shapes are identical on both branches, a skipped pod contributes an
+    exact zero to the hit count, and the ``psum`` runs **outside** the
+    cond (a collective inside a divergent branch would deadlock the
+    mesh).  Results are bit-identical to the dense step.
+
     Capacity (and the block/compaction knobs) are baked into the returned
     callable; the sharded engine keeps one per retry capacity.
     """
 
-    def local(entries, offsets, queries, d):
+    def _step(entries, offsets, queries, d):
         out = ops.query_block(
             entries[0], queries, d, capacity=capacity_per_shard,
             use_pallas=use_pallas, interpret=interpret,
             cand_blk=cand_blk, qry_blk=qry_blk, compaction=compaction,
             pruning=pruning)
         valid = out["entry_idx"] >= 0
+        out["entry_idx"] = jnp.where(valid, out["entry_idx"] + offsets[0], -1)
+        return out
+
+    def _finish(out):
         cnt = out["count"]
         return {
-            "entry_idx": jnp.where(valid, out["entry_idx"] + offsets[0], -1),
+            "entry_idx": out["entry_idx"],
             "query_idx": out["query_idx"],
             "t_enter": out["t_enter"],
             "t_exit": out["t_exit"],
@@ -330,9 +345,27 @@ def make_pod_query_fn(mesh: Mesh, capacity_per_shard: int, *,
             "num_tiles": out["num_tiles"][None],
         }
 
+    if sparse:
+        def local(entries, offsets, lens, queries, d):
+            out = jax.lax.cond(
+                lens[0] > 0,
+                lambda: _step(entries, offsets, queries, d),
+                lambda: ops._empty_block(capacity_per_shard,
+                                         entries.dtype))
+            # psum after the cond: every pod participates, skipped pods
+            # contribute their (exact) zero count.
+            return _finish(out)
+        in_specs = (P(pod_axis, None, None), P(pod_axis), P(pod_axis),
+                    P(None, None), P())
+    else:
+        def local(entries, offsets, queries, d):
+            return _finish(_step(entries, offsets, queries, d))
+        in_specs = (P(pod_axis, None, None), P(pod_axis), P(None, None),
+                    P())
+
     shmapped = _shard_map(
         local, mesh=mesh,
-        in_specs=(P(pod_axis, None, None), P(pod_axis), P(None, None), P()),
+        in_specs=in_specs,
         out_specs={"entry_idx": P(pod_axis), "query_idx": P(pod_axis),
                    "t_enter": P(pod_axis), "t_exit": P(pod_axis),
                    "count": P(pod_axis), "total": P(),
@@ -384,11 +417,17 @@ class _PodShardDispatcher:
         c_loc = bucket_capacity(max(max(lens), 1), se.cand_blk)
         # Pod-local candidate blocks, padded with rows at _pad_e (never
         # overlaps real data, real queries, or query padding at _pad_q).
+        # Under a hierarchical plan the batch ranges are permuted
+        # positions, so slice the permuted packed copy — pod ownership
+        # intervals are identical in permuted coordinates (the pod-local
+        # perm reorders only within bin ∩ pod pieces).
+        src = (se._packed_perm if se.plan_pruning == "hierarchical"
+               else se._packed)
         stacked = np.zeros((se.ways, c_loc, 8), np.float32)
         stacked[:, :, 6] = stacked[:, :, 7] = self._pad_e
         for p, (lo, n) in enumerate(zip(los, lens)):
             if n:
-                stacked[p, :n] = se._packed[lo:lo + n]
+                stacked[p, :n] = src[lo:lo + n]
         offsets = np.asarray(los, np.int32)
         # Replicated query batch, bucketed on the same ladder as the
         # candidate blocks so the jit cache stays O(log²).
@@ -400,13 +439,18 @@ class _PodShardDispatcher:
             qpad[:, 6] = qpad[:, 7] = self._pad_q
             qpad[:qn] = qs
             qs = qpad
-        return self._launch(batch, capacity, (stacked, offsets, qs))
+        lens_arr = np.asarray(lens, np.int32)
+        return self._launch(batch, capacity, (stacked, offsets, lens_arr, qs))
 
     def _launch(self, batch, capacity: int, prepared) -> Dispatch:
-        stacked, offsets, qs = prepared
-        out = self.engine._fn(capacity)(
-            jnp.asarray(stacked), jnp.asarray(offsets), jnp.asarray(qs),
-            np.float32(self.d))
+        stacked, offsets, lens, qs = prepared
+        fn = self.engine._fn(capacity)
+        if self.engine.sparse:
+            out = fn(jnp.asarray(stacked), jnp.asarray(offsets),
+                     jnp.asarray(lens), jnp.asarray(qs), np.float32(self.d))
+        else:
+            out = fn(jnp.asarray(stacked), jnp.asarray(offsets),
+                     jnp.asarray(qs), np.float32(self.d))
         return Dispatch(batch, capacity, out, ctx=prepared)
 
     def redispatch(self, dp: Dispatch, capacity: int) -> Dispatch:
@@ -435,6 +479,13 @@ class _PodShardDispatcher:
         ent = np.asarray(dp.out["entry_idx"])
         keep = ent >= 0
         e_global = ent[keep].astype(np.int64)
+        if self.engine.plan_pruning == "hierarchical":
+            # device rows sit at permuted positions; map back so the
+            # caller-visible entry_idx never changes (same contract as the
+            # single-device hierarchical path)
+            perm = self.engine._perm
+            if perm is not None:
+                e_global = perm[e_global]
         q_local = np.asarray(dp.out["query_idx"])[keep].astype(np.int64)
         return ResultSet(
             entry_idx=e_global,
@@ -465,15 +516,28 @@ class ShardedEngine:
     (``repro.api.TrajectoryDB.query``); constructed there from
     ``ExecutionPolicy.shard_pods`` / ``shard_capacity``.
 
-    ``pruning="hierarchical"`` is planner-downgraded to ``"spatial"``
-    for this backend (pod partitions cut mid-bin in original segment
-    order, so box sub-ranges don't survive the partition); the
-    kernel-level win is kept on the fused Pallas path
+    ``pruning="hierarchical"`` (PR 8) rebuilds the PR 7 K-box index
+    **per pod** over each pod's ownership slice
+    (:meth:`repro.core.index.PodPartitionedIndex.build_partitioned`,
+    from the base ``index=`` the facade passes in): the pod-local
+    permutation reorders segments only within bin ∩ pod pieces, so pod
+    ownership intervals and bin ranges survive unchanged and the
+    planner prunes shard plans at *box* granularity — the single-device
+    planner-level win, on the mesh.  Result ``entry_idx`` maps back
+    through the composed ``perm``, so caller-visible results are
+    byte-identical to every other backend × pruning mode.  The
+    kernel-level win rides along on the fused Pallas path
     (``shard_use_pallas=True``): ``make_pod_query_fn`` builds the
     compacted live-tile lists *in-graph* per pod (stable
     ``jnp.argsort`` over the tile box test — shard_map tracers, so no
-    host-side ``np.nonzero``), and results stay byte-identical to the
-    single-device backends across all pruning modes.
+    host-side ``np.nonzero``).
+
+    ``sparse=True`` (PR 8, default) makes dispatch skip pods whose
+    candidate intersection with a batch is empty: the per-pod length
+    vector rides into the sharded step and zero-row pods short-circuit
+    under ``lax.cond`` (see :func:`make_pod_query_fn`) instead of
+    executing full padded blocks, with ``psum`` totals exact by zero
+    contribution.  :class:`RoutingStats` reports the avoided work.
     """
 
     def __init__(self, db: SegmentArray, *, mesh: Mesh | None = None,
@@ -481,7 +545,8 @@ class ShardedEngine:
                  use_pallas: bool = False, interpret: bool = True,
                  cand_blk: int = 256, qry_blk: int = 256,
                  compaction: str = "dense", pipeline: bool = True,
-                 balance: str = "time", pruning: str = "spatial"):
+                 balance: str = "time", pruning: str = "spatial",
+                 index=None, sparse: bool = True):
         self.db = db if db.is_sorted() else db.sort_by_tstart()
         self._packed = self.db.packed()
         if mesh is None:
@@ -502,6 +567,23 @@ class ShardedEngine:
         self.qry_blk = qry_blk
         self.compaction = compaction
         self.pipeline = pipeline
+        self.sparse = bool(sparse)
+        # Planner-level pruning: hierarchical needs the pod-local K-box
+        # rebuild (from the facade's base index); without one, shard
+        # plans can only use bin-granular (spatial) ranges.
+        self.plan_pruning = pruning
+        self.plan_index = None
+        self._perm = None
+        self._packed_perm = self._packed
+        if pruning == "hierarchical":
+            if index is None:
+                self.plan_pruning = "spatial"
+            else:
+                from repro.core.index import PodPartitionedIndex
+                self.plan_index = PodPartitionedIndex.build_partitioned(
+                    index, self.db, self.pod_slices)
+                self._perm = self.plan_index.perm
+                self._packed_perm = self._packed[self._perm]
         # Kernel-level tile pruning only exists on the fused Pallas path;
         # normalizing here keeps the jit-cache key honest.
         self.pruning = (pruning if use_pallas
@@ -531,7 +613,8 @@ class ShardedEngine:
                 self.mesh, capacity, pod_axis=self.pod_axis,
                 use_pallas=self.use_pallas, interpret=self.interpret,
                 cand_blk=self.cand_blk, qry_blk=self.qry_blk,
-                compaction=self.compaction, pruning=self.pruning)
+                compaction=self.compaction, pruning=self.pruning,
+                sparse=self.sparse)
         return self._fns[capacity]
 
     def dispatcher(self, queries_packed: np.ndarray,
@@ -588,6 +671,13 @@ class RoutingStats:
     batches: int = 0
     pods_per_batch: list = dataclasses.field(default_factory=list)
     pod_hits: np.ndarray | None = None
+    #: Pod executions avoided by sparse dispatch (PR 8): a pod counted
+    #: here had zero candidates for its batch and short-circuited under
+    #: the sharded step's ``lax.cond`` instead of running padding.
+    pods_skipped: int = 0
+    #: Padded entry×query interaction slots those skipped executions
+    #: would have evaluated (``skipped × C_loc × Q_pad`` per batch).
+    padded_interactions_avoided: int = 0
     _lock: object = dataclasses.field(default_factory=threading.Lock,
                                       repr=False, compare=False)
 
@@ -598,8 +688,14 @@ class RoutingStats:
 
     @property
     def hit_balance(self) -> float:
-        """max/mean per-pod hit load (1.0 = perfectly even; 0 if no hits)."""
-        if self.pod_hits is None or self.pod_hits.sum() == 0:
+        """max/mean per-pod hit load (1.0 = perfectly even; 0 if no hits).
+
+        Zero-routed workloads (every batch fully pruned, or no pods at
+        all) report 0.0 rather than dividing by a zero mean.
+        """
+        if self.pod_hits is None or self.pod_hits.size == 0:
+            return 0.0
+        if int(self.pod_hits.sum()) == 0:
             return 0.0
         return float(self.pod_hits.max() / self.pod_hits.mean())
 
@@ -615,11 +711,31 @@ class _RoutedPodDispatcher(_PodShardDispatcher):
 
     def dispatch(self, batch, capacity: int):
         _, lens = self._pod_lens(batch)
+        live = sum(1 for n in lens if n > 0)
+        dp = super().dispatch(batch, capacity)
         st = self.router.stats
         with st._lock:
             st.batches += 1
-            st.pods_per_batch.append(sum(1 for n in lens if n > 0))
-        return super().dispatch(batch, capacity)
+            st.pods_per_batch.append(live)
+            if self.engine.sparse:
+                skipped = self.engine.ways - live
+                st.pods_skipped += skipped
+                # prepared ctx = (stacked (P, C_loc, 8), offsets, lens,
+                # qs (Q_pad, 8)): each skipped pod would have evaluated
+                # the full padded C_loc × Q_pad block
+                st.padded_interactions_avoided += (
+                    skipped * dp.ctx[0].shape[1] * dp.ctx[3].shape[0])
+        return dp
+
+    def record_empty(self, batch) -> None:
+        """Executor hook: a zero-candidate batch was skipped host-side.
+        Record an explicit empty routing row (0 pods touched) so the
+        stats ledger covers every planned batch instead of silently
+        undercounting fully-pruned groups."""
+        st = self.router.stats
+        with st._lock:
+            st.batches += 1
+            st.pods_per_batch.append(0)
 
     def marshal(self, dp, count: int):
         st = self.router.stats

@@ -263,6 +263,16 @@ def _tile_stats(dispatcher: BatchDispatcher, dp: Dispatch) -> tuple[int, int]:
     return fn(dp) if fn is not None else (0, 0)
 
 
+def _record_empty(dispatcher: BatchDispatcher, batch: QueryBatch) -> None:
+    """Tell the dispatcher a zero-candidate batch was skipped host-side —
+    an *optional* hook (routing/accounting ledgers need an explicit
+    empty record per planned batch, not a silent gap); dispatchers
+    without it see nothing."""
+    fn = getattr(dispatcher, "record_empty", None)
+    if fn is not None:
+        fn(batch)
+
+
 def _empty_stats(batch: QueryBatch) -> BatchStats:
     return BatchStats(batch.size, 0, 0, 0, 0.0, 0)
 
@@ -310,6 +320,7 @@ class SyncExecutor:
                 for i in g:
                     batch, capacity = plan.batches[i], plan.capacities[i]
                     if batch.num_candidates == 0:
+                        _record_empty(disp, batch)
                         stats_by_idx[i] = _empty_stats(batch)
                         continue
                     t0 = time.perf_counter()
@@ -390,6 +401,7 @@ class PipelinedExecutor:
                 for i in g:
                     batch = plan.batches[i]
                     if batch.num_candidates == 0:
+                        _record_empty(disp, batch)
                         continue
                     slots[i] = disp.dispatch(batch, plan.capacities[i])
             timing["dispatch"] += time.perf_counter() - t0

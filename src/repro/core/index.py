@@ -85,6 +85,29 @@ def mbr_gap2(alo, ahi, blo, bhi):
     return np.sum(g * g, axis=-1)
 
 
+def _coalesce_runs(kf: np.ndarray, kl: np.ndarray,
+                   first: int, last: int) -> list[list[int]]:
+    """Clamp surviving box ranges into ``[first, last]`` and coalesce
+    adjacent boxes with no segments between them into maximal runs.
+
+    ``kf``/``kl`` are inclusive (first, last) ranges in non-decreasing
+    ``kf`` order; a new run starts only where a real index gap remains
+    after the running-max of ``kl`` (boxes can nest after clamping)."""
+    if kf.size == 0:
+        return []
+    kf = np.maximum(kf, first)
+    kl = np.minimum(kl, last)
+    ok = kl >= kf
+    kf, kl = kf[ok], kl[ok]
+    if kf.size == 0:
+        return []
+    cummax = np.maximum.accumulate(kl)
+    newrun = np.r_[True, kf[1:] > cummax[:-1] + 1]
+    starts = kf[newrun]
+    ends = np.maximum.reduceat(kl, np.nonzero(newrun)[0])
+    return [[int(a), int(b)] for a, b in zip(starts, ends)]
+
+
 def prune_limit(d: float, scale: float) -> float:
     """Conservatively inflated threshold for MBR pruning.
 
@@ -434,19 +457,7 @@ class TemporalBinIndex:
         keep = (gap2 <= lim2) & (self.b_end[bins] >= qt0)[:, None]
         kf = self.kbox_first[bins][keep]
         kl = self.kbox_last[bins][keep]
-        if kf.size == 0:
-            return []
-        kf = np.maximum(kf, first)
-        kl = np.minimum(kl, last)
-        ok = kl >= kf
-        kf, kl = kf[ok], kl[ok]
-        if kf.size == 0:
-            return []
-        cummax = np.maximum.accumulate(kl)
-        newrun = np.r_[True, kf[1:] > cummax[:-1] + 1]
-        starts = kf[newrun]
-        ends = np.maximum.reduceat(kl, np.nonzero(newrun)[0])
-        return [[int(a), int(b)] for a, b in zip(starts, ends)]
+        return _coalesce_runs(kf, kl, first, last)
 
     def candidate_subranges(self, qt0: float, qt1: float,
                             qlo: np.ndarray, qhi: np.ndarray, d: float, *,
@@ -588,3 +599,184 @@ class TemporalBinIndex:
             denom = np.maximum(frag - 1, 1)
             est = est + (dropped * excess + denom - 1) // denom
         return est
+
+    # ------------------------------------------------------------------
+    # pod-local K-box rebuild (PR 8)
+    # ------------------------------------------------------------------
+    def build_for_slice(self, db: SegmentArray, lo: int, hi: int,
+                        kboxes: int | None = None):
+        """Rebuild the K-box layer over one ownership slice ``[lo, hi]``.
+
+        The distributed pod partition assigns each pod a contiguous slice
+        of the t_start-sorted segment array; a pod must only ever reorder
+        *its own* rows, so the PR 7 global within-bin split cannot be
+        reused (its permutation moves segments across pod boundaries
+        whenever a bin straddles one).  This path re-runs the PR 7 split
+        — widest-spread midpoint axis, largest-gap cuts, at most ``K``
+        boxes — independently per (bin ∩ slice) piece.  Because every
+        piece lies inside one bin *and* one pod slice, the returned
+        permutation leaves both bin ranges and pod ownership ranges
+        occupying exactly their original index intervals.
+
+        Returns ``(perm_slice, box_first, box_last, box_lo, box_hi,
+        box_bin)``: ``perm_slice`` maps the slice's permuted positions
+        ``lo..hi`` back to original segment indices; the flat box arrays
+        are in increasing ``box_first`` (global permuted-position) order
+        with ``box_bin`` the owning bin of each box (non-decreasing).
+        """
+        kboxes = self.kboxes if kboxes is None else int(kboxes)
+        if not 1 <= kboxes <= MAX_KBOXES:
+            raise ValueError(f"kboxes must be in [1, {MAX_KBOXES}], got {kboxes}")
+        empty3 = np.empty((0, 3), dtype=np.float64)
+        empty1 = np.empty(0, dtype=np.int64)
+        if hi < lo:
+            return empty1, empty1, empty1, empty3, empty3, empty1
+        nloc = hi - lo + 1
+        seg_lo, seg_hi = db.mbrs()
+        slo = seg_lo[lo:hi + 1]
+        shi = seg_hi[lo:hi + 1]
+        # Bin of each owned segment by *index position* (non-empty bins
+        # tile [0, n) and b_last is non-decreasing), immune to float
+        # edge rounding in the t_start -> bin map.
+        binv = np.searchsorted(self.b_last, np.arange(lo, hi + 1),
+                               side="left").astype(np.int64)
+        mid = 0.5 * (slo + shi)
+        # Pieces = runs of equal bin inside the slice; per-piece
+        # widest-spread midpoint axis, exactly as in the global build.
+        pf = np.r_[0, np.nonzero(np.diff(binv))[0] + 1].astype(np.int64)
+        mmin = np.minimum.reduceat(mid, pf, axis=0)
+        mmax = np.maximum.reduceat(mid, pf, axis=0)
+        axis = np.argmax(mmax - mmin, axis=1)
+        piece_id = np.cumsum(np.r_[0, (np.diff(binv) != 0).astype(np.int64)])
+        key = mid[np.arange(nloc), axis[piece_id]]
+        # Stable within-piece sort: pieces (hence bins, hence the pod
+        # slice itself) keep their index intervals.
+        order = np.lexsort((key, binv))
+        perm_slice = (np.arange(lo, hi + 1, dtype=np.int64))[order]
+        keyp = key[order]
+        splits = np.empty(0, dtype=np.int64)
+        if nloc > 1 and kboxes > 1:
+            gapv = keyp[1:] - keyp[:-1]
+            cand = (binv[1:] == binv[:-1]) & (gapv > 0.0)
+            cpos = np.nonzero(cand)[0].astype(np.int64) + 1
+            if cpos.size:
+                cgap = gapv[cpos - 1]
+                cbin = binv[cpos]
+                order2 = np.lexsort((-cgap, cbin))
+                sb = cbin[order2]
+                grp = np.r_[0, np.nonzero(np.diff(sb))[0] + 1].astype(np.int64)
+                lens = np.diff(np.r_[grp, sb.size])
+                rank = np.arange(sb.size) - np.repeat(grp, lens)
+                splits = np.sort(cpos[order2[rank < kboxes - 1]])
+        allstarts = np.concatenate([pf, splits])
+        allstarts.sort()
+        slo_p, shi_p = slo[order], shi[order]
+        box_lo = np.minimum.reduceat(slo_p, allstarts, axis=0)
+        box_hi = np.maximum.reduceat(shi_p, allstarts, axis=0)
+        box_first = allstarts + lo
+        box_last = np.r_[allstarts[1:] - 1, nloc - 1].astype(np.int64) + lo
+        box_bin = binv[allstarts]
+        return perm_slice, box_first, box_last, box_lo, box_hi, box_bin
+
+
+@dataclasses.dataclass
+class PodPartitionedIndex(TemporalBinIndex):
+    """The PR 7 hierarchical index rebuilt over a pod partition (PR 8).
+
+    Every bin-level quantity is inherited verbatim from the base index —
+    the pod-local permutation reorders segments only *within*
+    (bin ∩ pod-slice) pieces, so bin ranges, per-bin MBRs, prefix/suffix
+    unions and the coarse pricing grid are all invariant, and so are the
+    pod ownership intervals themselves (``_pod_lens`` keeps working on
+    permuted coordinates unchanged).  Only the box layer differs: instead
+    of a dense ``(num_bins, K)`` grid there is a flat sorted box list
+    (a bin straddling a pod boundary owns up to ``K`` boxes *per pod*,
+    which the dense grid cannot represent), binary-searched by bin in
+    :meth:`_box_runs`.  ``perm`` composes all pod-local permutations into
+    one global map, so caller-visible ``entry_idx`` never changes.
+    """
+
+    box_first: np.ndarray | None = None  # (B,) int64 — sorted permuted starts
+    box_last: np.ndarray | None = None   # (B,) int64 — inclusive ends
+    box_lo: np.ndarray | None = None     # (B, 3) — per-box MBR
+    box_hi: np.ndarray | None = None
+    box_bin: np.ndarray | None = None    # (B,) int64 — owning bin, non-decreasing
+
+    @staticmethod
+    def build_partitioned(base: "TemporalBinIndex", db: SegmentArray,
+                          pod_slices, *, kboxes: int | None = None
+                          ) -> "PodPartitionedIndex":
+        """Compose :meth:`TemporalBinIndex.build_for_slice` over every pod
+        ownership slice ``(lo, hi)`` (inclusive; empty slices allowed)."""
+        kboxes = base.kboxes if kboxes is None else int(kboxes)
+        n = base.n_segments
+        perm = np.arange(n, dtype=np.int64)
+        parts: list[tuple] = []
+        for lo, hi in pod_slices:
+            if hi < lo:
+                continue
+            ps, bf, bl, blo, bhi, bb = base.build_for_slice(
+                db, int(lo), int(hi), kboxes=kboxes)
+            perm[lo:hi + 1] = ps
+            parts.append((bf, bl, blo, bhi, bb))
+        if parts:
+            box_first = np.concatenate([p[0] for p in parts])
+            box_last = np.concatenate([p[1] for p in parts])
+            box_lo = np.concatenate([p[2] for p in parts], axis=0)
+            box_hi = np.concatenate([p[3] for p in parts], axis=0)
+            box_bin = np.concatenate([p[4] for p in parts])
+        else:
+            box_first = box_last = box_bin = np.empty(0, dtype=np.int64)
+            box_lo = box_hi = np.empty((0, 3), dtype=np.float64)
+        # Pod slices arrive in increasing index order and bins increase
+        # with index, so the flat lists are already box_first-sorted with
+        # non-decreasing box_bin; assert rather than re-sort (a violation
+        # means the pod partition overlapped, which must never happen).
+        if box_first.size > 1:
+            if not ((np.diff(box_first) > 0).all()
+                    and (np.diff(box_bin) >= 0).all()):
+                raise ValueError("pod slices must be disjoint and increasing")
+        # Coarse pricing grid, K-box flavour, over the flat list: cell =
+        # owning bin's coarse chunk, slot = within-cell rank mod K.  Any
+        # (cell, slot) cover keeps the estimate conservative — a fine box
+        # surviving the prune test keeps its containing union alive.
+        chunk = max((base.num_bins + COARSE_GRID_BINS - 1)
+                    // COARSE_GRID_BINS, 1)
+        ncell = len(base._coarse_first)
+        coarse_klo = np.full((ncell, kboxes, 3), np.inf)
+        coarse_khi = np.full((ncell, kboxes, 3), -np.inf)
+        if box_first.size:
+            cell = box_bin // chunk
+            grp = np.r_[0, np.nonzero(np.diff(cell))[0] + 1].astype(np.int64)
+            lens = np.diff(np.r_[grp, cell.size])
+            rank = np.arange(cell.size) - np.repeat(grp, lens)
+            slot = rank % kboxes
+            np.minimum.at(coarse_klo, (cell, slot), box_lo)
+            np.maximum.at(coarse_khi, (cell, slot), box_hi)
+        fields = {f.name: getattr(base, f.name)
+                  for f in dataclasses.fields(TemporalBinIndex)}
+        fields.update(
+            kboxes=kboxes, perm=perm,
+            # the dense (num_bins, K) grid is meaningless under the pod
+            # permutation — null it out so stale reads fail loudly
+            kbox_first=None, kbox_last=None, kbox_lo=None, kbox_hi=None,
+            _coarse_klo=coarse_klo, _coarse_khi=coarse_khi,
+        )
+        return PodPartitionedIndex(
+            **fields, box_first=box_first, box_last=box_last,
+            box_lo=box_lo, box_hi=box_hi, box_bin=box_bin)
+
+    def _box_runs(self, bins: slice, qt0: float, qlo, qhi,
+                  lim2: float, first: int, last: int) -> list[list[int]]:
+        """Flat-list override: binary-search the bin window, prune, and
+        coalesce — identical semantics to the dense version."""
+        a = int(np.searchsorted(self.box_bin, bins.start, side="left"))
+        b = int(np.searchsorted(self.box_bin, bins.stop - 1, side="right"))
+        if b <= a:
+            return []
+        bb = self.box_bin[a:b]
+        gap2 = mbr_gap2(self.box_lo[a:b], self.box_hi[a:b], qlo, qhi)
+        keep = (gap2 <= lim2) & (self.b_end[bb] >= qt0)
+        kf = self.box_first[a:b][keep]
+        kl = self.box_last[a:b][keep]
+        return _coalesce_runs(kf, kl, first, last)

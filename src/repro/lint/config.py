@@ -55,6 +55,10 @@ class LintConfig:
         "repro/kernels/ops.py",
         "repro/kernels/flashattn.py",
     )
+    #: grid-spec constructor names whose leading kernel params are
+    #: scalar-prefetch refs — the live-tile-list contract (KERN006) is
+    #: enforced on kernels launched through them
+    prefetch_grid_specs: tuple = ("PrefetchScalarGridSpec",)
     #: static VMEM budget per kernel invocation, MiB (KERN005)
     vmem_budget_mib: int = 16
     #: live-copy multiplier for the VMEM estimate (double buffering)

@@ -22,6 +22,13 @@ the AST of the configured kernel modules:
 * ``KERN005`` (warn) — a static VMEM footprint estimate (sum of resolvable
   block shapes × 4 B × a live-copy multiplier) must stay under the
   configured budget.
+* ``KERN006`` (error) — the live-tile-list contract: scalar-prefetch refs
+  (the leading kernel params under a ``PrefetchScalarGridSpec``) carry a
+  list the *caller* compacted — host-side (``ops._host_live_tiles``) or
+  in-graph (``ops._jit_live_tiles``).  A kernel body that scans such a
+  ref per-element with a loop induction variable re-walks the full grid
+  inside every slot, defeating the compaction; prefetch refs may only be
+  indexed by grid ids (``pl.program_id``-derived scalars) or constants.
 
 Resolution is *candidate-based*: conditionally rebound names (``in_specs
 += [...]``, ``kernel = a if flag else b``) produce several candidates and
@@ -52,6 +59,21 @@ class _Site:
         self.in_specs_expr = astutils._kwarg(call, "in_specs")
         self.out_specs_expr = astutils._kwarg(call, "out_specs")
         self.out_shape_expr = astutils._kwarg(call, "out_shape")
+        self.grid_spec_expr = astutils._kwarg(call, "grid_spec")
+
+    def num_scalar_prefetch(self, cfg) -> int | None:
+        """The resolved ``num_scalar_prefetch`` of a prefetch grid spec
+        bound via ``grid_spec=``, or None when this site has none."""
+        if self.grid_spec_expr is None:
+            return None
+        for cand in self.env.candidates(self.grid_spec_expr):
+            if (isinstance(cand, ast.Call)
+                    and astutils.call_name(cand) in cfg.prefetch_grid_specs):
+                n = self.env.resolve_int(
+                    astutils._kwarg(cand, "num_scalar_prefetch"))
+                if n is not None and n > 0:
+                    return n
+        return None
 
     # -- grid ----------------------------------------------------------
     def grid_dims(self) -> list | None:
@@ -329,4 +351,61 @@ def check_kern005(ctx, cfg):
                   f"{cfg.vmem_budget_mib} MiB VMEM budget"
                   + (f" ({unresolved} spec(s) unresolved and uncounted)"
                      if unresolved else ""))
+    return out
+
+
+def _loop_induction_names(fn) -> set:
+    """Names that take a new value every iteration of a loop inside
+    ``fn``: Python ``for`` targets and the induction parameter of a
+    ``fori_loop`` body (lambda or locally-defined function)."""
+    names: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.For):
+            for sub in ast.walk(node.target):
+                if isinstance(sub, ast.Name):
+                    names.add(sub.id)
+        elif (isinstance(node, ast.Call)
+                and astutils.call_name(node) == "fori_loop"
+                and len(node.args) >= 3):
+            body = node.args[2]
+            if isinstance(body, (ast.Lambda, ast.FunctionDef)):
+                params = body.args.posonlyargs + body.args.args
+                if params:
+                    names.add(params[0].arg)
+    return names
+
+
+@rule("KERN006", ERROR,
+      "scalar-prefetch refs must not be scanned per-element in the kernel")
+def check_kern006(ctx, cfg):
+    out: list[Violation] = []
+    for site, func, qualname in _sites(ctx, cfg):
+        n_prefetch = site.num_scalar_prefetch(cfg)
+        if n_prefetch is None:
+            continue
+        for kfn, bound, _vararg in site.kernel_candidates():
+            params = [a.arg for a in (kfn.args.posonlyargs + kfn.args.args)]
+            prefetch = set(params[bound:bound + n_prefetch])
+            if not prefetch:
+                continue
+            loop_vars = _loop_induction_names(kfn)
+            if not loop_vars:
+                continue
+            for node in ast.walk(kfn):
+                if not (isinstance(node, ast.Subscript)
+                        and isinstance(node.value, ast.Name)
+                        and node.value.id in prefetch):
+                    continue
+                scanned = next(
+                    (sub.id for sub in ast.walk(node.slice)
+                     if isinstance(sub, ast.Name) and sub.id in loop_vars),
+                    None)
+                if scanned is None:
+                    continue
+                _emit(out, ctx, "KERN006", ERROR, node,
+                      f"in {qualname}: kernel {kfn.name!r} scans scalar-"
+                      f"prefetch ref {node.value.id!r} with loop variable "
+                      f"{scanned!r} — compact the live-tile list before "
+                      "launch (host-side or in-graph) and index prefetch "
+                      "refs only by grid ids (pl.program_id) or constants")
     return out

@@ -1,6 +1,7 @@
-from repro.serve import batcher, broker, engine, trajectory  # noqa: F401
+from repro.serve import batcher, broker, cache, engine, trajectory  # noqa: F401
 from repro.serve.broker import (  # noqa: F401
     AdmissionError, DeadlineExceededError, GroupSlice, QueryBroker,
     QueryTicket)
+from repro.serve.cache import CacheStats, SliceCache  # noqa: F401
 from repro.serve.trajectory import (  # noqa: F401
     QueryRequest, QueryResponse, TrajectoryQueryService)

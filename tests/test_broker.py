@@ -132,11 +132,102 @@ def test_shard_ticket_routing_stats(world):
     _assert_identical(ticket.result(), base, "shard")
     rt = ticket.routing
     assert rt is not None and rt.num_pods >= 1
-    # only batches with candidates are dispatched (and hence routed)
-    dispatched = sum(1 for b in ticket.plan.batches if b.num_candidates > 0)
-    assert rt.batches == dispatched
+    # every planned batch is accounted for: dispatched ones with their pod
+    # fan-out, planner-pruned (empty) ones as explicit zero-pod records
+    assert rt.batches == len(ticket.plan.batches)
     assert len(rt.pods_per_batch) == rt.batches
+    dispatched = sum(1 for b in ticket.plan.batches if b.num_candidates > 0)
+    assert sum(1 for n in rt.pods_per_batch if n > 0) == dispatched
     assert int(rt.pod_hits.sum()) == len(base)
+
+
+def test_fully_pruned_shard_ticket_records_empty_routing(world):
+    """Regression (PR 8): a query set the planner prunes to nothing still
+    produces complete routing accounting — every planned batch appears as
+    an explicit zero-pod record, and ``hit_balance`` reports 0.0 instead
+    of dividing by a zero mean."""
+    db, queries, d = world
+    _, t_max = db.segments.temporal_extent
+    far = SegmentArray(queries.xs, queries.ys, queries.zs,
+                       queries.xe, queries.ye, queries.ze,
+                       queries.ts + (t_max + 100.0),
+                       queries.te + (t_max + 100.0),
+                       queries.seg_id, queries.traj_id)
+    ticket = db.broker(backend="shard").submit(far, d, group_size=2)
+    res = ticket.result()
+    assert len(res) == 0
+    rt = ticket.routing
+    assert rt is not None
+    assert ticket.plan is not None
+    assert all(b.num_candidates == 0 for b in ticket.plan.batches)
+    assert rt.batches == len(ticket.plan.batches) > 0
+    assert rt.pods_per_batch == [0] * rt.batches
+    assert rt.mean_pods_per_batch == 0.0
+    assert rt.hit_balance == 0.0          # no ZeroDivision on zero hits
+
+
+# ----------------------------------------------------------------------
+# Result cache (PR 8): exact-containment hits through submit().
+# ----------------------------------------------------------------------
+def test_cache_hit_on_repeat_submit(world):
+    from repro.serve.cache import SliceCache
+    db, queries, d = world
+    base = db.query(queries, d, backend="jnp")
+    cache = SliceCache()
+    broker = db.broker(backend="jnp", cache=cache)
+    _assert_identical(broker.submit(queries, d).result(), base, "miss")
+    assert cache.stats.misses == 1 and cache.stats.insertions == 1
+
+    delivered = []
+    ticket = broker.submit(queries, d,
+                           on_slice=lambda tk, sl: delivered.append(sl))
+    assert ticket.done() and ticket.state == "done"   # born done, no pump
+    assert cache.stats.hits == 1
+    _assert_identical(ticket.result(), base, "hit")
+    # the synthesized slice keeps the slices()/on_slice contract, free
+    assert len(delivered) == 1 and delivered[0].num_syncs == 0
+    assert ticket.num_groups == 1 and ticket.groups_completed == 1
+    assert broker.pending == 0
+
+
+def test_cache_subset_hit_and_epoch_invalidation(world):
+    from repro.serve.cache import SliceCache
+    db, queries, d = world
+    cache = SliceCache()
+    broker = db.broker(backend="jnp", cache=cache)
+    broker.submit(queries, d).result()       # populate
+
+    # a byte-exact subset hits via the superset entry + post-filter
+    sub = queries.take(np.arange(0, len(queries), 3))
+    base = db.query(sub, d, backend="jnp")
+    _assert_identical(broker.submit(sub, d).result(), base, "subset")
+    assert cache.stats.hits == 1 and cache.stats.superset_hits == 1
+
+    # a different threshold misses (results depend on d)
+    broker.submit(queries, d * 0.5).result()
+    assert cache.stats.hits == 1
+
+    # bumping the database epoch invalidates every prior entry
+    db.data_epoch += 1
+    try:
+        broker.submit(sub, d).result()
+        assert cache.stats.hits == 1 and cache.stats.misses >= 3
+    finally:
+        db.data_epoch -= 1
+
+
+def test_cache_lru_eviction():
+    from repro.serve.cache import SliceCache
+    rng = np.random.default_rng(3)
+    db = TrajectoryDB.from_segments(random_segments(rng, 200))
+    cache = SliceCache(max_entries=2)
+    broker = db.broker(backend="jnp", cache=cache)
+    qsets = [random_segments(np.random.default_rng(s), 8) for s in (1, 2, 3)]
+    for qs in qsets:
+        broker.submit(qs, 4.0).result()
+    assert len(cache) == 2 and cache.stats.evictions == 1
+    broker.submit(qsets[0], 4.0).result()     # oldest was evicted -> miss
+    assert cache.stats.hits == 0 and cache.stats.misses == 4
 
 
 # ----------------------------------------------------------------------

@@ -480,8 +480,10 @@ _SHARD_BACKEND_SCRIPT = textwrap.dedent("""
         [s.num_syncs for s in delivered]
     rt = ticket.routing
     assert rt is not None and rt.num_pods == 8
+    assert rt.batches == len(ticket.plan.batches)
     dispatched = sum(1 for b in ticket.plan.batches if b.num_candidates > 0)
-    assert rt.batches == dispatched
+    assert sum(1 for n in rt.pods_per_batch) == rt.batches
+    assert sum(1 for n in rt.pods_per_batch if n > 0) == dispatched
     assert int(rt.pod_hits.sum()) == len(res)
     assert 1 <= max(rt.pods_per_batch) <= 8
     # (query_stream's shard routing is covered in-process in test_api —
@@ -507,6 +509,113 @@ def test_five_backend_equivalence_on_8_device_mesh_subprocess():
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert "SHARD_BACKEND_OK" in proc.stdout
     assert "BROKER_SHARD_OK" in proc.stdout
+
+
+_SPARSE_SHARD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax
+    assert jax.device_count() == 8
+    from repro.api import ExecutionPolicy, TrajectoryDB
+
+    FIELDS = ("entry_idx", "entry_traj", "entry_seg", "query_idx",
+              "t_enter", "t_exit")
+
+    def identical(a, b, label):
+        for f in FIELDS:
+            assert np.array_equal(getattr(a, f), getattr(b, f)), (label, f)
+
+    # PR 8 acceptance: pruning="hierarchical" x backend="shard" on the
+    # 8-pod mesh is byte-identical to the single-device canonical result,
+    # sparse dispatch on and off, on C1 / C3 / S2.
+    CASES = [
+        ("C1", 0.01, dict(num_bins=64, index_kboxes=1)),
+        ("C3", 0.01, dict(num_bins=8, index_kboxes=4, max_subranges=64)),
+        ("S2", 0.005, dict(num_bins=64, index_kboxes=2)),
+    ]
+    for scenario, scale, kw in CASES:
+        policy = ExecutionPolicy(batching="periodic", batch_params={"s": 8},
+                                 pruning="hierarchical", **kw)
+        db = TrajectoryDB.from_scenario(scenario, scale=scale, policy=policy)
+        queries, d = db.scenario_queries, db.scenario_d
+        base = db.query(queries, d, backend="jnp")
+        assert len(base) > 0, scenario
+        # the pod-local K-box index is really in force (no downgrade)
+        eng = db.backend("shard", policy).engine
+        assert eng.plan_pruning == "hierarchical", eng.plan_pruning
+        assert eng.plan_index is not None
+        for sparse in (True, False):
+            pol = policy.with_(shard_sparse=sparse)
+            res = db.query(queries, d, backend="shard", policy=pol)
+            identical(res, base, (scenario, "sparse" if sparse else "dense"))
+            st = res.stats
+            assert st.num_syncs <= 2, (scenario, sparse, st.num_syncs)
+        print("SPARSE_EQUIV_OK", scenario, len(base))
+
+    # Broker tickets: <= 2 syncs per group sparse on/off; the sparse run
+    # on the routed C3 workload must actually skip pod executions.
+    policy = ExecutionPolicy(batching="periodic", batch_params={"s": 8},
+                             pruning="hierarchical", num_bins=8,
+                             index_kboxes=4, max_subranges=64)
+    db = TrajectoryDB.from_scenario("C3", scale=0.01, policy=policy)
+    queries, d = db.scenario_queries, db.scenario_d
+    base = db.query(queries, d, backend="jnp")
+    for sparse in (True, False):
+        pol = policy.with_(shard_sparse=sparse)
+        broker = db.broker(backend="shard", policy=pol)
+        ticket = broker.submit(queries, d, group_size=2)
+        identical(ticket.result(), base, ("broker", sparse))
+        assert all(sl.num_syncs <= 2 for sl in ticket.slices()), \\
+            [sl.num_syncs for sl in ticket.slices()]
+        rt = ticket.routing
+        assert rt is not None and rt.num_pods == 8
+        assert rt.batches == len(ticket.plan.batches)
+        assert int(rt.pod_hits.sum()) == len(base)
+        if sparse:
+            assert rt.pods_skipped > 0, "routed workload skipped no pods"
+            assert rt.padded_interactions_avoided > 0
+        else:
+            assert rt.pods_skipped == 0
+            assert rt.padded_interactions_avoided == 0
+    print("SPARSE_BROKER_OK", rt.pods_skipped)
+
+    # Property: skipped pods never drop a true hit — random query subsets
+    # routed sparsely return exactly the dense (and single-device) rows.
+    rng = np.random.default_rng(0)
+    for trial in range(6):
+        k = int(rng.integers(3, max(4, len(queries) // 4)))
+        idx = np.sort(rng.choice(len(queries), size=k, replace=False))
+        sub = queries.take(idx)
+        want = db.query(sub, d, backend="jnp")
+        dense = db.query(sub, d, backend="shard",
+                         policy=policy.with_(shard_sparse=False))
+        sparse = db.query(sub, d, backend="shard",
+                          policy=policy.with_(shard_sparse=True))
+        identical(dense, want, ("prop-dense", trial))
+        identical(sparse, want, ("prop-sparse", trial))
+    print("SPARSE_PROPERTY_OK")
+""")
+
+
+@pytest.mark.slow
+def test_sparse_shard_dispatch_on_8_device_mesh_subprocess():
+    """PR 8 acceptance: pod-local hierarchical planning + sparse routed
+    dispatch on the 8-pod mesh — byte-identical to the single-device
+    canonical on C1/C3/S2 with sparse on and off, <= 2 syncs per broker
+    group, ``pods_skipped > 0`` on a routed workload, and a property
+    check that skipped pods never drop a true hit."""
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _SPARSE_SHARD_SCRIPT],
+                          capture_output=True, text=True, env=env,
+                          timeout=900)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    for token in ("SPARSE_EQUIV_OK C1", "SPARSE_EQUIV_OK C3",
+                  "SPARSE_EQUIV_OK S2", "SPARSE_BROKER_OK",
+                  "SPARSE_PROPERTY_OK"):
+        assert token in proc.stdout, (token, proc.stdout[-2000:])
 
 
 _ELASTIC_SCRIPT = textwrap.dedent("""

@@ -334,6 +334,101 @@ class TestKernRules:
         """
         assert run(KERN_PATH, src, "KERN004") == []
 
+    def test_prefetch_ref_scanned_with_python_loop(self):
+        src = """\
+        import jax.experimental.pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def kernel(ti_ref, nl_ref, x_ref, o_ref):
+            for i in range(8):
+                o_ref[ti_ref[i]] = x_ref[i]
+
+        def launch(ti, nl, x):
+            gs = pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=2,
+                grid=(8,),
+                in_specs=[pl.BlockSpec((8, 8), lambda s, ti, nl: (ti[s], 0))],
+                out_specs=pl.BlockSpec((8,), lambda s, ti, nl: (0,)),
+            )
+            return pl.pallas_call(kernel, grid_spec=gs,
+                                  out_shape=None)(ti, nl, x)
+        """
+        hits = run(KERN_PATH, src, "KERN006")
+        assert [r for r, _ in hits] == ["KERN006"]
+
+    def test_prefetch_ref_scanned_with_fori_loop(self):
+        src = """\
+        import jax
+        import jax.experimental.pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def kernel(ti_ref, nl_ref, x_ref, o_ref):
+            o_ref[0] = jax.lax.fori_loop(
+                0, nl_ref[0], lambda i, acc: acc + ti_ref[i], 0)
+
+        def launch(ti, nl, x):
+            gs = pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=2,
+                grid=(8,),
+                in_specs=[pl.BlockSpec((8, 8), lambda s, ti, nl: (ti[s], 0))],
+                out_specs=pl.BlockSpec((8,), lambda s, ti, nl: (0,)),
+            )
+            return pl.pallas_call(kernel, grid_spec=gs,
+                                  out_shape=None)(ti, nl, x)
+        """
+        hits = run(KERN_PATH, src, "KERN006")
+        assert [r for r, _ in hits] == ["KERN006"]
+
+    def test_prefetch_ref_grid_id_indexing_clean(self):
+        # The sanctioned pattern: slot id from pl.program_id plus a
+        # constant-index live-count read — exactly how the repo's
+        # live-tile kernel consumes its prefetched list.
+        src = """\
+        import jax.experimental.pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def kernel(ti_ref, nl_ref, x_ref, o_ref):
+            s = pl.program_id(0)
+            @pl.when(s < nl_ref[0])
+            def _run():
+                o_ref[...] = x_ref[...] * ti_ref[s]
+
+        def launch(ti, nl, x):
+            gs = pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=2,
+                grid=(8,),
+                in_specs=[pl.BlockSpec((8, 8), lambda s, ti, nl: (ti[s], 0))],
+                out_specs=pl.BlockSpec((8,), lambda s, ti, nl: (0,)),
+            )
+            return pl.pallas_call(kernel, grid_spec=gs,
+                                  out_shape=None)(ti, nl, x)
+        """
+        assert run(KERN_PATH, src, "KERN006") == []
+
+    def test_non_prefetch_ref_loops_clean(self):
+        # Loop-scanning an ordinary operand ref is outside KERN006's
+        # contract; only the scalar-prefetch leading params are protected.
+        src = """\
+        import jax.experimental.pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def kernel(ti_ref, nl_ref, x_ref, o_ref):
+            s = pl.program_id(0)
+            for i in range(8):
+                o_ref[i] = x_ref[i] + ti_ref[s]
+
+        def launch(ti, nl, x):
+            gs = pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=2,
+                grid=(8,),
+                in_specs=[pl.BlockSpec((8, 8), lambda s, ti, nl: (ti[s], 0))],
+                out_specs=pl.BlockSpec((8,), lambda s, ti, nl: (0,)),
+            )
+            return pl.pallas_call(kernel, grid_spec=gs,
+                                  out_shape=None)(ti, nl, x)
+        """
+        assert run(KERN_PATH, src, "KERN006") == []
+
     def test_scope_limited_to_kern_modules(self):
         src = """\
         import jax.experimental.pallas as pl
@@ -504,11 +599,12 @@ class TestPlants:
 
     def test_plant_branch_on_traced(self, real_sources):
         path = "src/repro/core/distributed.py"
-        anchor = ('        valid = out["entry_idx"] >= 0\n'
-                  '        cnt = out["count"]')
+        anchor = "            return _finish(out)"
         assert anchor in real_sources[path]
         mutated = real_sources[path].replace(
-            anchor, anchor + "\n        if cnt > 0:\n            cnt = cnt + 0")
+            anchor,
+            '            if out["count"] > 0:\n'
+            "                out = dict(out)\n" + anchor)
         vs = lint_sources([(path, mutated)], select=("TRACE001",))
         assert [v.rule for v in vs] == ["TRACE001"]
         vs = lint_sources([(path, real_sources[path])],
