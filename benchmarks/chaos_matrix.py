@@ -1,0 +1,188 @@
+"""Seeded chaos matrix: every fault kind × a seed sweep, verified.
+
+CI's ``chaos`` job runs this driver twice — on the default single-device
+platform and under a forced 8-device host mesh — and uploads the JSON
+report.  Each (seed, scenario) cell arms one deterministic
+:class:`repro.faults.FaultPlan` around a broker round trip and checks the
+PR 10 acceptance property directly: the recovered result carries exactly
+the clean run's rows (indices byte-identical; interval endpoints
+byte-identical unless the recovery crossed a backend/compaction rung,
+where the kernels' arithmetic differs in the last ulp — then to float
+precision), and every degradation is reported in ``ticket.health``.  Any
+silently-wrong cell fails the process.
+
+Usage::
+
+    python -m benchmarks.chaos_matrix --seeds 3 --out CHAOS_REPORT.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro import faults
+from repro.api import ExecutionPolicy, TrajectoryDB
+from repro.core.segments import SegmentArray
+from repro.serve.cache import SliceCache
+from repro.serve.retry import RetryPolicy
+
+_IDX = ("entry_idx", "entry_traj", "entry_seg", "query_idx")
+_T = ("t_enter", "t_exit")
+
+
+def _segments(rng, n: int) -> SegmentArray:
+    ts = np.sort(rng.uniform(0.0, 50.0, n)).astype(np.float32)
+    te = (ts + rng.uniform(0.1, 3.0, n)).astype(np.float32)
+    p0 = rng.uniform(0.0, 30.0, (n, 3)).astype(np.float32)
+    p1 = (p0 + rng.normal(0.0, 1.0, (n, 3))).astype(np.float32)
+    return SegmentArray(xs=p0[:, 0], ys=p0[:, 1], zs=p0[:, 2],
+                        xe=p1[:, 0], ye=p1[:, 1], ze=p1[:, 2],
+                        ts=ts, te=te,
+                        seg_id=np.arange(n, dtype=np.int32),
+                        traj_id=np.arange(n, dtype=np.int32) % 7)
+
+
+def _check(res, base, cross_rung: bool) -> str | None:
+    for f in _IDX:
+        if not np.array_equal(getattr(res, f), getattr(base, f)):
+            return f"{f} mismatch"
+    for f in _T:
+        a, b = getattr(res, f), getattr(base, f)
+        if cross_rung:
+            if not np.allclose(a, b, rtol=1e-4, atol=1e-3):
+                return f"{f} not close"
+        elif not np.array_equal(a, b):
+            return f"{f} mismatch"
+    return None
+
+
+_RETRY = dict(base_backoff=0.001, max_backoff=0.01)
+
+
+def _scenarios(seed: int):
+    """(name, backend, broker_kwargs, plan, cross_rung) rows.  ``plan`` is
+    rebuilt per cell so fire-counters start fresh."""
+    F = faults.FaultSpec
+    return [
+        ("kernel_error_retry", "jnp",
+         dict(retry=RetryPolicy(**_RETRY)),
+         faults.FaultPlan([F("engine.dispatch", "error", times=1)],
+                          seed=seed), False),
+        ("kernel_error_ladder", "pallas",
+         dict(retry=RetryPolicy(max_attempts=8, degrade_after=1, **_RETRY)),
+         faults.FaultPlan([F("engine.dispatch", "error", times=None,
+                             match={"use_pallas": True})], seed=seed), True),
+        ("resource_exhausted_backoff", "jnp",
+         dict(retry=RetryPolicy(**_RETRY)),
+         faults.FaultPlan([F("engine.dispatch", "resource_exhausted",
+                             times=2)], seed=seed), False),
+        ("corrupt_count", "jnp",
+         dict(retry=RetryPolicy(**_RETRY)),
+         faults.FaultPlan([F("engine.count", "corrupt_count", times=None,
+                             factor=5.0, bias=3)], seed=seed), False),
+        ("delay_straggler", "jnp",
+         dict(retry=RetryPolicy(straggler_slack=3.0,
+                                straggler_min_timeout=0.05, **_RETRY)),
+         faults.FaultPlan([F("engine.dispatch", "delay", times=1,
+                             delay=0.2)], seed=seed), False),
+        ("plan_failure_pruning_ladder", "jnp",
+         dict(retry=RetryPolicy(**_RETRY)),
+         faults.FaultPlan([F("broker.plan", "error", times=1)],
+                          seed=seed), False),
+        ("cache_faults", "jnp",
+         dict(retry=RetryPolicy(**_RETRY), cache=SliceCache()),
+         faults.FaultPlan([F("cache.lookup", "error", times=1),
+                           F("cache.insert", "error", times=1)],
+                          seed=seed), False),
+        ("pod_dropout_reroute", "shard",
+         dict(retry=RetryPolicy(**_RETRY)),
+         faults.FaultPlan([F("shard.pod", "pod_dropout", times=1)],
+                          seed=seed), True),
+        ("shard_corrupt_count", "shard",
+         dict(retry=RetryPolicy(**_RETRY)),
+         faults.FaultPlan([F("shard.count", "corrupt_count", times=None,
+                             factor=4.0, bias=7)], seed=seed), False),
+        ("probabilistic_mix", "jnp",
+         dict(retry=RetryPolicy(max_attempts=16, **_RETRY)),
+         faults.FaultPlan([F("engine.dispatch", "error", times=None,
+                             probability=0.4),
+                           F("engine.count", "corrupt_count", times=None,
+                             probability=0.3, factor=6.0)], seed=seed),
+         False),
+    ]
+
+
+def run_matrix(seeds: int = 3, n: int = 500, q: int = 64,
+               d: float = 4.0) -> dict:
+    import jax
+    rng = np.random.default_rng(0)
+    db = TrajectoryDB.from_segments(
+        _segments(rng, n),
+        policy=ExecutionPolicy(num_bins=64, batching="periodic",
+                               batch_params={"s": 16}))
+    queries = _segments(rng, q)
+    bases = {b: db.query(queries, d, backend=b)
+             for b in ("jnp", "pallas", "shard")}
+    rows, failures = [], 0
+    for seed in range(seeds):
+        for name, backend, kw, plan, cross_rung in _scenarios(seed):
+            pol = db.policy
+            if name == "plan_failure_pruning_ladder":
+                pol = pol.with_(pruning="hierarchical")
+            broker = db.broker(backend=backend, policy=pol, **kw)
+            t0 = time.perf_counter()
+            err = verdict = None
+            try:
+                with faults.active(plan):
+                    ticket = broker.submit(queries, d)
+                    res = ticket.result()
+                verdict = _check(res, bases[backend],
+                                 cross_rung and ticket.health.degraded)
+            except Exception as e:           # noqa: BLE001 — reported below
+                err = f"{type(e).__name__}: {e}"
+            sec = time.perf_counter() - t0
+            ok = err is None and verdict is None
+            failures += not ok
+            rows.append({
+                "seed": seed, "scenario": name, "backend": backend,
+                "ok": ok, "error": err, "verdict": verdict,
+                "seconds": sec,
+                "fault_events": [dict(site=e.site, kind=e.kind,
+                                      index=e.index)
+                                 for e in plan.events],
+                "fired": plan.report()["fired"],
+                "retries": None if err else ticket.health.retries,
+                "stragglers_reissued": (None if err else
+                                        ticket.health.stragglers_reissued),
+                "degradations": [] if err else
+                                [f"{g.stage}:{g.before}->{g.after}"
+                                 for g in ticket.health.degradations],
+            })
+            status = "ok" if ok else f"FAIL({err or verdict})"
+            print(f"chaos,seed={seed},{name},backend={backend},{status},"
+                  f"seconds={sec:.3f}", flush=True)
+    return {"bench": "CHAOS_REPORT", "seeds": seeds,
+            "device_count": jax.device_count(),
+            "cells": len(rows), "failures": failures, "rows": rows}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--out", default="CHAOS_REPORT.json")
+    args = ap.parse_args(argv)
+    report = run_matrix(seeds=args.seeds)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# chaos matrix: {report['cells']} cells, "
+          f"{report['failures']} failures, "
+          f"{report['device_count']} device(s) -> {args.out}")
+    return 1 if report["failures"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

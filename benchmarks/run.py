@@ -52,6 +52,13 @@ dispatch matrix on C3 (spatial vs pod-local hierarchical planning ×
 dense vs sparse routed execution, with pods-skipped accounting) and the
 repeated-sensor result-cache section (broker with vs without a
 ``SliceCache``).
+
+The ``bench_pr10`` entry writes ``BENCH_PR10.json`` (see
+``benchmarks.fault_bench.canonical_report_pr10``): the S2 executor rows
+re-run with all fault-injection hooks present but disarmed (ratioed
+against ``BENCH_PR8.json`` — the < 2 % hook-overhead gate) plus the
+broker recovery-latency section (clean vs one injected kernel failure
+vs one dropped pod, all verified row-for-row against the clean run).
 """
 from __future__ import annotations
 
@@ -91,12 +98,16 @@ def main(argv=None) -> int:
                     help="baseline report bench_pr7 compares against")
     ap.add_argument("--baseline8", default="BENCH_PR7.json",
                     help="baseline report bench_pr8 compares against")
+    ap.add_argument("--bench-out10", default="BENCH_PR10.json",
+                    help="path for the bench_pr10 JSON report")
+    ap.add_argument("--baseline10", default="BENCH_PR8.json",
+                    help="baseline report bench_pr10 compares against")
     args = ap.parse_args(argv)
 
-    from benchmarks import (broker_bench, fig3_interactions, kernel_bench,
-                            lint_bench, prune_bench, roofline_report,
-                            shard_bench, speedup_vs_rtree, table2_batching,
-                            table3_perfmodel)
+    from benchmarks import (broker_bench, fault_bench, fig3_interactions,
+                            kernel_bench, lint_bench, prune_bench,
+                            roofline_report, shard_bench, speedup_vs_rtree,
+                            table2_batching, table3_perfmodel)
 
     def bench_pr2():
         report = kernel_bench.canonical_report(quick=not args.full)
@@ -201,6 +212,22 @@ def main(argv=None) -> int:
             print(f"# baseline {args.baseline8} not found — no comparison")
         print(f"# bench_pr8 report -> {args.bench_out8}")
 
+    def bench_pr10():
+        report = fault_bench.canonical_report_pr10(quick=not args.full)
+        with open(args.bench_out10, "w") as f:
+            json.dump(report, f, indent=2)
+        kernel_bench.print_executor_rows(report["executor"])
+        fault_bench.print_recovery_rows(report["recovery"])
+        if os.path.exists(args.baseline10):
+            with open(args.baseline10) as f:
+                baseline = json.load(f)
+            for line in kernel_bench.compare_executor_sections(report,
+                                                               baseline):
+                print(line)
+        else:
+            print(f"# baseline {args.baseline10} not found — no comparison")
+        print(f"# bench_pr10 report -> {args.bench_out10}")
+
     benches = {
         "fig3": lambda: fig3_interactions.main(),
         "table2": lambda: table2_batching.main(),
@@ -216,6 +243,7 @@ def main(argv=None) -> int:
         "bench_pr6": bench_pr6,
         "bench_pr7": bench_pr7,
         "bench_pr8": bench_pr8,
+        "bench_pr10": bench_pr10,
         "roofline": lambda: roofline_report.main(),
     }
     only = set(args.only.split(",")) if args.only else None

@@ -13,7 +13,9 @@ __version__ = "0.1.0"
 
 _API_NAMES = ("TrajectoryDB", "ExecutionPolicy", "QueryResult",
               "QueryBackend", "BACKENDS", "QueryBroker", "QueryTicket",
-              "GroupSlice", "AdmissionError", "DeadlineExceededError")
+              "GroupSlice", "AdmissionError", "DeadlineExceededError",
+              "CapacityError", "PodFailedError", "RetryPolicy",
+              "TicketHealth", "Degradation", "FaultPlan", "FaultSpec")
 
 
 def __getattr__(name: str):

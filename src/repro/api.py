@@ -58,6 +58,7 @@ from __future__ import annotations
 
 import copy
 import dataclasses
+import math
 from typing import Callable, Mapping, Protocol, runtime_checkable
 
 import numpy as np
@@ -65,6 +66,7 @@ import numpy as np
 from repro.core.batching import ALGORITHMS, BatchPlan
 from repro.core.engine import (DistanceThresholdEngine, ExecStats, ResultSet,
                                brute_force)
+from repro.core.errors import CapacityError, PodFailedError
 from repro.core.index import DEFAULT_NUM_BINS, TemporalBinIndex
 from repro.core.planner import PRUNINGS, QueryPlan, QueryPlanner
 from repro.core.rtree import RTreeEngine
@@ -140,6 +142,12 @@ class ExecutionPolicy:
     #: executor dispatch groups per query set (None → one group = classic
     #: O(1)-sync shape; k → marshalling of group i overlaps compute of i+1)
     group_size: int | None = None
+    #: bound on per-batch overflow re-dispatches (PR 10).  The kernels
+    #: report exact counts so one retry normally converges; a batch still
+    #: overflowing after this many enlargements raises a structured
+    #: :class:`~repro.core.errors.CapacityError` carrying the exact count
+    #: instead of growing (and recompiling) without bound.
+    max_capacity_retries: int = 3
 
     # -- sharded mesh backend (backend="shard") -------------------------
     shard_pods: int | None = None         # None → every local device
@@ -213,6 +221,10 @@ class QueryResult:
     backend: str
     stats: ExecStats | None = None            # engine backends only
     plan: BatchPlan | QueryPlan | None = None  # engine backends only
+    #: True when the serving stack produced this result through a
+    #: degradation-ladder step (slower route, byte-identical rows) or when
+    #: it is a :meth:`QueryTicket.partial_result` of an incomplete ticket.
+    degraded: bool = False
 
     def __len__(self) -> int:
         return int(self.entry_idx.shape[0])
@@ -355,6 +367,52 @@ class ShardBackend:
 
 
 # ----------------------------------------------------------------------
+# Input hardening (PR 10).  Malformed workloads fail *here*, with a clear
+# message, instead of surfacing as NaN-poisoned distances, empty results,
+# or shape errors deep inside a kernel.  The checks are O(n) numpy scans —
+# negligible next to packing/planning — and accept every finite workload
+# the generators produce (see the property test in tests/test_faults.py).
+# ----------------------------------------------------------------------
+def _validate_segments(segments: SegmentArray, what: str) -> None:
+    """Reject NaN/Inf coordinates or timestamps and zero-length (or
+    inverted) time intervals.  ``what`` names the offending input
+    ("entry segments" / "queries") in the error message."""
+    if len(segments) == 0:
+        return
+    for field, arr in (("coordinates", segments.xs),
+                       ("coordinates", segments.ys),
+                       ("coordinates", segments.zs),
+                       ("coordinates", segments.xe),
+                       ("coordinates", segments.ye),
+                       ("coordinates", segments.ze),
+                       ("timestamps", segments.ts),
+                       ("timestamps", segments.te)):
+        arr = np.asarray(arr)
+        if not np.isfinite(arr).all():
+            raise ValueError(
+                f"{what} contain non-finite (NaN/Inf) {field}; the distance"
+                f" kernels require finite inputs — clean the workload before"
+                f" building/querying the database")
+    bad = np.asarray(segments.te) <= np.asarray(segments.ts)
+    if bad.any():
+        i = int(np.argmax(bad))
+        raise ValueError(
+            f"{what} contain a zero-length or inverted time interval at "
+            f"index {i} (t_start={float(np.asarray(segments.ts)[i])!r}, "
+            f"t_end={float(np.asarray(segments.te)[i])!r}); every segment "
+            f"must satisfy t_end > t_start")
+
+
+def _validate_threshold(d) -> float:
+    """Reject a non-finite or negative distance threshold."""
+    d = float(d)
+    if not math.isfinite(d) or d < 0.0:
+        raise ValueError(
+            f"distance threshold d must be finite and >= 0, got {d!r}")
+    return d
+
+
+# ----------------------------------------------------------------------
 # The facade.
 # ----------------------------------------------------------------------
 class TrajectoryDB:
@@ -367,6 +425,7 @@ class TrajectoryDB:
 
     def __init__(self, segments: SegmentArray, *,
                  policy: ExecutionPolicy | None = None):
+        _validate_segments(segments, "entry segments")
         self.policy = policy or ExecutionPolicy()
         # The engine owns sorting, the index and the packed device copy;
         # the facade aliases them so there is exactly one of each.
@@ -436,7 +495,8 @@ class TrajectoryDB:
         different knobs get (and reuse) their own adapters."""
         if name in ("pallas", "jnp"):
             return (pol.interpret, pol.cand_blk, pol.qry_blk, pol.capacity,
-                    pol.compaction, pol.pipeline, pol.pruning)
+                    pol.compaction, pol.pipeline, pol.pruning,
+                    pol.max_capacity_retries)
         if name == "shard":
             # compaction (and kernel pruning) only matter on the Pallas
             # path — key on the effective values so policies differing in
@@ -454,7 +514,7 @@ class TrajectoryDB:
             return (pol.shard_pods, pol.shard_capacity, pol.shard_use_pallas,
                     pol.shard_balance, pol.interpret, pol.cand_blk,
                     pol.qry_blk, compaction, pol.pipeline, pruning,
-                    pol.pruning, pol.shard_sparse)
+                    pol.pruning, pol.shard_sparse, pol.max_capacity_retries)
         if name == "rtree":
             return (pol.rtree_r, pol.rtree_fanout, pol.rtree_threads)
         return (pol.brute_chunk,)
@@ -479,6 +539,7 @@ class TrajectoryDB:
                 eng.compaction = pol.compaction
                 eng.pipeline = pol.pipeline
                 eng.pruning = pol.pruning
+                eng.max_capacity_retries = pol.max_capacity_retries
                 self._backends[key] = EngineBackend(name, eng)
             elif name == "shard":
                 from repro.core.distributed import ShardedEngine
@@ -491,7 +552,8 @@ class TrajectoryDB:
                     cand_blk=pol.cand_blk, qry_blk=pol.qry_blk,
                     compaction=compaction, pipeline=pol.pipeline,
                     balance=pol.shard_balance, pruning=pol.pruning,
-                    index=self.index, sparse=pol.shard_sparse))
+                    index=self.index, sparse=pol.shard_sparse,
+                    max_capacity_retries=pol.max_capacity_retries))
             elif name == "rtree":
                 self._backends[key] = RTreeBackend(
                     RTreeEngine(self.segments, r=pol.rtree_r,
@@ -614,9 +676,11 @@ class TrajectoryDB:
         the same canonical result, in decreasing order of work avoided)
         for the engine backends (``"pallas"``/``"jnp"``/``"shard"``).
         """
+        d = _validate_threshold(d)
         if len(queries) == 0:
             return QueryResult.from_result_set(
                 ResultSet.empty(), order=None, d=float(d), backend=backend)
+        _validate_segments(queries, "queries")
         pol = self._resolve_policy(batching, policy, batch_params,
                                    compaction, pipeline, pruning)
         be = self.backend(backend, pol)
@@ -663,10 +727,12 @@ class TrajectoryDB:
             raise ValueError(
                 f"query_stream requires an engine backend "
                 f"{ENGINE_BACKENDS}, got {backend!r}")
+        d = _validate_threshold(d)
         if len(queries) == 0:
             return (QueryResult.from_result_set(
                 ResultSet.empty(), order=None, d=float(d), backend=backend),
                 SchedulerStats())
+        _validate_segments(queries, "queries")
         pol = self._resolve_policy(batching, policy, batch_params,
                                    compaction, pipeline, pruning)
         be = self.backend(backend, pol)
@@ -754,9 +820,19 @@ def __getattr__(name: str):
     # but defined in repro.serve.broker, which imports this module — the
     # lazy hook breaks the cycle.
     if name in ("QueryBroker", "QueryTicket", "GroupSlice",
-                "AdmissionError", "DeadlineExceededError"):
+                "AdmissionError", "DeadlineExceededError",
+                "TicketHealth", "Degradation"):
         from repro.serve import broker as _broker
         return getattr(_broker, name)
+    if name == "RetryPolicy":
+        from repro.serve.retry import RetryPolicy
+        return RetryPolicy
+    if name == "FaultPlan":
+        from repro.faults import FaultPlan
+        return FaultPlan
+    if name == "FaultSpec":
+        from repro.faults import FaultSpec
+        return FaultSpec
     raise AttributeError(f"module 'repro.api' has no attribute {name!r}")
 
 
@@ -765,4 +841,6 @@ __all__ = [
     "QueryBackend", "QueryResult", "TrajectoryDB", "EngineBackend",
     "RTreeBackend", "BruteBackend", "ShardBackend", "QueryBroker",
     "QueryTicket", "GroupSlice", "AdmissionError", "DeadlineExceededError",
+    "CapacityError", "PodFailedError", "RetryPolicy", "TicketHealth",
+    "Degradation", "FaultPlan", "FaultSpec",
 ]

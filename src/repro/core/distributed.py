@@ -45,6 +45,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import faults
 from repro.core.executor import Dispatch, ResultSet, make_executor
 from repro.core.planner import as_query_plan, bucket_capacity
 from repro.core.segments import SegmentArray
@@ -414,6 +415,15 @@ class _PodShardDispatcher:
     def dispatch(self, batch, capacity: int):
         se = self.engine
         los, lens = self._pod_lens(batch)
+        if faults.armed():
+            faults.inject("shard.dispatch", q_first=int(batch.q_first))
+            # Pod-dropout target: one consultation per *live* pod of this
+            # dispatch, so a plan can drop exactly the pod(s) it names
+            # (``match={"pod": k}``) and only when they hold real work.
+            for p, n in enumerate(lens):
+                if n:
+                    faults.inject("shard.pod", pod=p,
+                                  q_first=int(batch.q_first))
         c_loc = bucket_capacity(max(max(lens), 1), se.cand_blk)
         # Pod-local candidate blocks, padded with rows at _pad_e (never
         # overlaps real data, real queries, or query padding at _pad_q).
@@ -459,7 +469,11 @@ class _PodShardDispatcher:
         return self._launch(dp.batch, capacity, dp.ctx)
 
     def count(self, dp) -> int:
-        return int(dp.out["total"])
+        count = int(dp.out["total"])
+        if faults.armed():
+            count = faults.corrupt("shard.count", count,
+                                   q_first=int(dp.batch.q_first))
+        return count
 
     def tile_stats(self, dp) -> tuple[int, int]:
         """Kernel-level pruning counters summed over the pods (executor
@@ -473,11 +487,15 @@ class _PodShardDispatcher:
                 if per_shard > dp.capacity else None)
 
     def marshal(self, dp, count: int):
-        if count == 0:
-            return None
+        if faults.armed():
+            faults.inject("shard.marshal", q_first=int(dp.batch.q_first))
         db = self.engine.db
         ent = np.asarray(dp.out["entry_idx"])
+        # Mask on the -1 pads rather than trusting ``count`` (the psum
+        # total may be corrupted by a chaos plan); no valid rows = no part.
         keep = ent >= 0
+        if not keep.any():
+            return None
         e_global = ent[keep].astype(np.int64)
         if self.engine.plan_pruning == "hierarchical":
             # device rows sit at permuted positions; map back so the
@@ -546,7 +564,8 @@ class ShardedEngine:
                  cand_blk: int = 256, qry_blk: int = 256,
                  compaction: str = "dense", pipeline: bool = True,
                  balance: str = "time", pruning: str = "spatial",
-                 index=None, sparse: bool = True):
+                 index=None, sparse: bool = True,
+                 max_capacity_retries: int = 3):
         self.db = db if db.is_sorted() else db.sort_by_tstart()
         self._packed = self.db.packed()
         if mesh is None:
@@ -568,6 +587,7 @@ class ShardedEngine:
         self.compaction = compaction
         self.pipeline = pipeline
         self.sparse = bool(sparse)
+        self.max_capacity_retries = int(max_capacity_retries)
         # Planner-level pruning: hierarchical needs the pod-local K-box
         # rebuild (from the facade's base index); without one, shard
         # plans can only use bin-granular (spatial) ranges.
@@ -641,7 +661,9 @@ class ShardedEngine:
         if dispatcher is None:
             dispatcher = self.dispatcher(queries.packed(), d)
         executor = make_executor(dispatcher, pipeline=use_pipeline,
-                                 on_group=on_group)
+                                 on_group=on_group,
+                                 max_capacity_retries=getattr(
+                                     self, "max_capacity_retries", 3))
         return executor.run(qplan)
 
 
@@ -788,6 +810,70 @@ class PodRouter:
         return self.engine.execute(
             queries, d, plan, pipeline=pipeline, on_group=on_group,
             dispatcher=self.dispatcher(queries.packed(), d))
+
+
+class PodFallbackDispatcher:
+    """Degraded route for a broken mesh (PR 10): execute a *shard plan*'s
+    batches on the single device, off-mesh.
+
+    When a pod drops out (:class:`~repro.core.errors.PodFailedError`),
+    the broker's degradation ladder swaps a ticket's routed dispatcher
+    for this one: each batch's whole candidate range — the dropped pod's
+    ownership slice included — is evaluated by one ``ops.query_block``
+    dispatch on the default device via the jnp oracle, sliced from the
+    same (possibly permuted) packed layout the shard plan addresses, so
+    the re-routed results stay byte-identical to the mesh's.  Slower —
+    never wrong.
+    """
+
+    def __init__(self, engine: ShardedEngine, q_packed: np.ndarray,
+                 d: float):
+        self.engine = engine
+        self.q_packed = q_packed
+        self.d = float(d)
+
+    def dispatch(self, batch, capacity: int) -> Dispatch:
+        se = self.engine
+        src = (se._packed_perm if se.plan_pruning == "hierarchical"
+               else se._packed)
+        e_slice = src[batch.cand_first:batch.cand_last + 1]
+        q_slice = self.q_packed[batch.q_first:batch.q_last + 1]
+        out = ops.query_block(
+            e_slice, q_slice, np.float32(self.d), capacity=capacity,
+            use_pallas=False, interpret=se.interpret,
+            cand_blk=se.cand_blk, qry_blk=se.qry_blk,
+            compaction="dense", pruning="none")
+        return Dispatch(batch, capacity, out)
+
+    def count(self, dp: Dispatch) -> int:
+        return int(dp.out["count"])
+
+    def retry_capacity(self, dp: Dispatch) -> int | None:
+        # Shard-plan capacities are *per shard*; the single device holds
+        # the whole batch, so the first dispatch may legitimately
+        # overflow — one bucketed retry reaches the exact global count.
+        count = self.count(dp)
+        return bucket_capacity(count) if count > dp.capacity else None
+
+    def marshal(self, dp: Dispatch, count: int) -> ResultSet | None:
+        se = self.engine
+        db = se.db
+        ent = np.asarray(dp.out["entry_idx"])
+        keep = ent >= 0
+        if not keep.any():
+            return None
+        e_global = dp.batch.cand_first + ent[keep].astype(np.int64)
+        if se.plan_pruning == "hierarchical" and se._perm is not None:
+            e_global = se._perm[e_global]
+        q_local = np.asarray(dp.out["query_idx"])[keep].astype(np.int64)
+        return ResultSet(
+            entry_idx=e_global,
+            entry_traj=db.traj_id[e_global].astype(np.int64),
+            entry_seg=db.seg_id[e_global].astype(np.int64),
+            query_idx=dp.batch.q_first + q_local,
+            t_enter=np.asarray(dp.out["t_enter"])[keep],
+            t_exit=np.asarray(dp.out["t_exit"])[keep],
+        )
 
 
 class DistributedEngine:

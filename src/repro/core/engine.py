@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro import faults
 from repro.core.batching import BatchPlan
 from repro.core.executor import (BatchStats, Dispatch,  # noqa: F401 (stable re-exports)
                                  ExecStats, ResultSet, make_executor)
@@ -71,6 +72,10 @@ class _QueryBlockDispatcher:
 
     def dispatch(self, batch, capacity: int) -> Dispatch:
         eng = self.engine
+        if faults.armed():
+            faults.inject("engine.dispatch", q_first=int(batch.q_first),
+                          use_pallas=eng.use_pallas,
+                          compaction=eng.compaction)
         # Hierarchical pruning plans box-level sub-ranges in the index's
         # *permuted* segment order, so the dispatched slices come from the
         # permuted packed copy (identical to ``_packed`` when K=1).
@@ -86,7 +91,11 @@ class _QueryBlockDispatcher:
         return Dispatch(batch, capacity, out)
 
     def count(self, dp: Dispatch) -> int:
-        return int(dp.out["count"])
+        count = int(dp.out["count"])
+        if faults.armed():
+            count = faults.corrupt("engine.count", count,
+                                   q_first=int(dp.batch.q_first))
+        return count
 
     def tile_stats(self, dp: Dispatch) -> tuple[int, int]:
         """Kernel-level pruning counters (executor hook; see
@@ -98,11 +107,19 @@ class _QueryBlockDispatcher:
         return _bucket(count) if count > dp.capacity else None
 
     def marshal(self, dp: Dispatch, count: int) -> ResultSet | None:
-        if count == 0:
-            return None
+        if faults.armed():
+            faults.inject("engine.marshal", q_first=int(dp.batch.q_first))
         batch, out, db = dp.batch, dp.out, self.engine.db
-        e_local = np.asarray(out["entry_idx"][:count])
-        q_local = np.asarray(out["query_idx"][:count])
+        # Mask on the buffer's -1 pads (every kernel variant initializes the
+        # index buffers to -1) instead of trusting ``count``: a corrupted
+        # overflow count then costs at most one spurious bounded retry — it
+        # can never leak pad rows into results nor drop real ones.
+        e_buf = np.asarray(out["entry_idx"])
+        keep = e_buf >= 0
+        if not keep.any():
+            return None
+        e_local = e_buf[keep]
+        q_local = np.asarray(out["query_idx"])[keep]
         e_global = batch.cand_first + e_local.astype(np.int64)
         if self.engine.pruning == "hierarchical":
             perm = self.engine.index.perm
@@ -115,8 +132,8 @@ class _QueryBlockDispatcher:
             entry_traj=db.traj_id[e_global].astype(np.int64),
             entry_seg=db.seg_id[e_global].astype(np.int64),
             query_idx=batch.q_first + q_local.astype(np.int64),
-            t_enter=np.asarray(out["t_enter"][:count]),
-            t_exit=np.asarray(out["t_exit"][:count]),
+            t_enter=np.asarray(out["t_enter"])[keep],
+            t_exit=np.asarray(out["t_exit"])[keep],
         )
 
 
@@ -128,7 +145,7 @@ class DistanceThresholdEngine:
                  cand_blk: int = DEFAULT_CAND_BLK, qry_blk: int = DEFAULT_QRY_BLK,
                  default_capacity: int = 4096, compaction: str = "fused",
                  pipeline: bool = True, pruning: str = "spatial",
-                 index_kboxes: int = 1):
+                 index_kboxes: int = 1, max_capacity_retries: int = 3):
         """``use_pallas=False`` routes interactions through the jnp oracle —
         the right default on CPU where Pallas runs in interpret mode.  Both
         paths share identical semantics (tests assert equality).
@@ -176,6 +193,9 @@ class DistanceThresholdEngine:
         self.compaction = compaction
         self.pipeline = pipeline
         self.pruning = pruning
+        # Bounded overflow-retry (PR 10): batches whose hits still exceed
+        # capacity after this many doublings raise CapacityError.
+        self.max_capacity_retries = int(max_capacity_retries)
 
     # ------------------------------------------------------------------
     def dispatcher(self, queries_packed: np.ndarray,
@@ -209,7 +229,9 @@ class DistanceThresholdEngine:
         qplan = as_query_plan(plan, default_capacity=self.default_capacity)
         use_pipeline = self.pipeline if pipeline is None else pipeline
         executor = make_executor(self.dispatcher(queries.packed(), d),
-                                 pipeline=use_pipeline, on_group=on_group)
+                                 pipeline=use_pipeline, on_group=on_group,
+                                 max_capacity_retries=getattr(
+                                     self, "max_capacity_retries", 3))
         return executor.run(qplan)
 
 

@@ -50,6 +50,7 @@ import jax
 import numpy as np
 
 from repro.core.batching import QueryBatch
+from repro.core.errors import CapacityError
 from repro.core.planner import QueryPlan
 
 
@@ -163,6 +164,11 @@ class ExecStats:
     #: the in-kernel tile early-out is accounted per batch in
     #: ``BatchStats.pruned_tiles`` / :attr:`pruned_tiles`.
     pruned_interactions: int = 0
+    #: degradation-ladder steps taken while producing this result (PR 10):
+    #: populated by the serving broker when repeated failures forced a
+    #: compaction / backend / pruning / route downgrade.  Empty on every
+    #: clean execution.
+    degradations: list = dataclasses.field(default_factory=list)
 
     @property
     def pruned_tiles(self) -> int:
@@ -301,9 +307,11 @@ class SyncExecutor:
     pipelined = False
 
     def __init__(self, dispatcher: BatchDispatcher, *,
-                 on_group: GroupHook | None = None):
+                 on_group: GroupHook | None = None,
+                 max_capacity_retries: int = 3):
         self.dispatcher = dispatcher
         self.on_group = on_group
+        self.max_capacity_retries = int(max_capacity_retries)
 
     def run(self, plan: QueryPlan) -> tuple[ResultSet, ExecStats]:
         t_begin = time.perf_counter()
@@ -332,6 +340,10 @@ class SyncExecutor:
                     retries = 0
                     retry_s = 0.0
                     while (cap2 := disp.retry_capacity(dp)) is not None:
+                        if retries >= self.max_capacity_retries:
+                            raise CapacityError(
+                                count, dp.capacity, batch_index=i,
+                                retries=retries)
                         t0r = time.perf_counter()
                         dp = _redispatch(disp, dp, cap2)
                         jax.block_until_ready(dp.out)
@@ -379,9 +391,11 @@ class PipelinedExecutor:
     pipelined = True
 
     def __init__(self, dispatcher: BatchDispatcher, *,
-                 on_group: GroupHook | None = None):
+                 on_group: GroupHook | None = None,
+                 max_capacity_retries: int = 3):
         self.dispatcher = dispatcher
         self.on_group = on_group
+        self.max_capacity_retries = int(max_capacity_retries)
 
     def run(self, plan: QueryPlan) -> tuple[ResultSet, ExecStats]:
         t_begin = time.perf_counter()
@@ -392,6 +406,7 @@ class PipelinedExecutor:
         slots: dict[int, Dispatch] = {}
         counts: dict[int, int] = {}
         retried: dict[int, float] = {}     # batch idx -> retry wall share
+        rounds: dict[int, int] = {}        # batch idx -> overflow retries
         parts: dict[int, ResultSet] = {}
         timing = {"dispatch": 0.0, "sync": 0.0, "syncs": 0}
 
@@ -419,23 +434,35 @@ class PipelinedExecutor:
                 for i in live:
                     counts[i] = disp.count(slots[i])
                 # Re-dispatch only overflowed batches; exact counts make one
-                # retry always sufficient.
+                # retry sufficient on honest devices, so the bound below only
+                # bites when counts are corrupted or capacities adversarial.
                 t_retry = time.perf_counter()
-                redo = []
-                for i in live:
-                    cap2 = disp.retry_capacity(slots[i])
-                    if cap2 is not None:
+                any_redo = False
+                while True:
+                    redo = []
+                    for i in live:
+                        cap2 = disp.retry_capacity(slots[i])
+                        if cap2 is None:
+                            continue
+                        if rounds.get(i, 0) >= self.max_capacity_retries:
+                            raise CapacityError(
+                                counts[i], slots[i].capacity, batch_index=i,
+                                retries=rounds.get(i, 0))
+                        rounds[i] = rounds.get(i, 0) + 1
                         slots[i] = _redispatch(disp, slots[i], cap2)
                         redo.append(i)
-                if redo:
+                    if not redo:
+                        break
+                    any_redo = True
                     jax.block_until_ready([slots[i].out for i in redo])
                     timing["syncs"] += 1
                     for i in redo:
                         counts[i] = disp.count(slots[i])
-                retry_s = time.perf_counter() - t_retry if redo else 0.0
+                retry_s = time.perf_counter() - t_retry if any_redo else 0.0
                 timing["sync"] += (time.perf_counter() - t0) - retry_s
-                for i in redo:
-                    retried[i] = retry_s / len(redo)
+                grp_redo = [i for i in live if rounds.get(i, 0)]
+                for i in grp_redo:
+                    retried[i] = retry_s / len(grp_redo)
                 # Host-side marshalling — by now the next group's phase A
                 # has already queued its device work, so this overlaps
                 # compute.
@@ -463,7 +490,7 @@ class PipelinedExecutor:
             stats.append(BatchStats(
                 batch.size, batch.num_candidates,
                 batch.size * batch.num_candidates, counts.get(i, 0), 0.0,
-                1 if i in retried else 0, retried.get(i, 0.0),
+                rounds.get(i, 0), retried.get(i, 0.0),
                 pruned_tiles=pt, num_tiles=nt))
         total = time.perf_counter() - t_begin
         ordered = [parts[i] for i in sorted(parts)]
@@ -478,12 +505,16 @@ class PipelinedExecutor:
 
 
 def make_executor(dispatcher: BatchDispatcher, *, pipeline: bool,
-                  on_group: GroupHook | None = None):
+                  on_group: GroupHook | None = None,
+                  max_capacity_retries: int = 3):
     """The executor for ``pipeline=True`` (two-phase, O(1) syncs per group)
     or ``pipeline=False`` (per-batch sync loop with observable timings).
-    ``on_group`` fires as each dispatch group's results are marshalled."""
+    ``on_group`` fires as each dispatch group's results are marshalled.
+    ``max_capacity_retries`` bounds overflow re-dispatches per batch;
+    exceeding it raises :class:`~repro.core.errors.CapacityError`."""
     cls = PipelinedExecutor if pipeline else SyncExecutor
-    return cls(dispatcher, on_group=on_group)
+    return cls(dispatcher, on_group=on_group,
+               max_capacity_retries=max_capacity_retries)
 
 
 __all__ = [

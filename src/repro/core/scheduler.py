@@ -43,6 +43,7 @@ import time
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from typing import Callable
 
+from repro import faults
 from repro.core.batching import BatchPlan
 from repro.core.engine import DistanceThresholdEngine, ResultSet
 from repro.core.planner import (DEFAULT_CAPACITY, QueryPlan, as_query_plan,
@@ -54,8 +55,9 @@ from repro.core.segments import SegmentArray
 class SchedulerStats:
     completed: int = 0             #: batches completed (first copy)
     groups: int = 0                #: batch groups formed (worker-call units)
-    reissued: int = 0              #: groups re-issued past their deadline
+    reissued: int = 0              #: groups re-issued (deadline or failure)
     duplicates_dropped: int = 0    #: late duplicate group completions dropped
+    failures: int = 0              #: worker executions that raised (PR 10)
     wall_seconds: float = 0.0
     group_sizes: list = dataclasses.field(default_factory=list)
     #: per-pod routing accounting when the engine is a ``PodRouter``
@@ -85,7 +87,8 @@ class DeadlineScheduler:
                  min_deadline: float = 0.05,
                  predict_seconds: Callable | None = None,
                  delay_hook: Callable | None = None,
-                 group_size: int | None = None):
+                 group_size: int | None = None,
+                 max_failures: int = 3):
         self.engine = engine
         self.workers = workers
         self.slack = slack
@@ -93,6 +96,10 @@ class DeadlineScheduler:
         self.predict_seconds = predict_seconds
         self.delay_hook = delay_hook          # (group_idx, attempt) -> None
         self.group_size = group_size          # None -> auto (>= 2 per call)
+        # Bounded *failure* re-issue (PR 10): a group whose worker raises
+        # is re-run like a deadline straggler, at most max_failures
+        # executions; the max_failures-th failure propagates to the caller.
+        self.max_failures = int(max_failures)
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------------
@@ -144,6 +151,9 @@ class DeadlineScheduler:
                  group_idx: int, group: list[int], attempt: int):
         if self.delay_hook is not None:
             self.delay_hook(group_idx, attempt)
+        if faults.armed():
+            faults.inject("scheduler.worker", group=group_idx,
+                          attempt=attempt)
         sub = plan.subplan(group)
         rs, _ = self.engine.execute(queries, d, sub)
         return group_idx, attempt, rs
@@ -171,6 +181,7 @@ class DeadlineScheduler:
         futures = {}
         deadlines = {}
         attempts = {g: 0 for g in range(len(groups))}
+        failed: dict[int, int] = {}
         try:
             for g, group in enumerate(groups):
                 fut = pool.submit(self._run_one, queries, d, qplan, g,
@@ -189,8 +200,32 @@ class DeadlineScheduler:
                 # group-granular sync — the analogue of the executors'
                 # phase B, needed for deadline tracking and re-issue.
                 for fut in done:                     # lint: sync-point
-                    futures.pop(fut)
-                    g, attempt, rs = fut.result()    # lint: sync-point
+                    g_of = futures.pop(fut)
+                    try:
+                        g, attempt, rs = fut.result()    # lint: sync-point
+                    except Exception:
+                        # Failed execution: re-issue like a deadline
+                        # straggler, bounded by max_failures; the final
+                        # failure propagates (structured errors like
+                        # CapacityError surface unchanged).
+                        with self._lock:
+                            have = g_of in results
+                        stats.failures += 1
+                        if have:
+                            stats.duplicates_dropped += 1
+                            continue
+                        failed[g_of] = failed.get(g_of, 0) + 1
+                        if failed[g_of] >= self.max_failures:
+                            raise
+                        attempts[g_of] += 1
+                        stats.reissued += 1
+                        deadlines[g_of] = now + self._deadline_for(
+                            [qplan.batches[i] for i in groups[g_of]])
+                        fut2 = pool.submit(self._run_one, queries, d,
+                                           qplan, g_of, groups[g_of],
+                                           attempts[g_of])
+                        futures[fut2] = g_of
+                        continue
                     with self._lock:
                         if g in results:
                             stats.duplicates_dropped += 1

@@ -58,6 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import faults
 from repro.kernels import distthresh as _dt
 from repro.kernels import ref
 from repro.kernels.distthresh import (DEFAULT_CAND_BLK, DEFAULT_QRY_BLK,
@@ -375,6 +376,12 @@ def query_block(entries: jnp.ndarray, queries: jnp.ndarray, d, *,
     if pruning not in PRUNINGS:
         raise ValueError(f"unknown pruning {pruning!r}; "
                          f"choose from {PRUNINGS}")
+    # Chaos hook (PR 10), gated to host-side dispatch so it can never fire
+    # inside an outer trace (shard_map passes tracers for entries/queries).
+    if faults.armed() and isinstance(entries, np.ndarray):
+        faults.inject("ops.query_block", compaction=compaction,
+                      pruning=pruning, use_pallas=use_pallas,
+                      rows=int(entries.shape[0]))
     prune_arrays = {}
     host_prunable = (use_pallas and compaction in ("fused", "fused_rowloop")
                      and isinstance(entries, np.ndarray)

@@ -24,6 +24,9 @@ TRACE002    error     impure calls (time/datetime/random) under trace
 TRACE003    error     captured host state mutated under trace
 DEAD001     warn      modules unreachable from repro.api / repro.serve /
                       tests / benchmarks
+FAULT001    error     ``faults.inject``/``faults.corrupt`` call outside an
+                      ``if faults.armed():`` guard (disarmed hot path must
+                      stay one cached-False check)
 ==========  ========  =====================================================
 
 Suppression: ``# lint: ignore[RULE]`` (comma-separated ids or ``*``) on

@@ -81,5 +81,6 @@ from repro.lint.rules import sync    # noqa: E402,F401
 from repro.lint.rules import kern    # noqa: E402,F401
 from repro.lint.rules import trace   # noqa: E402,F401
 from repro.lint.rules import dead    # noqa: E402,F401
+from repro.lint.rules import fault   # noqa: E402,F401
 
 __all__ = ["ERROR", "WARN", "RULES", "Rule", "Violation", "register", "rule"]

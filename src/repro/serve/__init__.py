@@ -1,7 +1,8 @@
-from repro.serve import batcher, broker, cache, engine, trajectory  # noqa: F401
+from repro.serve import batcher, broker, cache, engine, retry, trajectory  # noqa: F401
 from repro.serve.broker import (  # noqa: F401
-    AdmissionError, DeadlineExceededError, GroupSlice, QueryBroker,
-    QueryTicket)
+    AdmissionError, DeadlineExceededError, Degradation, GroupSlice,
+    QueryBroker, QueryTicket, TicketHealth)
 from repro.serve.cache import CacheStats, SliceCache  # noqa: F401
+from repro.serve.retry import RetryPolicy  # noqa: F401
 from repro.serve.trajectory import (  # noqa: F401
     QueryRequest, QueryResponse, TrajectoryQueryService)

@@ -53,19 +53,44 @@ tight-deadline ticket overtakes queued loose-deadline work instead of
 waiting out a FIFO line; tickets without a deadline run after all
 deadlined ones, FIFO among themselves.  Within a ticket, groups still
 execute in order (slice concatenation stays a canonical prefix).
+
+**Fault tolerance (PR 10).**  With ``retry=RetryPolicy(...)`` the broker
+re-issues failed dispatch groups with bounded attempts and exponential
+backoff (deterministic jitter — chaos runs replay bit-identically),
+speculatively duplicates straggling groups (first completion wins; group
+execution is stateless so duplicates are byte-identical), and walks a
+**graceful-degradation ladder** on repeated non-transient failure:
+compaction ``fused → fused_rowloop → dense``, then backend
+``pallas → jnp``; a failing planner steps pruning ``hierarchical →
+spatial → none`` at submit; a dropped pod re-routes the ticket's
+remaining groups through a single-device fallback dispatcher.  Every
+rung is slower but **byte-identical** — degraded, never wrong.
+``ticket.health`` (:class:`TicketHealth`) records attempts, backoff,
+straggler re-issues and every :class:`Degradation` step; permanent
+failures stay structured (:class:`~repro.core.errors.CapacityError`,
+:class:`AdmissionError`, :class:`DeadlineExceededError`) and
+:meth:`QueryTicket.partial_result` hands back the completed canonical
+prefix flagged ``degraded=True``.  Without a retry policy the broker
+behaves exactly as before: first failure errors the ticket.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from concurrent.futures import (FIRST_COMPLETED, ThreadPoolExecutor, wait)
+from concurrent.futures import TimeoutError as _FuturesTimeout
 from typing import Callable
 
 import numpy as np
 
-from repro.api import ExecutionPolicy, QueryResult, TrajectoryDB
+from repro import faults
+from repro.api import (ExecutionPolicy, QueryResult, TrajectoryDB,
+                       _validate_segments, _validate_threshold)
+from repro.core.errors import CapacityError, PodFailedError
 from repro.core.executor import ExecStats, PipelinedExecutor, ResultSet
 from repro.core.planner import QueryPlan, make_groups
 from repro.core.segments import SegmentArray
+from repro.serve.retry import RetryPolicy
 
 #: Ticket lifecycle states (in order).
 PENDING, PARTIAL, DONE, ERROR = "pending", "partial", "done", "error"
@@ -121,6 +146,58 @@ class GroupSlice:
     seconds: float               # wall time of this group's pump step
 
 
+#: Compaction/backend rungs of the degradation ladder, most- to
+#: least-performant.  A ``backend="pallas"`` ticket enters at its
+#: policy's compaction rung and steps down on repeated kernel failure;
+#: the batch plan is compaction/backend-independent, so every rung
+#: reuses it unchanged and produces byte-identical rows.
+DEGRADATION_LADDER = (("pallas", "fused"), ("pallas", "fused_rowloop"),
+                      ("pallas", "dense"), ("jnp", "dense"))
+
+
+@dataclasses.dataclass
+class Degradation:
+    """One graceful-degradation step taken while serving a ticket.
+
+    ``stage`` is ``"compaction"`` (kernel result-compaction rung),
+    ``"backend"`` (pallas → jnp), ``"pruning"`` (planner ladder at
+    submit) or ``"route"`` (dropped pod re-routed to the single-device
+    fallback).  ``before``/``after`` name the rungs; ``group`` is the
+    dispatch group whose failure triggered the step (``None`` for
+    submit-time planning steps)."""
+
+    stage: str
+    before: str
+    after: str
+    group: int | None = None
+    reason: str = ""
+
+
+@dataclasses.dataclass
+class TicketHealth:
+    """Per-ticket fault/retry accounting (PR 10), live on
+    ``ticket.health`` from submit on.
+
+    ``attempts`` maps group index → executions started (1 = clean);
+    ``retries`` counts re-issues after failure, ``backoff_seconds`` the
+    total backoff the retry policy imposed, ``stragglers_reissued`` the
+    speculative duplicates, ``cache_failures`` result-cache operations
+    that failed (degraded to miss/skip), and ``degradations`` every
+    ladder step taken.  ``degraded`` is the flag the final
+    ``QueryResult`` carries."""
+
+    attempts: dict = dataclasses.field(default_factory=dict)
+    retries: int = 0
+    backoff_seconds: float = 0.0
+    stragglers_reissued: int = 0
+    cache_failures: int = 0
+    degradations: list = dataclasses.field(default_factory=list)
+
+    @property
+    def degraded(self) -> bool:
+        return bool(self.degradations)
+
+
 class QueryTicket:
     """Future-like handle for one submitted query set.
 
@@ -164,6 +241,16 @@ class QueryTicket:
         self._next_group = 0
         self._error: BaseException | None = None
         self._final: QueryResult | None = None
+        #: Retry/degradation accounting (PR 10).
+        self.health = TicketHealth()
+        self._not_before = 0.0         # pump gate while backing off
+        self._consec_failures = 0      # of the *current* group/rung
+        self._epoch = 0                # db.data_epoch captured at submit
+        self._pol: ExecutionPolicy | None = None
+        self._exec_qs: SegmentArray | None = None
+        self._ladder: list = []        # remaining degradation rungs
+        self._rung: tuple = (backend, "")
+        self._rerouted = False         # pod-dropout fallback taken
 
     # -- state ----------------------------------------------------------
     @property
@@ -227,6 +314,22 @@ class QueryTicket:
             raise self._error
         return self._final
 
+    def partial_result(self) -> QueryResult:
+        """The canonical result of the groups completed so far — the
+        graceful answer for an errored (or still-running) ticket.
+        Identical to :meth:`result` once done; otherwise the completed
+        canonical prefix with ``degraded=True`` (an errored ticket keeps
+        its delivered parts, so callers get every finished slice plus
+        the structured error from :meth:`exception`)."""
+        if self._final is not None:
+            return self._final
+        rs = (ResultSet.concatenate(self._parts) if self._parts
+              else ResultSet.empty())
+        res = QueryResult.from_result_set(rs, order=self._order, d=self.d,
+                                          backend=self.backend)
+        res.degraded = True
+        return res
+
 
 class QueryBroker:
     """Ticketed asynchronous serving front door over one ``TrajectoryDB``.
@@ -254,6 +357,10 @@ class QueryBroker:
     * ``group_size`` — dispatch-group granularity for every ticket
       (``None`` → the planner's §8-model-derived sizing; per-submit
       override available).
+    * ``retry`` — a :class:`~repro.serve.retry.RetryPolicy` enabling
+      bounded re-issue of failed groups, speculative straggler
+      duplication and the degradation ladder (module docstring);
+      ``None`` (default) keeps the fail-fast PR 8 behavior.
     """
 
     def __init__(self, db: TrajectoryDB, *, backend: str = "jnp",
@@ -262,10 +369,12 @@ class QueryBroker:
                  admission_slack: float = 4.0,
                  max_inflight_interactions: int | None = None,
                  group_size: int | None = None,
-                 cache=None):
+                 cache=None, retry: RetryPolicy | None = None):
         self.db = db
         self.backend = backend
         self.cache = cache            # SliceCache | None (PR 8 result cache)
+        self.retry = retry            # RetryPolicy | None (PR 10)
+        self._straggler_pool: ThreadPoolExecutor | None = None
         self.policy = policy or db.policy
         if predict_seconds is None and getattr(db, "response_model",
                                                None) is not None:
@@ -284,6 +393,7 @@ class QueryBroker:
         self.completed = 0
         self.errored = 0
         self.rejected = 0
+        self.cache_failures = 0       # cache ops degraded to miss/skip
 
     # -- introspection ----------------------------------------------------
     @property
@@ -318,7 +428,13 @@ class QueryBroker:
         pol = policy or self.policy
         uid = self._next_uid
         self._next_uid += 1
-        d = float(d)
+        d = _validate_threshold(d)
+        _validate_segments(queries, "queries")
+        # Capture the data version *now*: the ticket's cache lookup and
+        # its eventual insert both key on the submit-time epoch, so a
+        # mutation that bumps the epoch mid-flight makes the entry born
+        # stale (lazily dropped) instead of stamping stale rows fresh.
+        epoch = getattr(self.db, "data_epoch", 0)
 
         if len(queries) == 0:
             ticket = QueryTicket(
@@ -337,8 +453,16 @@ class QueryBroker:
         # slices()/on_slice contract holds for monitoring callers.
         if self.cache is not None:
             t0 = time.perf_counter()
-            hit = self.cache.lookup(queries, d,
-                                    getattr(self.db, "data_epoch", 0))
+            try:
+                if faults.armed():
+                    faults.inject("cache.lookup", uid=uid)
+                hit = self.cache.lookup(queries, d, epoch)
+            except Exception:
+                # A cache outage degrades to a miss: the fresh
+                # computation below is the canonical path, not a
+                # degraded one.
+                self.cache_failures += 1
+                hit = None
             if hit is not None:
                 arrays, _lens = hit
                 res = QueryResult(
@@ -368,8 +492,30 @@ class QueryBroker:
 
         be = self.db.backend(backend, pol)
         qs, order = TrajectoryDB._sorted(queries)
+        plan_degradations: list[Degradation] = []
         if be.needs_plan:
-            plan = self.db._make_plan(qs, pol, backend, d=d)
+            # Planning ladder (PR 10): a failing planner steps pruning
+            # hierarchical → spatial → none before giving up — a plan
+            # with less pruning does more work but yields the same
+            # canonical rows.  The backend is re-resolved per rung so
+            # the engine's pruning matches the plan it executes.
+            while True:
+                try:
+                    if faults.armed():
+                        faults.inject("broker.plan", uid=uid,
+                                      backend=backend, pruning=pol.pruning)
+                    plan = self.db._make_plan(qs, pol, backend, d=d)
+                    break
+                except Exception as e:
+                    nxt = {"hierarchical": "spatial",
+                           "spatial": "none"}.get(pol.pruning)
+                    if self.retry is None or nxt is None:
+                        raise
+                    plan_degradations.append(Degradation(
+                        stage="pruning", before=pol.pruning, after=nxt,
+                        group=None, reason=repr(e)))
+                    pol = pol.with_(pruning=nxt)
+                    be = self.db.backend(backend, pol)
             interactions = plan.total_interactions
             gs = group_size if group_size is not None else self.group_size
             # Group along the plan's split runs: sibling batches of one
@@ -421,6 +567,18 @@ class QueryBroker:
             predicted_seconds=predicted, interactions=interactions,
             order=order, plan=plan, groups=groups, group_ints=group_ints,
             group_pred=group_pred, run_group=run_group, on_slice=on_slice)
+        # Retry/degradation state (PR 10): the resolved policy and sorted
+        # queries let failure handling rebuild runners on a lower rung.
+        ticket._pol = pol
+        ticket._exec_qs = qs
+        ticket._epoch = epoch
+        ticket._rung = (backend, pol.compaction)
+        if self.retry is not None and backend == "pallas":
+            rungs = list(DEGRADATION_LADDER)
+            ticket._ladder = (rungs[rungs.index(ticket._rung) + 1:]
+                              if ticket._rung in rungs
+                              else [("jnp", "dense")])
+        ticket.health.degradations.extend(plan_degradations)
         if backend == "shard":
             ticket.routing = run_group.dispatcher.router.stats
         self._inflight_interactions += interactions
@@ -439,16 +597,17 @@ class QueryBroker:
                 rs, stats = _be.run(_qs, _d, None)
                 return rs, stats
             return run_whole
+        mcr = getattr(be.engine, "max_capacity_retries", 3)
         if backend == "shard":
             from repro.core.distributed import PodRouter
             router = PodRouter(be.engine)
             dispatcher = router.dispatcher(qs.packed(), d)
         else:
             dispatcher = be.engine.dispatcher(qs.packed(), d)
-        return _GroupRunner(dispatcher, plan)
+        return _GroupRunner(dispatcher, plan, max_capacity_retries=mcr)
 
     # -- the pump ---------------------------------------------------------
-    def _select(self) -> QueryTicket:
+    def _select(self, candidates) -> QueryTicket:
         """Earliest-deadline-first ticket selection: nearest absolute
         deadline wins; tickets without a deadline sort after every
         deadlined one, FIFO (uid order) among ties."""
@@ -456,16 +615,24 @@ class QueryBroker:
             dl = (t.submitted_at + t.deadline if t.deadline is not None
                   else float("inf"))
             return (dl, t.uid)
-        return min(self._queue, key=key)
+        return min(candidates, key=key)
 
     def step(self) -> bool:
         """Execute the next pending dispatch group (one pipelined two-phase
         dispatch, ≤ 2 host syncs) of the earliest-deadline pending ticket
         and deliver its slice.  Returns ``False`` when nothing is pending —
-        the serving loop's idle signal."""
+        the serving loop's idle signal.  When every pending ticket is
+        waiting out a retry backoff the step sleeps briefly (≤ 50 ms) and
+        returns ``True``: the queue is not idle, just backing off."""
         if not self._queue:
             return False
-        ticket = self._select()
+        now = time.perf_counter()
+        ready = [t for t in self._queue if t._not_before <= now]
+        if not ready:
+            wake = min(t._not_before for t in self._queue)
+            time.sleep(min(max(wake - now, 0.0), 0.05))
+            return True
+        ticket = self._select(ready)
         if (ticket.deadline is not None
                 and time.perf_counter() - ticket.submitted_at
                 > ticket.deadline):
@@ -474,20 +641,52 @@ class QueryBroker:
                 f"with {ticket.groups_completed}/{ticket.num_groups} "
                 f"groups delivered"))
             return True
-        g = ticket._groups[ticket._next_group]
+        gi = ticket._next_group
+        g = ticket._groups[gi]
+        ticket.health.attempts[gi] = ticket.health.attempts.get(gi, 0) + 1
         t0 = time.perf_counter()
         try:
-            # Sync audit: _run_group is the executor's pipelined dispatch
-            # (its ≤ 2 block_until_ready calls are the *only* host syncs);
-            # rs_part comes back as a marshalled numpy ResultSet, so the
-            # delivery path below never touches a device buffer.
-            rs_part, stats = ticket._run_group(g)
+            rs_part, stats = self._execute_group(ticket, g)
         except Exception as e:
-            self._fail(ticket, e)
+            self._handle_failure(ticket, e)
             return True
+        ticket._consec_failures = 0
         self._deliver(ticket, g, rs_part, stats,
                       time.perf_counter() - t0)
         return True
+
+    def _execute_group(self, ticket: QueryTicket, group):
+        """Run one dispatch group, with speculative straggler re-issue
+        when the retry policy enables it.
+
+        Sync audit: ``_run_group`` is the executor's pipelined dispatch
+        (its ≤ 2 ``block_until_ready`` calls are the *only* host syncs);
+        results come back as marshalled numpy ``ResultSet``s, so the
+        delivery path never touches a device buffer."""
+        run = ticket._run_group
+        timeout = (self.retry.straggler_timeout(
+            ticket._group_pred[ticket._next_group])
+            if self.retry is not None else None)
+        if timeout is None:
+            return run(group)
+        # Duplicate the dispatch once the predicted time (× slack) is
+        # exceeded; first completion wins.  Group execution is stateless
+        # and deterministic, so the duplicate is byte-identical and the
+        # loser is simply discarded.
+        pool = self._straggler_workers()
+        fut = pool.submit(run, group)
+        try:
+            return fut.result(timeout=timeout)   # lint: sync-point
+        except _FuturesTimeout:
+            ticket.health.stragglers_reissued += 1
+            fut2 = pool.submit(run, group)
+            done, _ = wait({fut, fut2}, return_when=FIRST_COMPLETED)
+            return next(iter(done)).result()     # lint: sync-point
+
+    def _straggler_workers(self) -> ThreadPoolExecutor:
+        if self._straggler_pool is None:
+            self._straggler_pool = ThreadPoolExecutor(max_workers=2)
+        return self._straggler_pool
 
     def run_until_idle(self) -> int:
         """Pump until no work is pending; returns pump steps executed."""
@@ -508,6 +707,102 @@ class QueryBroker:
         self._queue.remove(ticket)
         self.errored += 1
 
+    def _handle_failure(self, ticket: QueryTicket,
+                        error: BaseException) -> None:
+        """Route one group failure (PR 10).
+
+        Permanent/structured errors (and any failure without a retry
+        policy) fail the ticket; a dropped pod re-routes the remaining
+        groups through the single-device fallback and retries
+        immediately; everything else re-issues with backoff, stepping
+        the degradation ladder after ``degrade_after`` consecutive
+        non-transient failures of the same group.  The ticket's
+        interaction budget stays held across retries — the work is still
+        pending — and is released exactly once, on delivery or
+        :meth:`_fail`."""
+        from repro.faults import InjectedResourceExhausted
+        gi = ticket._next_group
+        health = ticket.health
+        retry = self.retry
+        if retry is None or isinstance(
+                error, (CapacityError, AdmissionError,
+                        DeadlineExceededError)):
+            # Structured/permanent: re-running cannot change the outcome
+            # (CapacityError already exhausted the executor's bounded
+            # capacity-retry loop, exact count in hand).
+            self._fail(ticket, error)
+            return
+        if isinstance(error, PodFailedError):
+            if ticket._rerouted or ticket.backend != "shard":
+                self._fail(ticket, error)
+                return
+            try:
+                self._reroute_pod(ticket, error)
+            except Exception:
+                self._fail(ticket, error)
+                return
+            health.retries += 1
+            return                 # re-issue immediately on the new route
+        attempts = health.attempts.get(gi, 0)
+        if attempts >= retry.max_attempts:
+            self._fail(ticket, error)
+            return
+        transient = (isinstance(error, InjectedResourceExhausted)
+                     or "RESOURCE_EXHAUSTED" in str(error))
+        ticket._consec_failures += 1
+        if (not transient
+                and ticket._consec_failures >= retry.degrade_after
+                and self._degrade(ticket, gi, error)):
+            ticket._consec_failures = 0
+        back = retry.backoff_seconds(ticket.uid, gi, attempts)
+        if ticket.deadline is not None:
+            remaining = (ticket.submitted_at + ticket.deadline
+                         - time.perf_counter())
+            back = max(0.0, min(back, remaining))
+        ticket._not_before = time.perf_counter() + back
+        health.backoff_seconds += back
+        health.retries += 1
+
+    def _degrade(self, ticket: QueryTicket, gi: int,
+                 error: BaseException) -> bool:
+        """Step the ticket one rung down the compaction/backend ladder.
+        The plan is reused unchanged (batches and capacities are
+        compaction- and backend-independent), so the degraded rung
+        produces byte-identical rows — slower, never wrong."""
+        if not ticket._ladder or ticket.plan is None:
+            return False
+        name, compaction = ticket._ladder.pop(0)
+        prev = ticket._rung
+        pol = ticket._pol.with_(compaction=compaction)
+        be = self.db.backend(name, pol)
+        ticket._run_group = self._make_runner(be, name, ticket._exec_qs,
+                                              ticket.d, ticket.plan)
+        ticket._pol = pol
+        ticket._rung = (name, compaction)
+        ticket.health.degradations.append(Degradation(
+            stage="compaction" if name == prev[0] else "backend",
+            before=f"{prev[0]}/{prev[1]}", after=f"{name}/{compaction}",
+            group=gi, reason=repr(error)))
+        return True
+
+    def _reroute_pod(self, ticket: QueryTicket,
+                     error: BaseException) -> None:
+        """A pod dropped out mid-ticket: re-route the remaining groups
+        through the single-device fallback dispatcher over the sharded
+        engine's packed copy — no mesh parallelism, but byte-identical
+        rows (both paths canonicalize the same pairs)."""
+        from repro.core.distributed import PodFallbackDispatcher
+        se = self.db.backend("shard", ticket._pol).engine
+        dispatcher = PodFallbackDispatcher(se, ticket._exec_qs.packed(),
+                                           ticket.d)
+        ticket._run_group = _GroupRunner(
+            dispatcher, ticket.plan,
+            max_capacity_retries=getattr(se, "max_capacity_retries", 3))
+        ticket._rerouted = True
+        ticket.health.degradations.append(Degradation(
+            stage="route", before="shard", after="single-device",
+            group=ticket._next_group, reason=repr(error)))
+
     def _deliver(self, ticket: QueryTicket, group, rs_part,
                  stats: ExecStats | None, seconds: float) -> None:
         sliced = QueryResult.from_result_set(
@@ -525,6 +820,10 @@ class QueryBroker:
         ticket._next_group += 1
         self._inflight_interactions -= ticket._group_ints[gi]
         self._inflight_predicted -= ticket._group_pred[gi]
+        if stats is not None:
+            # Mirror the ladder steps taken so far into the slice's
+            # ExecStats — monitoring consumers read stats, not tickets.
+            stats.degradations = list(ticket.health.degradations)
         if ticket._next_group == ticket.num_groups:
             # Finalize through the exact transform db.query uses
             # (ResultSet.concatenate + from_result_set) so the canonical
@@ -532,12 +831,22 @@ class QueryBroker:
             ticket._final = QueryResult.from_result_set(
                 ResultSet.concatenate(ticket._parts), order=ticket._order,
                 d=ticket.d, backend=ticket.backend)
+            ticket._final.degraded = ticket.health.degraded
             if self.cache is not None:
                 # Memoize the finished canonical result; repeats of this
                 # query set (or byte-exact subsets) now hit in submit().
-                self.cache.insert(ticket.queries, ticket.d,
-                                  getattr(self.db, "data_epoch", 0),
-                                  ticket._final)
+                # Keyed on the *submit-time* epoch (see submit()), so a
+                # mid-flight data mutation leaves this entry stale.
+                try:
+                    if faults.armed():
+                        faults.inject("cache.insert", uid=ticket.uid)
+                    self.cache.insert(ticket.queries, ticket.d,
+                                      ticket._epoch, ticket._final)
+                except Exception:
+                    # A cache outage degrades to not memoizing; the
+                    # result itself is untouched.
+                    self.cache_failures += 1
+                    ticket.health.cache_failures += 1
             # Completed tickets may be retained by callers (audit logs,
             # response caches): drop everything execution-only — the raw
             # parts, the runner (whose dispatcher holds packed query
@@ -557,16 +866,20 @@ class _GroupRunner:
     single-group sub-plan through the pipelined executor (≤ 2 host syncs
     per call)."""
 
-    def __init__(self, dispatcher, plan: QueryPlan):
+    def __init__(self, dispatcher, plan: QueryPlan,
+                 max_capacity_retries: int = 3):
         self.dispatcher = dispatcher
         self.plan = plan
+        self.max_capacity_retries = max_capacity_retries
 
     def __call__(self, group: list[int]):
-        executor = PipelinedExecutor(self.dispatcher)
+        executor = PipelinedExecutor(
+            self.dispatcher, max_capacity_retries=self.max_capacity_retries)
         return executor.run(self.plan.subplan(group))
 
 
 __all__ = [
-    "AdmissionError", "DeadlineExceededError", "GroupSlice", "QueryBroker",
-    "QueryTicket", "DONE", "ERROR", "PARTIAL", "PENDING",
+    "AdmissionError", "DeadlineExceededError", "Degradation",
+    "DEGRADATION_LADDER", "GroupSlice", "QueryBroker", "QueryTicket",
+    "TicketHealth", "DONE", "ERROR", "PARTIAL", "PENDING",
 ]

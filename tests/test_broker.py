@@ -430,3 +430,80 @@ class TestDeriveGroupSize:
         gs = derive_group_size(big)
         assert gs is not None and gs <= 4
         assert derive_group_size(big[:1]) is None          # < 2 batches
+
+
+# ----------------------------------------------------------------------
+# Error paths under fault injection (PR 10 satellite).
+# ----------------------------------------------------------------------
+def test_epoch_bump_racing_inflight_ticket(world):
+    """A data-epoch bump between submit() and finalize must not let the
+    in-flight ticket's result be cached as fresh: the insert is keyed to
+    the *submit-time* epoch, so the entry is born stale and the next
+    submit recomputes instead of serving a pre-mutation result."""
+    from repro.serve.cache import SliceCache
+    db, queries, d = world
+    cache = SliceCache()
+    broker = db.broker(backend="jnp", cache=cache)
+    try:
+        ticket = broker.submit(queries, d, group_size=2)
+        assert broker.step()               # partially executed...
+        db.data_epoch += 1                 # ...then the database mutates
+        res = ticket.result()
+        assert cache.stats.insertions == 1
+        # the racing entry never serves a post-mutation submit
+        fresh = broker.submit(queries, d)
+        assert not fresh.done()            # no cache hit at submit
+        _assert_identical(fresh.result(), res)
+        assert cache.stats.hits == 0 and cache.stats.misses == 2
+        # only the fresh-epoch entry survives in the cache
+        assert len(cache) == 1
+        hit = broker.submit(queries, d)
+        assert hit.done() and cache.stats.hits == 1
+    finally:
+        db.data_epoch -= 1
+
+
+def test_retry_exhaustion_releases_backpressure(world):
+    """When a retry policy exhausts max_attempts the ticket errors with
+    the underlying structured error and the admission budget drains to
+    zero — an errored ticket never wedges the broker."""
+    from repro import faults
+    from repro.serve.retry import RetryPolicy
+    db, queries, d = world
+    broker = db.broker(
+        backend="jnp",
+        retry=RetryPolicy(max_attempts=3, base_backoff=0.001,
+                          max_backoff=0.004),
+        max_inflight_interactions=10**9)
+    spec = faults.FaultSpec("engine.dispatch", "error", times=None)
+    with faults.active(faults.FaultPlan([spec])):
+        doomed = broker.submit(queries, d, group_size=2)
+        with pytest.raises(faults.InjectedKernelError):
+            doomed.result()
+    assert doomed.state == "error"
+    assert doomed.health.attempts[0] == 3
+    assert doomed.health.retries == 2
+    assert broker.inflight_interactions == 0
+    # the freed budget admits and completes new work
+    ok = broker.submit(queries, d, group_size=2)
+    base = db.query(queries, d, backend="jnp")
+    _assert_identical(ok.result(), base)
+
+
+def test_stream_routing_stats_cover_fully_pruned_groups(world):
+    """query_stream + shard: a workload pruned to nothing still yields a
+    routing ledger covering every planned batch (explicit zero-pod rows
+    via the dispatcher's record_empty hook)."""
+    db, queries, d = world
+    _, t_max = db.segments.temporal_extent
+    far = SegmentArray(queries.xs, queries.ys, queries.zs,
+                       queries.xe, queries.ye, queries.ze,
+                       queries.ts + (t_max + 100.0),
+                       queries.te + (t_max + 100.0),
+                       queries.seg_id, queries.traj_id)
+    res, stats = db.query_stream(far, d, backend="shard")
+    assert len(res) == 0
+    rt = stats.routing
+    assert rt is not None and rt.batches > 0
+    assert rt.pods_per_batch == [0] * rt.batches
+    assert rt.hit_balance == 0.0

@@ -792,3 +792,89 @@ class TestSentinel:
             pass
         after = (jax.block_until_ready, cls.__array__, cls.item)
         assert before == after
+
+
+# ----------------------------------------------------------------------
+# FAULT001: fault-injection hooks must sit behind `if faults.armed():`.
+# ----------------------------------------------------------------------
+class TestFault001:
+    PATH = "src/repro/core/engine.py"
+
+    def test_unguarded_qualified_call_flagged(self):
+        src = """\
+            from repro import faults
+
+            def dispatch(batch):
+                faults.inject("engine.dispatch", batch=batch.index)
+                return run(batch)
+            """
+        assert rules_of(self.PATH, src, "FAULT001") == {"FAULT001"}
+
+    def test_guarded_call_clean(self):
+        src = """\
+            from repro import faults
+
+            def dispatch(batch):
+                if faults.armed():
+                    faults.inject("engine.dispatch", batch=batch.index)
+                return run(batch)
+            """
+        assert run(self.PATH, src, "FAULT001") == []
+
+    def test_ifexp_guard_accepted(self):
+        src = """\
+            from repro import faults
+
+            def count(n):
+                return faults.corrupt("engine.count", n) if faults.armed() else n
+            """
+        assert run(self.PATH, src, "FAULT001") == []
+
+    def test_bare_imported_hook_flagged(self):
+        src = """\
+            from repro.faults import inject as _fi
+
+            def pump():
+                _fi("broker.plan", uid=0)
+            """
+        assert rules_of(self.PATH, src, "FAULT001") == {"FAULT001"}
+
+    def test_unrelated_inject_name_ignored(self):
+        src = """\
+            def pump(container):
+                container.inject("dependency")
+                corrupt = lambda x: x
+                corrupt(3)
+            """
+        assert run(self.PATH, src, "FAULT001") == []
+
+    def test_suppression_honored(self):
+        src = """\
+            from repro import faults
+
+            def dispatch(batch):
+                faults.inject("engine.dispatch")  # lint: ignore[FAULT001]
+            """
+        assert run(self.PATH, src, "FAULT001") == []
+
+    def test_faults_package_exempt(self):
+        src = """\
+            def inject(site, ctx):
+                _PLAN.inject(site, ctx)
+            """
+        assert run("src/repro/faults/__init__.py", src, "FAULT001") == []
+
+    def test_wrong_guard_still_flagged(self):
+        src = """\
+            from repro import faults
+
+            def dispatch(batch, chaos):
+                if chaos:
+                    faults.inject("engine.dispatch")
+                return run(batch)
+            """
+        assert rules_of(self.PATH, src, "FAULT001") == {"FAULT001"}
+
+    def test_repo_sources_fault_clean(self):
+        vs = lint_paths(["src"], select=("FAULT001",))
+        assert vs == []
